@@ -1,0 +1,69 @@
+"""Microbenchmark: the match/count hot loop - jnp reference vs the Pallas
+kernel (interpret mode; on CPU the *jnp* timing is the meaningful one,
+the kernel timing just proves the path runs)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.match_count.ops import match_signatures_kernel
+from repro.mining.engine import match_signatures
+
+
+def _inputs(E, G, T, NI=16, NV=12, P=64, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = np.zeros((G, T, 6), np.int32)
+    tokens[..., 0] = rng.integers(0, 6, (G, T))
+    tokens[..., 1] = rng.integers(0, 16, (G, T))
+    tokens[..., 2] = rng.integers(0, 16, (G, T))
+    tokens[..., 3] = rng.integers(0, 5, (G, T))
+    tokens[..., 4] = np.sort(rng.integers(0, 8, (G, T)), 1)
+    tokens[..., 5] = 1
+    gid = rng.integers(0, G, E).astype(np.int32)
+    phi = np.full((E, NI), 0x3FFFFFF, np.int32)
+    phi[:, 0] = rng.integers(0, 4, E)
+    psi = np.full((E, NV), -2, np.int32)
+    psi[:, 0] = rng.integers(0, 16, E)
+    valid = np.ones(E, np.int32)
+    existing = np.full((P, 5), -9, np.int32)
+    return [jnp.asarray(x) for x in
+            (tokens, gid, phi, psi, valid, existing)]
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def main(csv=print):
+    scal = [jnp.int32(1), jnp.int32(1), jnp.int32(2)]
+    for E, G, T in [(1024, 256, 128), (4096, 1024, 128), (8192, 1024, 256)]:
+        args = _inputs(E, G, T)
+        t_ref = _time(lambda *a: match_signatures(*a, *scal), *args)
+        pairs = E * T
+        csv(
+            f"kernel/match_jnp_E{E}_T{T},{t_ref*1e6:.0f},"
+            f"gpairs_per_s={pairs/t_ref/1e9:.3f}"
+        )
+        if E <= 4096:
+            t_k = _time(
+                lambda *a: match_signatures_kernel(*a, *scal,
+                                                   interpret=True),
+                *args,
+            )
+            csv(
+                f"kernel/match_pallas_interp_E{E}_T{T},{t_k*1e6:.0f},"
+                f"gpairs_per_s={pairs/t_k/1e9:.3f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

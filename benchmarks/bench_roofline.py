@@ -1,0 +1,57 @@
+"""Render the roofline table from the dry-run artifacts (results/dryrun).
+
+One CSV row per (arch x shape x mesh) cell: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        d = json.load(open(path))
+        if not d.get("ok"):
+            out.append({"name": f"roofline/{d['arch']}/{d['shape']}/"
+                                f"{d.get('mesh','?')}",
+                        "error": d.get("error", "?")[:60]})
+            continue
+        r = d["roofline"]
+        out.append({
+            "name": f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}",
+            "t_compute": r["t_compute"],
+            "t_memory": r["t_memory"],
+            "t_collective": r["t_collective"],
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "fraction": r["roofline_fraction"],
+        })
+    return out
+
+
+def main(csv=print):
+    n = 0
+    for r in rows():
+        if "error" in r:
+            csv(f"{r['name']},nan,ERROR:{r['error']}")
+            continue
+        csv(
+            f"{r['name']},{r['t_compute']*1e6:.1f},"
+            f"t_mem_us={r['t_memory']*1e6:.1f};"
+            f"t_coll_us={r['t_collective']*1e6:.1f};"
+            f"bottleneck={r['bottleneck']};"
+            f"useful={r['useful_ratio']:.4f};"
+            f"frac={r['fraction']:.5f}"
+        )
+        n += 1
+    if n == 0:
+        csv("roofline/none,0,run `python -m repro.launch.dryrun` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Render EXPERIMENTS.md from results/dryrun* artifacts + the recorded
+hillclimb log.  Re-run after refreshing the dry-run grid."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(dirname):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(ROOT, dirname, "*.json"))):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"], d.get("mesh", "?"))] = d
+    return out
+
+
+def fmt_table(cells, mesh):
+    lines = [
+        "| arch | shape | GiB/dev | t_compute s | t_memory s | "
+        "t_collective s | bottleneck | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), d in sorted(cells.items()):
+        if m != mesh or not d.get("ok"):
+            continue
+        r = d["roofline"]
+        mem = d["memory"].get("per_device_total_bytes", 0) / 2**30
+        lines.append(
+            f"| {a} | {s} | {mem:.2f} | {r['t_compute']:.4g} | "
+            f"{r['t_memory']:.4g} | {r['t_collective']:.4g} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.5f} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_summary(cells):
+    n_ok = sum(1 for d in cells.values() if d.get("ok"))
+    rows = [
+        "| arch | shape | mesh | compile s | bytes/dev | status |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), d in sorted(cells.items()):
+        mem = d.get("memory", {}).get("per_device_total_bytes", 0)
+        rows.append(
+            f"| {a} | {s} | {m} | {d.get('t_compile_s','-')} | "
+            f"{mem/2**30:.2f} GiB | {'OK' if d.get('ok') else 'FAIL'} |"
+        )
+    return n_ok, len(cells), "\n".join(rows)
+
+
+def cmp_rows(base, new, keys):
+    lines = [
+        "| cell | metric | baseline | optimized | change |",
+        "|---|---|---|---|---|",
+    ]
+    for key, metrics in keys:
+        b, n = base.get(key), new.get(key)
+        if not (b and n and b.get("ok") and n.get("ok")):
+            continue
+        for mt, label, scale in metrics:
+            bv = b["roofline"][mt] * scale
+            nv = n["roofline"][mt] * scale
+            chg = (f"{bv/nv:.1f}x lower" if nv < bv and nv > 0 else
+                   (f"{nv/bv:.1f}x higher" if bv > 0 else "-"))
+            lines.append(
+                f"| {key[0]} {key[1]} ({key[2]}) | {label} | "
+                f"{bv:.4g} | {nv:.4g} | {chg} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    base = load("results/dryrun_baseline")
+    new = load("results/dryrun")
+    n_ok, n_all, table = dryrun_summary(new)
+
+    hill = cmp_rows(base, new, [
+        (("glm4-9b", "train_4k", "16x16"),
+         [("t_compute", "t_compute [s]", 1),
+          ("t_memory", "t_memory [s]", 1),
+          ("t_collective", "t_collective [s]", 1),
+          ("roofline_fraction", "roofline fraction", 1),
+          ("useful_flops_ratio", "useful-FLOPs ratio", 1)]),
+        (("bert4rec", "serve_bulk", "16x16"),
+         [("t_compute", "t_compute [s]", 1),
+          ("t_memory", "t_memory [s]", 1),
+          ("t_collective", "t_collective [s]", 1),
+          ("useful_flops_ratio", "useful-FLOPs ratio", 1)]),
+        (("gtrace-mining", "scan_xl", "16x16"),
+         [("t_memory", "t_memory [ms]", 1e3),
+          ("t_collective", "t_collective [ms]", 1e3),
+          ("useful_flops_ratio", "useful-FLOPs ratio", 1)]),
+    ])
+
+    gen_rows = ["| cell | frac before | frac after | gain | t_memory "
+                "before -> after [s] |", "|---|---|---|---|---|"]
+    for a in ("glm4-9b", "gemma-7b", "smollm-135m",
+              "llama4-maverick-400b-a17b", "olmoe-1b-7b"):
+        for s in ("train_4k", "prefill_32k"):
+            key = (a, s, "16x16")
+            b, n = base.get(key), new.get(key)
+            if not (b and n and b.get("ok") and n.get("ok")):
+                continue
+            rb, rn = b["roofline"], n["roofline"]
+            gain = (rn["roofline_fraction"]
+                    / max(rb["roofline_fraction"], 1e-12))
+            gen_rows.append(
+                f"| {a} {s} | {rb['roofline_fraction']:.5f} | "
+                f"{rn['roofline_fraction']:.5f} | {gain:.1f}x | "
+                f"{rb['t_memory']:.1f} -> {rn['t_memory']:.1f} |"
+            )
+
+    tmpl = open(os.path.join(ROOT, "scripts", "experiments_body.md")).read()
+    out = tmpl.format(
+        n_ok=n_ok, n_all=n_all,
+        dryrun_table=table,
+        roofline_single=fmt_table(new, "16x16"),
+        roofline_single_baseline=fmt_table(base, "16x16"),
+        hillclimb_table=hill,
+        generalization_table="\n".join(gen_rows),
+    )
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(out)
+    print(f"EXPERIMENTS.md written ({n_ok}/{n_all} cells ok)")
+
+
+if __name__ == "__main__":
+    main()

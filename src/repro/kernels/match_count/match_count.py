@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the embedding-join match (the mining hot loop).
+
+The computation is elementwise int32 predicate work over an
+(embeddings x tokens) grid with three small per-row tables (phi, psi) and
+two tiny replicated tables (existing-TR list, scalars).  It is memory
+bound: ~arithmetic-intensity (NV+NI+P) int ops per 4-byte signature
+written, with the [bE,bT,NV] broadcast intermediates living entirely in
+VMEM/VREGs instead of HBM (the jnp reference materializes them to HBM on
+the XLA side unless fused).
+
+Tiling: grid (E/bE, T/bT); per grid step the kernel touches
+  tok block   [bE, bT, 6]  int32   (24*bE*bT bytes)
+  phi/psi     [bE, NI], [bE, NV]
+  out         [bE, bT]     int32
+Defaults bE=64, bT=128 keep the working set < 1 MB of VMEM and the lane
+dimension a multiple of 128.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import match_core
+
+
+def _kernel(scal_ref, tok_ref, phi_ref, psi_ref, valid_ref, ex_ref,
+            out_ref):
+    nv = scal_ref[0, 0]
+    n_pat = scal_ref[0, 1]
+    mode = scal_ref[0, 2]
+    out_ref[...] = match_core(
+        tok_ref[...],
+        phi_ref[...],
+        psi_ref[...],
+        valid_ref[...][:, 0],
+        ex_ref[...],
+        nv,
+        n_pat,
+        mode,
+    )
+
+
+def match_signatures_blocked(
+    tok_e,       # [E, T, 6] int32 (pre-gathered per embedding)
+    phi,         # [E, NI] int32
+    psi,         # [E, NV] int32
+    emb_valid,   # [E] int32
+    existing,    # [P, 5] int32
+    nv,          # int32 scalar
+    n_pat,       # int32 scalar
+    mode,        # int32 scalar
+    *,
+    block_e: int = 64,
+    block_t: int = 128,
+    interpret: bool = True,
+):
+    E, T, _ = tok_e.shape
+    NI, NV, P = phi.shape[1], psi.shape[1], existing.shape[0]
+    Ep = -(-E // block_e) * block_e
+    Tp = -(-T // block_t) * block_t
+    if Ep != E or Tp != T:
+        # zero padding gives tok valid=0 / emb_valid=0 -> INVALID_SIG
+        tok_e = jnp.pad(tok_e, ((0, Ep - E), (0, Tp - T), (0, 0)))
+        phi = jnp.pad(phi, ((0, Ep - E), (0, 0)))
+        psi = jnp.pad(psi, ((0, Ep - E), (0, 0)))
+        emb_valid = jnp.pad(emb_valid, (0, Ep - E))
+    scal = jnp.stack([nv, n_pat, mode, jnp.int32(0)]).reshape(1, 4)
+    grid = (Ep // block_e, Tp // block_t)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_e, block_t, 6), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_e, NI), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_e, NV), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((P, 5), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_e, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Ep, Tp), jnp.int32),
+        interpret=interpret,
+    )(
+        scal.astype(jnp.int32),
+        tok_e.astype(jnp.int32),
+        phi.astype(jnp.int32),
+        psi.astype(jnp.int32),
+        emb_valid.astype(jnp.int32).reshape(-1, 1),
+        existing.astype(jnp.int32),
+    )
+    return out[:E, :T]

@@ -1,0 +1,39 @@
+"""Jitted public wrapper for the match_count kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .match_count import match_signatures_blocked
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_e", "block_t", "interpret")
+)
+def match_signatures_kernel(
+    tokens,      # [G, T, 6] int32
+    gid,         # [E] int32
+    phi,         # [E, NI] int32
+    psi,         # [E, NV] int32
+    emb_valid,   # [E] int32
+    existing,    # [P, 5] int32
+    nv,          # int32 scalar
+    n_pat,       # int32 scalar
+    mode,        # int32 scalar
+    *,
+    block_e: int = 64,
+    block_t: int = 128,
+    interpret: bool = True,
+):
+    """Drop-in replacement for repro.mining.engine.match_signatures that
+    runs the match predicate as a Pallas kernel (interpret=True executes
+    the kernel body on CPU for validation; on TPU pass interpret=False)."""
+    tok_e = tokens[gid]
+    return match_signatures_blocked(
+        tok_e, phi, psi, emb_valid, existing,
+        jnp.asarray(nv, jnp.int32), jnp.asarray(n_pat, jnp.int32),
+        jnp.asarray(mode, jnp.int32),
+        block_e=block_e, block_t=block_t, interpret=interpret,
+    )

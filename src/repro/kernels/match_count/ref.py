@@ -1,0 +1,117 @@
+"""Pure-jnp oracle for the match_count Pallas kernel.
+
+``match_core`` evaluates the embedding-join predicate for every
+(embedding, token) pair over *pre-gathered* tokens and emits packed int32
+extension signatures (see repro.mining.encoding for the bit layout and
+repro.mining.engine for the search-phase semantics).
+
+The formulation is deliberately TPU-friendly: vertex lookups are
+min-over-masked-iota (psi rows are injective so the minimum is the unique
+match) instead of argmax, and everything is elementwise/int32 - pure VPU
+work.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...mining.encoding import (
+    INVALID_SIG,
+    SENT_V,
+    _LAB_BITS,
+    _PU_BITS,
+    _SL_BITS,
+    _TY_BITS,
+)
+
+MODE_ROOT = 0
+MODE_VERTEX_PHASE = 1
+MODE_EDGE_PHASE = 2
+MODE_TAIL = 3
+
+# NOTE: plain python int, NOT a jnp array: module-level device constants
+# become hoisted jaxpr consts (extra executable buffers) and trip a
+# dispatch/aliasing bug on the CPU backend in jax 0.8.
+_BIG = 0x3FFFFFF
+
+
+def _lookup(psi, u):
+    """psi [E,NV], u [E,T] -> (mapped [E,T] bool, pid [E,T] int32: index of
+    the unique matching psi column, BIG when unmapped)."""
+    eq = psi[:, None, :] == u[:, :, None]  # [E,T,NV]
+    nv_ids = jnp.arange(psi.shape[-1], dtype=jnp.int32)
+    pid = jnp.min(jnp.where(eq, nv_ids[None, None, :], _BIG), axis=-1)
+    return pid < _BIG, pid.astype(jnp.int32)
+
+
+def match_core(tok, phi, psi, emb_valid, existing, nv, n_pat, mode):
+    """tok [E,T,6] int32 (pre-gathered per embedding), phi [E,NI],
+    psi [E,NV], emb_valid [E], existing [P,5], scalars nv/n_pat/mode.
+    Returns sigs [E,T] int32 (-1 = no extension)."""
+    ty = tok[..., 0]
+    u1 = tok[..., 1]
+    u2 = tok[..., 2]
+    lab = tok[..., 3]
+    j = tok[..., 4]
+    valid = tok[..., 5] > 0
+    is_v = ty <= 2
+
+    m1, pid1 = _lookup(psi, u1)
+    m2, pid2 = _lookup(psi, u2)
+    pid1 = jnp.where(m1, pid1, nv)
+    pid2 = jnp.where(m2, pid2, nv)
+
+    # vertex-TR candidate
+    ok_v = (mode == MODE_ROOT) | (mode == MODE_TAIL) | m1
+
+    # edge-TR candidate
+    both = m1 & m2
+    one = m1 ^ m2
+    mapped_pid = jnp.where(m1, pid1, pid2)
+    a = jnp.where(both, jnp.minimum(pid1, pid2),
+                  jnp.where(one, mapped_pid, nv))
+    b = jnp.where(both, jnp.maximum(pid1, pid2),
+                  jnp.where(one, nv, nv + 1))
+    ok_e = jnp.where(
+        mode == MODE_VERTEX_PHASE,
+        False,
+        jnp.where(mode == MODE_EDGE_PHASE, m1 | m2, True),
+    )
+
+    pu1 = jnp.where(is_v, pid1, a).astype(jnp.int32)
+    pu2 = jnp.where(is_v, SENT_V, b).astype(jnp.int32)
+    allowed = valid & jnp.where(is_v, ok_v, ok_e)
+
+    # temporal slot
+    in_eq = phi[:, None, :] == j[:, :, None]  # [E,T,NI]
+    ni_ids = jnp.arange(phi.shape[-1], dtype=jnp.int32)
+    in_pos = jnp.min(jnp.where(in_eq, ni_ids[None, None, :], _BIG), axis=-1)
+    in_any = in_pos < _BIG
+    in_idx = jnp.where(in_any, in_pos, 0).astype(jnp.int32)
+    gap_idx = (phi[:, None, :] < j[:, :, None]).sum(-1).astype(jnp.int32)
+    slot_kind = jnp.where(in_any, 0, 1).astype(jnp.int32)
+    slot_idx = jnp.where(in_any, in_idx, gap_idx)
+
+    tail_ok = jnp.where(
+        mode == MODE_TAIL,
+        (in_any & (in_idx == n_pat - 1)) | (~in_any & (gap_idx == n_pat)),
+        True,
+    )
+
+    # duplicate-TR-in-itemset rejection
+    ex = existing  # [P,5]
+    dup = (
+        (ex[:, 0][None, None, :] == slot_idx[..., None])
+        & (ex[:, 1][None, None, :] == ty[..., None])
+        & (ex[:, 2][None, None, :] == pu1[..., None])
+        & (ex[:, 3][None, None, :] == pu2[..., None])
+        & (ex[:, 4][None, None, :] == lab[..., None])
+    ).any(-1) & in_any
+
+    v = slot_kind
+    v = (v << _SL_BITS) | slot_idx
+    v = (v << _TY_BITS) | ty
+    v = (v << _PU_BITS) | pu1
+    v = (v << _PU_BITS) | pu2
+    v = (v << _LAB_BITS) | (lab + 1)
+    keep = allowed & tail_ok & ~dup & (emb_valid[:, None] > 0)
+    return jnp.where(keep, v, INVALID_SIG)

@@ -1,0 +1,258 @@
+"""Accelerated miners: host frontier + device extension scans.
+
+The reverse-search frontier (tiny, independent subtrees) stays on the
+host; every DB scan - the >95% hot loop - is a batched device call to
+``match_signatures``.  Outputs are bit-identical to the pure-host
+reference miners in ``repro.core`` (property-tested).
+
+The expansion loop is an explicit work stack, which makes the miner
+checkpointable (see checkpoint.py): any prefix of the traversal plus the
+remaining stack fully determines the final result, so a lost worker or a
+restart just re-enqueues its subtree - supports are per-subtree and
+idempotent.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.canonical import canonical_form, canonical_map
+from ..core.enumerate_host import Emb, apply_extension
+from ..core.gtrace import MiningResult
+from ..core.graphseq import Pattern, TRSeq, pattern_length, pattern_vertices
+from ..core.reverse_search import parent
+from .encoding import (
+    PAD_PHI,
+    PAD_PSI,
+    TokenDB,
+    encode_db,
+    encode_embeddings,
+    encode_pattern_trs,
+    signature_to_extkey,
+)
+from .engine import (
+    MODE_EDGE_PHASE,
+    MODE_ROOT,
+    MODE_TAIL,
+    MODE_VERTEX_PHASE,
+    aggregate_host,
+    match_signatures,
+)
+
+MAX_PATTERN_TRS = 64
+
+
+class AcceleratedMiner:
+    def __init__(
+        self,
+        db: Sequence[TRSeq],
+        max_itemsets: int = 16,
+        max_vertices: int = 12,
+        e_batch: int = 1024,
+    ):
+        self.db = db
+        self.ni = max_itemsets
+        self.nv = max_vertices
+        self.e_batch = e_batch
+        self.tdb: TokenDB = encode_db(db)
+        self.tokens = jnp.asarray(self.tdb.tokens)
+        self.device_seconds = 0.0
+        self.n_device_calls = 0
+
+    # ------------------------------------------------------------- scans
+    def _scan(self, pattern: Pattern, embs: List[Emb], mode: int):
+        """Run the device scan over all embeddings; return
+        {sig: (gid_set, (e,t) rows into the global embedding list)}."""
+        nv = len(pattern_vertices(pattern))
+        n_pat = len(pattern)
+        existing = encode_pattern_trs(pattern, MAX_PATTERN_TRS)
+        merged: Dict[int, Tuple[Set[int], List[np.ndarray]]] = {}
+        for start in range(0, len(embs), self.e_batch):
+            chunk = embs[start : start + self.e_batch]
+            E = len(chunk)
+            # pad to a power-of-two bucket to bound recompilation
+            Epad = min(self.e_batch, 1 << max(0, math.ceil(math.log2(E))))
+            Epad = max(Epad, E)
+            gid, phi, psi = encode_embeddings(chunk, self.ni, self.nv)
+            if Epad > E:
+                gid = np.pad(gid, (0, Epad - E))
+                phi = np.pad(phi, ((0, Epad - E), (0, 0)),
+                             constant_values=PAD_PHI)
+                psi = np.pad(psi, ((0, Epad - E), (0, 0)),
+                             constant_values=PAD_PSI)
+            valid = np.zeros((Epad,), np.int32)
+            valid[:E] = 1
+            t0 = time.perf_counter()
+            sigs = match_signatures(
+                self.tokens,
+                jnp.asarray(gid), jnp.asarray(phi), jnp.asarray(psi),
+                jnp.asarray(valid), jnp.asarray(existing),
+                jnp.int32(nv), jnp.int32(n_pat), jnp.int32(mode),
+            )
+            sigs = np.asarray(sigs)
+            self.device_seconds += time.perf_counter() - t0
+            self.n_device_calls += 1
+            for sig, (gset, et) in aggregate_host(sigs, gid).items():
+                et = et.copy()
+                et[:, 0] += start
+                if sig in merged:
+                    merged[sig][0].update(gset)
+                    merged[sig][1].append(et)
+                else:
+                    merged[sig] = (gset, [et])
+        return merged
+
+    # -------------------------------------------------- embedding rebuild
+    def _rebuild_embeddings(
+        self,
+        pattern: Pattern,
+        embs: List[Emb],
+        sig: int,
+        et_rows: List[np.ndarray],
+        child_raw: Pattern,
+    ) -> List[Emb]:
+        (slot_kind, slot_idx), ptr = signature_to_extkey(sig)
+        nv = len(pattern_vertices(pattern))
+        vmap = canonical_map(child_raw)
+        out: List[Emb] = []
+        seen = set()
+        for rows in et_rows:
+            for e_i, t_i in rows:
+                gid, phi, psi = embs[e_i]
+                tok = self.tdb.tokens[gid, t_i]
+                ty, u1, u2, lab, j, _ = (int(x) for x in tok)
+                if slot_kind == "in":
+                    new_phi = phi
+                else:
+                    new_phi = phi[:slot_idx] + (j,) + phi[slot_idx:]
+                psi_d = dict(psi)
+                variants: List[Dict[int, int]]
+                if ptr.is_vertex:
+                    if ptr.u1 == nv:  # fresh vertex
+                        variants = [{**psi_d, nv: u1}]
+                    else:
+                        variants = [psi_d]
+                else:
+                    if ptr.u2 == nv + 1:  # both endpoints fresh
+                        variants = [
+                            {**psi_d, nv: u1, nv + 1: u2},
+                            {**psi_d, nv: u2, nv + 1: u1},
+                        ]
+                    elif ptr.u2 == nv:  # one fresh endpoint
+                        mapped_dv = psi_d[ptr.u1]
+                        fresh_dv = u2 if mapped_dv == u1 else u1
+                        variants = [{**psi_d, nv: fresh_dv}]
+                    else:
+                        variants = [psi_d]
+                for v in variants:
+                    emb: Emb = (
+                        gid,
+                        new_phi,
+                        tuple(sorted((vmap[pv], dv) for pv, dv in v.items())),
+                    )
+                    if emb not in seen:
+                        seen.add(emb)
+                        out.append(emb)
+        return out
+
+    # ------------------------------------------------------------ mining
+    def _mine(
+        self,
+        min_support: int,
+        max_len: Optional[int],
+        rs: bool,
+        checkpoint_path: Optional[str] = None,
+        checkpoint_every: int = 50,
+        resume: bool = False,
+    ) -> MiningResult:
+        from .checkpoint import load_state, save_state
+
+        res = MiningResult()
+        root: Tuple[Pattern, List[Emb]] = (
+            (), [(g, (), ()) for g in range(len(self.db))]
+        )
+        stack = [root]
+        if resume and checkpoint_path:
+            patterns, stack, meta = load_state(checkpoint_path)
+            res.patterns.update(patterns)
+            res.n_enumerated = meta.get("n_enumerated", len(patterns))
+        expansions_since_ckpt = 0
+        while stack:
+            pattern, embs = stack.pop()
+            if max_len is not None and pattern_length(pattern) >= max_len:
+                continue
+            if len(pattern) >= self.ni:
+                continue  # capacity guard (configurable)
+            if rs:
+                if not pattern:
+                    mode = MODE_ROOT
+                elif any(tr.is_vertex for s in pattern for tr in s):
+                    mode = MODE_VERTEX_PHASE
+                else:
+                    mode = MODE_EDGE_PHASE
+            else:
+                mode = MODE_TAIL
+            res.n_extension_scans += 1
+            merged = self._scan(pattern, embs, mode)
+            # group raw signatures by canonical child
+            by_child: Dict[Pattern, Tuple[Set[int], int, List[np.ndarray]]] = {}
+            nv = len(pattern_vertices(pattern))
+            for sig, (gset, et_rows) in merged.items():
+                key = signature_to_extkey(sig)
+                if max(key[1].u1, key[1].u2) >= self.nv:
+                    continue  # vertex-capacity guard
+                child_raw = apply_extension(pattern, key)
+                child = canonical_form(child_raw)
+                if child in by_child:
+                    by_child[child][0].update(gset)
+                else:
+                    by_child[child] = (set(gset), sig, et_rows)
+            for child, (gids, sig, et_rows) in by_child.items():
+                if len(gids) < min_support:
+                    continue
+                if rs:
+                    if parent(child) != pattern:
+                        continue
+                else:
+                    if child in res.patterns:
+                        continue  # canonical dedup (baseline only)
+                key = signature_to_extkey(sig)
+                child_raw = apply_extension(pattern, key)
+                child_embs = self._rebuild_embeddings(
+                    pattern, embs, sig, et_rows, child_raw
+                )
+                res.patterns[child] = len(gids)
+                res.n_enumerated += 1
+                stack.append((child, child_embs))
+            expansions_since_ckpt += 1
+            if (
+                checkpoint_path
+                and expansions_since_ckpt >= checkpoint_every
+            ):
+                save_state(
+                    checkpoint_path, res.patterns, stack,
+                    meta={"min_support": min_support, "rs": rs,
+                          "n_enumerated": res.n_enumerated},
+                )
+                expansions_since_ckpt = 0
+        if checkpoint_path:
+            save_state(
+                checkpoint_path, res.patterns, [],
+                meta={"min_support": min_support, "rs": rs,
+                      "n_enumerated": res.n_enumerated, "done": True},
+            )
+        return res
+
+    def mine_rs(self, min_support: int, max_len: int | None = None,
+                **kw) -> MiningResult:
+        """GTRACE-RS with device-side extension scans."""
+        return self._mine(min_support, max_len, rs=True, **kw)
+
+    def mine_gtrace(self, min_support: int, max_len: int | None = None,
+                    **kw) -> MiningResult:
+        """Original-GTRACE baseline with device-side extension scans."""
+        return self._mine(min_support, max_len, rs=False, **kw)

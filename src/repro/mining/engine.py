@@ -1,0 +1,126 @@
+"""Vectorized embedding-join extension discovery (the device hot loop).
+
+This is the TPU-native realization of the paper's Sec. 4.3 insight: once a
+pattern occurrence fixes the vertex-ID mapping psi, checking whether a data
+TR extends the pattern is an O(1) token comparison - no isomorphism test.
+We evaluate that comparison for every (embedding x data-TR) pair on the
+VPU and reduce to per-candidate supports with sort/segment primitives.
+
+``match_signatures`` computes, for each (embedding e, token t), a packed
+int32 *extension signature* describing the one-TR extension (slot + TR in
+pattern coordinates) that the token would realize, or -1 when the token
+cannot extend the embedding under the current search phase:
+
+* mode 0 (RS root)        - anything, incl. fresh-vertex / fresh-edge TRs
+* mode 1 (RS, node has vertex TRs)   - vertex TRs on mapped vertices only
+* mode 2 (RS, edge-only node)        - vertex TRs on mapped vertices,
+  edge TRs with >=1 mapped endpoint (P2/P3-class children)
+* mode 3 (GTRACE baseline)           - anything, tail slots only
+
+Supports are distinct-gid counts per signature; `aggregate_host` is the
+exact numpy finalize, `candidate_table_device` the fixed-size on-device
+variant used by the distributed step (see distributed.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .encoding import INVALID_SIG, PAD_PHI, PAD_PSI, SENT_V
+
+MODE_ROOT = 0
+MODE_VERTEX_PHASE = 1
+MODE_EDGE_PHASE = 2
+MODE_TAIL = 3
+
+
+def match_signatures_ref(tokens, gid, phi, psi, emb_valid, existing, nv,
+                         n_pat, mode):
+    """Gather per-embedding token rows and evaluate the embedding-join
+    predicate (shared oracle in repro.kernels.match_count.ref).
+
+    tokens [G,T,6] int32, gid [E], phi [E,NI], psi [E,NV],
+    emb_valid [E] int32 (0 = padded row), existing [P,5] int32,
+    nv/n_pat/mode scalars (int32).  Returns sigs [E,T] int32.
+    """
+    from ..kernels.match_count.ref import match_core
+
+    tok = tokens[gid]  # [E,T,6]
+    return match_core(tok, phi, psi, emb_valid, existing, nv, n_pat, mode)
+
+
+match_signatures = jax.jit(
+    match_signatures_ref, static_argnames=(), donate_argnums=()
+)
+
+
+def aggregate_host(
+    sigs: np.ndarray, gids: np.ndarray
+) -> Dict[int, Tuple[Set[int], np.ndarray]]:
+    """Exact finalize: signature -> (distinct gid set, (e,t) index array)."""
+    E, T = sigs.shape
+    flat = sigs.reshape(-1)
+    ok = flat >= 0
+    if not ok.any():
+        return {}
+    idx = np.nonzero(ok)[0]
+    svals = flat[idx]
+    e_idx = (idx // T).astype(np.int32)
+    t_idx = (idx % T).astype(np.int32)
+    g = gids[e_idx]
+    order = np.lexsort((t_idx, e_idx, svals))
+    svals, e_idx, t_idx, g = (x[order] for x in (svals, e_idx, t_idx, g))
+    out: Dict[int, Tuple[Set[int], np.ndarray]] = {}
+    bounds = np.nonzero(np.diff(svals))[0] + 1
+    starts = np.concatenate([[0], bounds])
+    ends = np.concatenate([bounds, [len(svals)]])
+    for s, e in zip(starts, ends):
+        sig = int(svals[s])
+        out[sig] = (
+            set(g[s:e].tolist()),
+            np.stack([e_idx[s:e], t_idx[s:e]], axis=1),
+        )
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def candidate_table_device(sigs, gids, k: int):
+    """Fixed-size on-device candidate table.
+
+    Returns (uniq_sigs [k] int64, distinct_gid_counts [k] int32).  Exact
+    when the number of distinct signatures in this shard is < k (the
+    driver checks and re-runs with larger k otherwise; -1 rows are pads).
+    """
+    E, T = sigs.shape
+    flat_sig = sigs.reshape(-1)
+    flat_gid = jnp.broadcast_to(gids[:, None], (E, T)).reshape(-1)
+    order = jnp.lexsort((flat_gid, flat_sig))
+    ss = flat_sig[order]
+    gg = flat_gid[order]
+    prev_s = jnp.concatenate([jnp.full((1,), -2, ss.dtype), ss[:-1]])
+    prev_g = jnp.concatenate([jnp.full((1,), -2, gg.dtype), gg[:-1]])
+    new_pair = (ss != prev_s) | (gg != prev_g)
+    contrib = (new_pair & (ss >= 0)).astype(jnp.int32)
+    uniq, inv = jnp.unique(
+        ss, size=k, fill_value=INVALID_SIG, return_inverse=True
+    )
+    counts = jax.ops.segment_sum(contrib, inv, num_segments=k)
+    counts = jnp.where(uniq >= 0, counts, 0)
+    return uniq, counts
+
+
+def merge_tables(uniq_list, counts_list, k: int):
+    """Merge per-shard (sig,count) tables by summing counts per signature
+    (gid shards are disjoint so distinct-gid counts add)."""
+    allsig = jnp.concatenate(uniq_list)
+    allcnt = jnp.concatenate(counts_list)
+    uniq, inv = jnp.unique(
+        allsig, size=k, fill_value=INVALID_SIG, return_inverse=True
+    )
+    counts = jax.ops.segment_sum(allcnt, inv, num_segments=k)
+    counts = jnp.where(uniq >= 0, counts, 0)
+    return uniq, counts

@@ -1,0 +1,259 @@
+"""Attention: blockwise (flash-style) causal training path, GQA, and a
+KV-cache decode path that stays correct under sequence-sharded caches.
+
+The training path never materializes the [S, S] score matrix: queries are
+processed against key/value blocks with an online-softmax accumulator
+(lax.scan over KV blocks), bounding the per-layer activation footprint to
+O(S * block) - the same memory shape a fused TPU attention kernel gives,
+expressed at the XLA level so it shards under pjit.
+
+The decode path computes softmax over the cache axis with plain reductions
+so the SPMD partitioner can insert the (max, sum) all-reduces when the
+cache sequence axis is sharded (flash-decoding / split-KV semantics for
+free - see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def constrain_dims(x, dim_axes):
+    """Pin shardings of selected dims (XLA's SPMD propagation loses
+    batch/head sharding through scan carries; without this the attention
+    accumulators and saved remat activations replicate across the DP/TP
+    axes - measured 16x activation-bytes blowup, see EXPERIMENTS.md).
+    Dims whose size the axes don't divide are left unconstrained."""
+    if not dim_axes:
+        return x
+    spec = [None] * x.ndim
+    any_set = False
+    for dim, axes in dim_axes.items():
+        if not axes:
+            continue
+        axes = axes if isinstance(axes, tuple) else (axes,)
+        if x.shape[dim] % _axes_size(axes) != 0:
+            continue
+        spec[dim] = axes if len(axes) > 1 else axes[0]
+        any_set = True
+    if not any_set:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_batch(x, batch_axes, dim: int = 0):
+    return constrain_dims(x, {dim: batch_axes})
+
+
+def _axes_size(axes):
+    import numpy as np
+    mesh = jax.sharding.get_abstract_mesh()
+    try:
+        return int(np.prod([mesh.shape[a] for a in axes]))
+    except Exception:
+        return 1 << 30  # unknown mesh: skip constraint
+
+
+def _gqa_expand(q, n_kv):
+    """[B,S,H,hd] -> [B,S,KV,H/KV,hd]."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def blockwise_causal_attention(q, k, v, *, block_q: int = 512,
+                               block_kv: int = 512, scale=None,
+                               schedule: str = "triangular",
+                               batch_axes=(), model_axes=("model",)):
+    """Causal GQA attention without materializing S x S scores.
+
+    q [B,S,H,hd], k/v [B,S,KV,hd]; H % KV == 0.  Returns [B,S,H,hd].
+
+    schedule:
+    * "triangular" - one sequential scan over the statically-enumerated
+      lower-triangular (q-block, kv-block) pairs: fully-masked pairs are
+      never computed (the naive grid wastes ~2x FLOPs at long S) and the
+      single flat scan avoids the batched-while buffers XLA creates when
+      vectorizing a map-of-scans (a multi-GiB pred carry; see
+      EXPERIMENTS.md §Perf).
+    * "full" - the naive all-pairs grid (kept as the measured baseline).
+
+    Masking is an additive [block_q, block_kv] penalty - small, hoistable,
+    and fused into the score add; a boolean where-mask broadcast to score
+    shape gets hoisted by XLA into a score-sized pred buffer.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    nq, nk = s // block_q, s // block_kv
+
+    qg = _gqa_expand(q, kv).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    q_blocks = qg.reshape(b, nq, block_q, kv, g, hd)
+
+    # TP placement: shard the q-head-group dim when it divides, else the
+    # kv-head dim (MHA), else leave heads unconstrained (tiny models)
+    if batch_axes:
+        hdim_scores = {2: model_axes} if g % _axes_size(model_axes) == 0 \
+            else {3: model_axes}
+        q_blocks = constrain_dims(
+            q_blocks, {0: batch_axes,
+                       4 if g % _axes_size(model_axes) == 0 else 3:
+                       model_axes})
+        kf = constrain_dims(kf, {0: batch_axes, 2: model_axes})
+        vf = constrain_dims(vf, {0: batch_axes, 2: model_axes})
+    else:
+        hdim_scores = {}
+
+    if schedule == "triangular":
+        pairs = [
+            (qi, ki)
+            for qi in range(nq)
+            for ki in range(nk)
+            if ki * block_kv <= qi * block_q + block_q - 1
+        ]
+        pair_arr = jnp.asarray(pairs, jnp.int32)  # [P, 2]
+        is_last = jnp.asarray(
+            [i + 1 == len(pairs) or pairs[i + 1][0] != qi
+             for i, (qi, _) in enumerate(pairs)], jnp.bool_
+        )
+
+        def body(carry, xs):
+            m, l, o, out = carry
+            (qi, ki), last = xs
+            qb = jax.lax.dynamic_index_in_dim(q_blocks, qi, 1,
+                                              keepdims=False)
+            kb = jax.lax.dynamic_slice_in_dim(kf, ki * block_kv,
+                                              block_kv, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vf, ki * block_kv,
+                                              block_kv, 1)
+            sc = constrain_dims(
+                jnp.einsum("bqkgd,bskd->bqgks", qb, kb),
+                {0: batch_axes, **hdim_scores})
+            # additive causal penalty for the (possibly) diagonal block
+            dq = qi * block_q + jnp.arange(block_q)
+            dk = ki * block_kv + jnp.arange(block_kv)
+            pen = jnp.where(dq[:, None] >= dk[None, :], 0.0, NEG_INF)
+            sc = sc + pen[None, :, None, None, :]
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bqgks,bskd->bqgkd", p, vb
+            )
+            done = o_new / jnp.maximum(l_new, 1e-30)[..., None]
+            out = jax.lax.cond(
+                last,
+                lambda: jax.lax.dynamic_update_index_in_dim(
+                    out, done.astype(out.dtype), qi, 0),
+                lambda: out,
+            )
+            # reset accumulators when a q block completes
+            m_new = jnp.where(last, NEG_INF, m_new)
+            l_new = jnp.where(last, 0.0, l_new)
+            o_new = jnp.where(last, 0.0, o_new)
+            return (m_new, l_new, o_new, out), None
+
+        hacc = ({2: model_axes} if g % _axes_size(model_axes) == 0
+                else {3: model_axes})
+        m0 = constrain_dims(
+            jnp.full((b, block_q, g, kv), NEG_INF, jnp.float32),
+            {0: batch_axes, **hacc})
+        l0 = constrain_dims(
+            jnp.zeros((b, block_q, g, kv), jnp.float32),
+            {0: batch_axes, **hacc})
+        o0 = constrain_dims(
+            jnp.zeros((b, block_q, g, kv, hd), jnp.float32),
+            {0: batch_axes, **hacc})
+        outbuf = constrain_dims(
+            jnp.zeros((nq, b, block_q, g, kv, hd), q.dtype),
+            {1: batch_axes,
+             **({k + 1: v for k, v in hacc.items()})})
+        (_, _, _, outbuf), _ = jax.lax.scan(
+            body, (m0, l0, o0, outbuf), (pair_arr, is_last)
+        )
+        outs = jnp.moveaxis(outbuf, 0, 1).reshape(b, s, g, kv, hd)
+        outs = outs.transpose(0, 1, 3, 2, 4).reshape(b, s, h, hd)
+        return outs.astype(q.dtype)
+
+    # ---- "full" baseline schedule (all block pairs) ----
+    def per_qblock(qi, qb):
+        q_pos = qi * block_q + jnp.arange(block_q)
+
+        def body(carry, ki):
+            m, l, o = carry
+            kb = jax.lax.dynamic_slice_in_dim(kf, ki * block_kv, block_kv, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vf, ki * block_kv, block_kv, 1)
+            sc = jnp.einsum("bqkgd,bskd->bqgks", qb, kb)
+            k_pos = ki * block_kv + jnp.arange(block_kv)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bqgks,bskd->bqgkd", p, vb
+            )
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((b, block_q, g, kv), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, block_q, g, kv), jnp.float32)
+        o0 = jnp.zeros((b, block_q, g, kv, hd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            lambda c, ki: body(c, ki), (m0, l0, o0), jnp.arange(nk)
+        )
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    outs = jax.lax.map(
+        lambda i: per_qblock(i, q_blocks[:, i]), jnp.arange(nq)
+    )
+    outs = jnp.moveaxis(outs, 0, 1).reshape(b, s, g, kv, hd)
+    outs = outs.transpose(0, 1, 3, 2, 4).reshape(b, s, h, hd)
+    return outs.astype(q.dtype)
+
+
+def naive_causal_attention(q, k, v, scale=None):
+    """Reference O(S^2)-memory attention (tests only)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    qg = _gqa_expand(q, kv).astype(jnp.float32) * scale
+    sc = jnp.einsum("bqkgd,bskd->bqgks", qg, k.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqgks,bskd->bqgkd", p, v.astype(jnp.float32))
+    out = out.transpose(0, 1, 3, 2, 4).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, scale=None):
+    """One-step decode: q [B,1,H,hd] against cache [B,S,KV,hd].
+
+    Positions >= cache_len are masked.  Reductions over the cache axis are
+    plain max/sum, so a sequence-sharded cache lowers to partial reduce +
+    all-reduce (split-KV) under pjit.
+    """
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    qg = _gqa_expand(q, kv).astype(jnp.float32) * scale  # [B,1,KV,G,hd]
+    sc = jnp.einsum("bqkgd,bskd->bqgks", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None, :] < cache_len[:, None]  # [B,S]
+    sc = jnp.where(mask[:, None, None, None, :], sc, NEG_INF)
+    m = sc.max(-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = p.sum(-1, keepdims=True)
+    out = jnp.einsum("bqgks,bskd->bqgkd", p / l, v_cache.astype(jnp.float32))
+    out = out.transpose(0, 1, 3, 2, 4).reshape(b, 1, h, hd)
+    return out.astype(q.dtype)

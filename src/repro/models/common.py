@@ -1,0 +1,134 @@
+"""Shared model plumbing: configs, param-spec rules, init helpers.
+
+Params are nested dicts of jnp arrays.  Sharding is expressed as an
+ordered list of (path-regex, PartitionSpec-template) rules; templates may
+reference the symbolic axes "DATA" (all pure-DP axes: ("pod","data") on
+the multi-pod mesh, ("data",) on a single pod - used for FSDP/ZeRO
+sharding) and "MODEL" (tensor/expert-parallel axis).  ``resolve_specs``
+instantiates them for a concrete mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+Rules = List[Tuple[str, Tuple]]  # (regex, axis template tuple)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _resolve_axis(ax, mesh: Mesh):
+    if isinstance(ax, tuple):
+        out = []
+        for a in ax:
+            r = _resolve_axis(a, mesh)
+            if isinstance(r, tuple):
+                out.extend(r)
+            elif r is not None:
+                out.append(r)
+        return tuple(out)
+    if ax == "DATA":
+        axes = dp_axes(mesh)
+        return axes if len(axes) > 1 else axes[0]
+    if ax == "MODEL":
+        return "model"
+    return ax
+
+
+def resolve_template(tpl: Sequence, mesh: Mesh) -> P:
+    return P(*[_resolve_axis(a, mesh) for a in tpl])
+
+
+def path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def tree_param_specs(tree: PyTree, rules: Rules, mesh: Mesh) -> PyTree:
+    """Map every leaf to a PartitionSpec via the first matching rule."""
+
+    def leaf_spec(path, leaf):
+        p = path_str(path)
+        for pat, tpl in rules:
+            if re.search(pat, p):
+                spec = resolve_template(tpl, mesh)
+                if len(spec) > leaf.ndim:
+                    spec = P(*spec[: leaf.ndim])
+                # size-1 / indivisible dims fall back to replication
+                # (e.g. quantized-optimizer scale tensors)
+                fixed = []
+                for dim, ax in enumerate(
+                    tuple(spec) + (None,) * (leaf.ndim - len(spec))
+                ):
+                    if ax is None:
+                        fixed.append(None)
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    size = int(np.prod([mesh.shape[a] for a in axes]))
+                    fixed.append(ax if leaf.shape[dim] % size == 0 else None)
+                return P(*fixed)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def guard_tree_specs(args: PyTree, specs: PyTree, mesh: Mesh) -> PyTree:
+    """Replace spec axes that do not evenly divide the argument dim with
+    replication (applied to batch/cache specs after template resolve)."""
+
+    def fix(leaf, spec):
+        if not isinstance(spec, P):
+            return spec
+        entries = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        fixed = []
+        for dim, ax in enumerate(entries[: leaf.ndim]):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            fixed.append(ax if leaf.shape[dim] % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree.map(
+        fix, args, specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def tree_shardings(tree: PyTree, rules: Rules, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_param_specs(tree, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ------------------------------------------------------------------ init
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale
+                              ).astype(dtype)
+
+
+def normal_init(key, shape, std, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def count_params(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

@@ -1,0 +1,38 @@
+"""EmbeddingBag for recsys: JAX has no native EmbeddingBag or CSR sparse,
+so the lookup-and-reduce over ragged multi-hot bags is built from
+``jnp.take`` + ``jax.ops.segment_sum`` - this IS the hot path of recsys
+serving and is the substrate the retrieval pipeline uses.
+
+Bags are given in "flat + segment" form: ``indices`` [NNZ] row ids into
+the table, ``segments`` [NNZ] bag ids (sorted), optional ``weights``.
+Padding entries use index 0 with weight 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(
+    table,          # [V, D]
+    indices,        # [NNZ] int32
+    segments,       # [NNZ] int32 (bag id per entry)
+    n_bags: int,
+    weights=None,   # [NNZ] or None
+    mode: str = "sum",
+):
+    rows = jnp.take(table, indices, axis=0)  # [NNZ, D]
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segments, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segments, num_segments=n_bags)
+        ones = (weights if weights is not None
+                else jnp.ones_like(indices, rows.dtype))
+        cnt = jax.ops.segment_sum(ones.astype(rows.dtype), segments,
+                                  num_segments=n_bags)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segments, num_segments=n_bags)
+    raise ValueError(mode)

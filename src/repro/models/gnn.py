@@ -1,0 +1,159 @@
+"""GNN message passing via edge-index scatter (segment ops).
+
+JAX has no sparse CSR: message passing IS ``jax.ops.segment_sum`` /
+``segment_max`` over an edge list, which is also the layout that shards:
+edges split across the DP axes (disjoint partial aggregates + psum),
+features optionally split across "model".
+
+Covers the three assigned kernel regimes' SpMM family: GCN (sym-norm
+SpMM), GIN (sum-agg + MLP), GAT (SDDMM edge scores -> segment softmax ->
+weighted SpMM).  Self-loops are expected in the edge list (the data
+pipeline adds them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import normal_init
+from .layers import cross_entropy_loss
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str  # gcn | gat | gin
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    n_heads: int = 1          # gat
+    gin_eps_learnable: bool = True
+    dropout: float = 0.0      # (kept 0 in dry-runs; losses are determin.)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+
+def init_params(rng, cfg: GNNConfig) -> PyTree:
+    keys = iter(jax.random.split(rng, 4 * cfg.n_layers + 4))
+    params: Dict[str, Any] = {"layers": []}
+    d_prev = cfg.d_in
+    for li in range(cfg.n_layers):
+        last = li == cfg.n_layers - 1
+        if cfg.kind == "gat":
+            heads = 1 if last else cfg.n_heads
+            d_out = cfg.n_classes if last else cfg.d_hidden
+            lp = {
+                "w": normal_init(next(keys), (d_prev, heads * d_out),
+                                 d_prev ** -0.5, cfg.param_dtype),
+                "a_src": normal_init(next(keys), (heads, d_out), 0.1,
+                                     cfg.param_dtype),
+                "a_dst": normal_init(next(keys), (heads, d_out), 0.1,
+                                     cfg.param_dtype),
+            }
+            d_prev = heads * d_out if not last else d_out
+        elif cfg.kind == "gin":
+            d_out = cfg.n_classes if last else cfg.d_hidden
+            lp = {
+                "eps": jnp.zeros((), cfg.param_dtype),
+                "w1": normal_init(next(keys), (d_prev, cfg.d_hidden),
+                                  d_prev ** -0.5, cfg.param_dtype),
+                "b1": jnp.zeros((cfg.d_hidden,), cfg.param_dtype),
+                "w2": normal_init(next(keys), (cfg.d_hidden, d_out),
+                                  cfg.d_hidden ** -0.5, cfg.param_dtype),
+                "b2": jnp.zeros((d_out,), cfg.param_dtype),
+            }
+            d_prev = d_out
+        else:  # gcn
+            d_out = cfg.n_classes if last else cfg.d_hidden
+            lp = {
+                "w": normal_init(next(keys), (d_prev, d_out),
+                                 d_prev ** -0.5, cfg.param_dtype),
+                "b": jnp.zeros((d_out,), cfg.param_dtype),
+            }
+            d_prev = d_out
+        params["layers"].append(lp)
+    return params
+
+
+def _gcn_layer(lp, x, src, dst, n, deg_isqrt):
+    msg = x[src] * (deg_isqrt[src] * deg_isqrt[dst])[:, None]
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n)
+    return agg @ lp["w"] + lp["b"]
+
+
+def _gin_layer(lp, x, src, dst, n):
+    agg = jax.ops.segment_sum(x[src], dst, num_segments=n)
+    h = (1.0 + lp["eps"]) * x + agg
+    h = jax.nn.relu(h @ lp["w1"] + lp["b1"])
+    return h @ lp["w2"] + lp["b2"]
+
+
+def _gat_layer(lp, x, src, dst, n, last: bool):
+    heads, d_out = lp["a_src"].shape
+    z = (x @ lp["w"]).reshape(n, heads, d_out)
+    e = jnp.einsum("ehd,hd->eh", z[src], lp["a_src"]) + jnp.einsum(
+        "ehd,hd->eh", z[dst], lp["a_dst"]
+    )
+    e = jax.nn.leaky_relu(e, 0.2)
+    m = jax.ops.segment_max(e, dst, num_segments=n)
+    p = jnp.exp(e - m[dst])
+    s = jax.ops.segment_sum(p, dst, num_segments=n)
+    w = p / jnp.maximum(s[dst], 1e-9)
+    agg = jax.ops.segment_sum(z[src] * w[..., None], dst, num_segments=n)
+    if last:
+        return agg.mean(1)
+    return jax.nn.elu(agg.reshape(n, heads * d_out))
+
+
+def forward(params, batch, cfg: GNNConfig):
+    """batch: x [N,F], edges [2,E] int32 (incl. self loops, both dirs),
+    optionally edge_mask [E] (0 pads).  Returns logits [N, n_classes]."""
+    x = batch["x"].astype(cfg.compute_dtype)
+    src, dst = batch["edges"][0], batch["edges"][1]
+    if "edge_mask" in batch:
+        # padded edges point at node n (a dummy row is appended)
+        pad = batch["edge_mask"] == 0
+        src = jnp.where(pad, x.shape[0], src)
+        dst = jnp.where(pad, x.shape[0], dst)
+    n = x.shape[0] + (1 if "edge_mask" in batch else 0)
+    if "edge_mask" in batch:
+        x = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], 0)
+
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, x.dtype), dst,
+                              num_segments=n)
+    deg_isqrt = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+
+    for li, lp in enumerate(params["layers"]):
+        last = li == len(params["layers"]) - 1
+        lp = jax.tree.map(lambda p: p.astype(cfg.compute_dtype), lp)
+        if cfg.kind == "gcn":
+            x = _gcn_layer(lp, x, src, dst, n, deg_isqrt)
+        elif cfg.kind == "gin":
+            x = _gin_layer(lp, x, src, dst, n)
+        else:
+            x = _gat_layer(lp, x, src, dst, n, last)
+        if not last and cfg.kind != "gat":  # gat applies elu inside
+            x = jax.nn.relu(x)
+    if "edge_mask" in batch:
+        x = x[:-1]
+    return x
+
+
+def node_classification_loss(params, batch, cfg: GNNConfig):
+    logits = forward(params, batch, cfg)
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def graph_classification_loss(params, batch, cfg: GNNConfig):
+    """GIN on batched small graphs: sum-pool node embeddings per graph."""
+    logits = forward(params, batch, cfg)  # [N, C]
+    pooled = jax.ops.segment_sum(
+        logits, batch["graph_id"], num_segments=batch["n_graphs"]
+    )
+    return cross_entropy_loss(pooled, batch["graph_labels"])

@@ -1,0 +1,63 @@
+"""Elementary layers shared across the model zoo."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [..., S, H, hd]; positions [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [...,S,hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [...,S,1,hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, targets, mask=None):
+    """logits [..., V] (any dtype), integer targets; mean over mask."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1
+    ).squeeze(-1)
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

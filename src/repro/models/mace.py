@@ -1,0 +1,202 @@
+"""MACE-style E(3)-equivariant message passing (l_max=2, correlation 3).
+
+Higher-order equivariant message passing per MACE (arXiv:2206.07697):
+radial Bessel basis, spherical-harmonic edge attributes up to l=2,
+many-body product basis of correlation order 3, two interaction layers.
+
+TPU adaptation note (DESIGN.md §Arch-applicability): the full Clebsch-
+Gordan product basis is replaced by an *exactly equivariant* subset -
+scalar x tensor couplings (CG = identity), the l=1 x l=1 -> l=1 cross
+product, and per-l inner products for invariants.  This preserves the
+correlation-3 many-body structure and exact E(3) equivariance (unit
+tested via random rotations/translations) while keeping the contraction a
+dense channelwise einsum, which is the MXU-friendly layout; the O(L^6)
+general CG contraction is exactly the part eSCN-style methods also
+restructure on accelerators.
+
+Feature layout: [N, 9, C] with components [l0 | l1(x,y,z) | l2(5)] in the
+orthonormal real spherical-harmonic basis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import normal_init
+
+PyTree = Any
+
+_L_SLICES = {0: slice(0, 1), 1: slice(1, 4), 2: slice(4, 9)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    n_species: int = 10
+    r_cut: float = 5.0
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+
+def real_sph_harm_l2(rhat):
+    """rhat [E,3] unit vectors -> [E,9] orthonormal real SH (l<=2)."""
+    x, y, z = rhat[:, 0], rhat[:, 1], rhat[:, 2]
+    c0 = 0.28209479177387814
+    c1 = 0.4886025119029199
+    c2a = 1.0925484305920792
+    c2b = 0.31539156525252005
+    c2c = 0.5462742152960396
+    return jnp.stack(
+        [
+            jnp.full_like(x, c0),
+            c1 * x, c1 * y, c1 * z,
+            c2a * x * y,
+            c2a * y * z,
+            c2b * (3 * z * z - 1.0),
+            c2a * x * z,
+            c2c * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+
+
+def bessel_rbf(d, n_rbf: int, r_cut: float):
+    """Radial Bessel basis with smooth cutoff; d [E] -> [E, n_rbf]."""
+    d = jnp.maximum(d, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rb = jnp.sqrt(2.0 / r_cut) * jnp.sin(
+        n[None, :] * jnp.pi * d[:, None] / r_cut
+    ) / d[:, None]
+    # polynomial cutoff envelope
+    u = jnp.clip(d / r_cut, 0.0, 1.0)
+    env = 1.0 - 10.0 * u**3 + 15.0 * u**4 - 6.0 * u**5
+    return rb * env[:, None]
+
+
+def _cross(a, b):
+    """l1 x l1 -> l1 (exact CG coupling up to scale); [.. ,3,C]."""
+    ax, ay, az = a[..., 0, :], a[..., 1, :], a[..., 2, :]
+    bx, by, bz = b[..., 0, :], b[..., 1, :], b[..., 2, :]
+    return jnp.stack(
+        [ay * bz - az * by, az * bx - ax * bz, ax * by - ay * bx], axis=-2
+    )
+
+
+def product_basis(A):
+    """A [N, 9, C] -> (equivariant features [N, 9, C*3],
+    invariants [N, C*k]).  Correlation order up to 3 via exact couplings:
+    nu=1: A;  nu=2: A0*A, A1 x A1, per-l dots;  nu=3: (A.A)*A, A0^2*A."""
+    A0 = A[:, _L_SLICES[0], :]          # [N,1,C]
+    A1 = A[:, _L_SLICES[1], :]          # [N,3,C]
+    dots = jnp.concatenate(
+        [jnp.sum(A[:, s, :] ** 2, axis=1) for s in _L_SLICES.values()],
+        axis=-1,
+    )  # [N, 3C] invariants (nu=2)
+    norm2 = jnp.sum(A * A, axis=1, keepdims=True)  # [N,1,C] invariant
+    eq2 = A0 * A                        # scalar x tensor  (nu=2)
+    eq3 = norm2 * A                     # invariant x tensor (nu=3)
+    cross = _cross(A1, eq2[:, _L_SLICES[1], :])  # nu=3, l=1 block
+    eq3 = eq3.at[:, _L_SLICES[1], :].add(cross)
+    feats = jnp.concatenate([A, eq2, eq3], axis=-1)  # [N,9,3C]
+    inv3 = (A0[:, 0, :] ** 2) * A0[:, 0, :]
+    invs = jnp.concatenate([dots, norm2[:, 0, :], inv3], axis=-1)
+    return feats, invs
+
+
+def init_params(rng, cfg: MACEConfig) -> PyTree:
+    keys = iter(jax.random.split(rng, 8 * cfg.n_layers + 4))
+    C = cfg.d_hidden
+    params: Dict[str, Any] = {
+        "embed": normal_init(next(keys), (cfg.n_species, C), 1.0,
+                             cfg.param_dtype),
+        "layers": [],
+        "readout_w1": normal_init(next(keys), (C, C), C ** -0.5,
+                                  cfg.param_dtype),
+        "readout_w2": normal_init(next(keys), (C, 1), C ** -0.5,
+                                  cfg.param_dtype),
+        # invariant (many-body) readout: 5C invariants per layer
+        "readout_inv": normal_init(
+            next(keys), (cfg.n_layers * 5 * C, 1), (5 * C) ** -0.5,
+            cfg.param_dtype,
+        ),
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                # radial MLP: n_rbf -> C (per-channel edge weights)
+                "r1": normal_init(next(keys), (cfg.n_rbf, C),
+                                  cfg.n_rbf ** -0.5, cfg.param_dtype),
+                "r2": normal_init(next(keys), (C, C), C ** -0.5,
+                                  cfg.param_dtype),
+                # channel mixing of the product basis (per l, shared)
+                "mix": normal_init(next(keys), (3 * C, C),
+                                   (3 * C) ** -0.5, cfg.param_dtype),
+                "self": normal_init(next(keys), (C, C), C ** -0.5,
+                                    cfg.param_dtype),
+            }
+        )
+    return params
+
+
+def forward(params, batch, cfg: MACEConfig):
+    """batch: species [N], pos [N,3], edges [2,E], graph_id [N],
+    n_graphs int, optional edge_mask [E].  Returns per-graph energy [G]."""
+    species = batch["species"]
+    pos = batch["pos"].astype(cfg.compute_dtype)
+    src, dst = batch["edges"][0], batch["edges"][1]
+    n = species.shape[0]
+    emask = batch.get("edge_mask")
+
+    h = params["embed"][species]  # [N, C] scalar features
+    C = h.shape[-1]
+    # lift to [N, 9, C]
+    H = jnp.zeros((n, 9, C), h.dtype).at[:, 0, :].set(h)
+
+    rvec = pos[dst] - pos[src]
+    d = jnp.linalg.norm(rvec + 1e-12, axis=-1)
+    rhat = rvec / jnp.maximum(d, 1e-6)[:, None]
+    Y = real_sph_harm_l2(rhat)          # [E, 9]
+    rbf = bessel_rbf(d, cfg.n_rbf, cfg.r_cut)  # [E, n_rbf]
+    # degenerate (zero-length / self-loop) edges carry no geometric
+    # information and their SH values are basis artifacts (e.g. Y20(0) =
+    # -c): masking them is required for exact E(3) equivariance.
+    ok = (d > 1e-6).astype(Y.dtype)
+    Y = Y * ok[:, None]
+    if emask is not None:
+        Y = Y * emask[:, None]
+        rbf = rbf * emask[:, None]
+
+    all_invs = []
+    for lp in params["layers"]:
+        R = jax.nn.silu(rbf @ lp["r1"]) @ lp["r2"]  # [E, C]
+        # messages: R_c * Y_lm * h_src[0,c] + R_c * Y_l0m0 * H_src[lm,c]
+        msg = (
+            R[:, None, :] * Y[:, :, None] * H[src][:, 0:1, :]
+            + R[:, None, :] * H[src] * Y[:, 0:1, None]
+        )  # [E, 9, C]
+        A = jax.ops.segment_sum(msg, dst, num_segments=n)  # [N,9,C]
+        feats, invs = product_basis(A)
+        H = jnp.einsum("nlk,kc->nlc", feats, lp["mix"])
+        H = H + jnp.einsum("nlc,cd->nld", A, lp["self"])
+        all_invs.append(invs)
+    # readout: scalar channels + many-body invariants
+    scal = H[:, 0, :]
+    e_node = jax.nn.silu(scal @ params["readout_w1"]) @ params["readout_w2"]
+    e_node = e_node + jnp.concatenate(all_invs, -1) @ params["readout_inv"]
+    e_graph = jax.ops.segment_sum(
+        e_node[:, 0], batch["graph_id"], num_segments=batch["n_graphs"]
+    )
+    return e_graph
+
+
+def energy_loss(params, batch, cfg: MACEConfig):
+    e = forward(params, batch, cfg)
+    return jnp.mean((e - batch["targets"]) ** 2)

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity (EP-shardable).
+
+Sort-based dispatch: tokens are ranked within their routed expert, tokens
+past the capacity are dropped (their combine weight is zero), features are
+scattered into an [E, C, D] buffer, expert FFNs run as one grouped einsum,
+and outputs are combined back with the router weights.  Under pjit with
+experts sharded over "model", the scatter/gather lower to all-to-alls -
+the standard EP collective pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    n_shared: int = 0  # shared (always-on) experts, DeepSeek/Llama-4 style
+
+
+def moe_ffn(params, x, cfg: MoEConfig):
+    """x [B,S,D] -> [B,S,D].  params: wr [D,E], wi/wg [E,D,F], wo [E,F,D]
+    (+ shared_wi/wg/wo when n_shared>0); aux load-balance loss returned."""
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    import math
+
+    cap = max(1, math.ceil(n * k / e * cfg.capacity_factor))
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["wr"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, k)  # [n,k]
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): e * sum_e f_e * p_e
+    density = jnp.mean(
+        (jax.nn.one_hot(idx_k, e).sum(1) > 0).astype(jnp.float32), 0
+    )
+    aux = e * jnp.sum(density * probs.mean(0))
+
+    flat_expert = idx_k.reshape(-1)          # [n*k]
+    flat_gate = gate_k.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+
+    # rank of each routed token inside its expert
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # [n*k, e]
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1)
+    rank = jnp.take_along_axis(pos_in_e, flat_expert[:, None], 1)[:, 0]
+    keep = rank < cap
+    flat_gate = jnp.where(keep, flat_gate, 0.0)
+    slot = jnp.where(keep, flat_expert * cap + rank, e * cap)  # drop slot
+
+    # scatter tokens into [E*C(+1), D]
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[slot].set(xf[flat_tok])
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    if "wg" in params:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["wo"])  # [e,cap,d]
+
+    # gather back and combine with gates
+    flat_out = out_e.reshape(e * cap, d)
+    gathered = jnp.where(
+        keep[:, None], flat_out[jnp.clip(slot, 0, e * cap - 1)], 0.0
+    )
+    combined = jnp.zeros((n, d), xf.dtype).at[flat_tok].add(
+        gathered * flat_gate[:, None].astype(xf.dtype)
+    )
+
+    if cfg.n_shared:
+        hs = jnp.einsum("nd,df->nf", xf, params["shared_wi"])
+        if "shared_wg" in params:
+            gs = jnp.einsum("nd,df->nf", xf, params["shared_wg"])
+            hs = act_fn(cfg.act)(gs) * hs
+        else:
+            hs = act_fn(cfg.act)(hs)
+        combined = combined + jnp.einsum("nf,fd->nd", hs, params["shared_wo"])
+
+    return combined.reshape(b, s, d), aux

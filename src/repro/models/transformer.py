@@ -1,0 +1,329 @@
+"""Decoder / encoder transformer LM covering the five assigned LM archs
+(dense GQA: glm4-9b, gemma-7b, smollm-135m; MoE: llama4-maverick, olmoe).
+
+Layers are scanned (one superblock of ``moe_period`` sublayers per scan
+step) with configurable remat, so HLO size and compile time stay flat in
+depth and the activation footprint is one block deep.  Llama-4-style
+dense/MoE interleaving is the ``moe_period=2`` case: the last sublayer of
+each superblock is the MoE one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    blockwise_causal_attention,
+    decode_attention,
+    naive_causal_attention,
+)
+from .common import normal_init
+from .layers import act_fn, apply_rope, cross_entropy_loss, rms_norm
+from .moe import MoEConfig, moe_ffn
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    gated_mlp: bool = True
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    moe_period: int = 1
+    causal: bool = True
+    tie_embeddings: bool = False
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"  # full | none
+    block_q: int = 512
+    block_kv: int = 1024
+    aux_loss_weight: float = 0.01
+    logit_softcap: float = 0.0
+    loss_chunk: int = 1024  # sequence chunking of the vocab projection
+    attn_schedule: str = "triangular"  # or "full" (measured baseline)
+    batch_axes: tuple = ()  # DP mesh axes for sharding constraints
+
+    @property
+    def n_super(self) -> int:
+        assert self.n_layers % self.moe_period == 0
+        return self.n_layers // self.moe_period
+
+    def sublayer_is_moe(self, i: int) -> bool:
+        return self.moe is not None and i == self.moe_period - 1
+
+
+# ------------------------------------------------------------------ init
+def init_params(rng, cfg: TransformerConfig) -> PyTree:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    n = cfg.n_super
+    std = d ** -0.5
+    keys = iter(jax.random.split(rng, 64))
+
+    def w(shape, scale=std):
+        return normal_init(next(keys), shape, scale, cfg.param_dtype)
+
+    params: Dict[str, Any] = {
+        # d^-0.5 keeps tied-embedding logits at unit variance
+        "embed": w((cfg.vocab, d)),
+        "ln_f": jnp.ones((d,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = w((d, cfg.vocab))
+    for i in range(cfg.moe_period):
+        sub: Dict[str, Any] = {
+            "ln1": jnp.ones((n, d), cfg.param_dtype),
+            "ln2": jnp.ones((n, d), cfg.param_dtype),
+            "wq": w((n, d, h * hd)),
+            "wk": w((n, d, kv * hd)),
+            "wv": w((n, d, kv * hd)),
+            "wo": w((n, h * hd, d)),
+        }
+        if cfg.sublayer_is_moe(i):
+            m = cfg.moe
+            sub["moe"] = {
+                "wr": w((n, d, m.n_experts)),
+                "wi": w((n, m.n_experts, d, m.d_ff)),
+                "wo": w((n, m.n_experts, m.d_ff, d)),
+            }
+            if cfg.gated_mlp:
+                sub["moe"]["wg"] = w((n, m.n_experts, d, m.d_ff))
+            if m.n_shared:
+                sub["moe"]["shared_wi"] = w((n, d, m.d_ff * m.n_shared))
+                sub["moe"]["shared_wo"] = w((n, m.d_ff * m.n_shared, d))
+                if cfg.gated_mlp:
+                    sub["moe"]["shared_wg"] = w((n, d, m.d_ff * m.n_shared))
+        else:
+            sub["mlp"] = {
+                "wi": w((n, d, f)),
+                "wo": w((n, f, d)),
+            }
+            if cfg.gated_mlp:
+                sub["mlp"]["wg"] = w((n, d, f))
+        params[f"sub{i}"] = sub
+    return params
+
+
+def abstract_params(cfg: TransformerConfig) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg)
+    )
+
+
+# --------------------------------------------------------------- forward
+def _attn(x, sp, cfg: TransformerConfig, positions):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, sp["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dk->bsk", x, sp["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,dk->bsk", x, sp["wv"]).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.causal:
+        o = blockwise_causal_attention(
+            q, k, v, block_q=cfg.block_q, block_kv=cfg.block_kv,
+            schedule=cfg.attn_schedule, batch_axes=cfg.batch_axes,
+        )
+    else:
+        # bidirectional (encoder): small-S archs use the direct path
+        o = _full_bidir_attention(q, k, v)
+    o = o.reshape(b, s, h * hd)
+    return jnp.einsum("bsk,kd->bsd", o, sp["wo"])
+
+
+def _full_bidir_attention(q, k, v):
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, h // kvh, hd).astype(jnp.float32)
+    sc = jnp.einsum("bqkgd,bskd->bqgks", qg / jnp.sqrt(hd),
+                    k.astype(jnp.float32))
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bqgks,bskd->bqgkd", p, v.astype(jnp.float32))
+    return o.transpose(0, 1, 3, 2, 4).reshape(b, s, h, hd).astype(q.dtype)
+
+
+def _mlp(x, mp, cfg: TransformerConfig):
+    h = jnp.einsum("bsd,df->bsf", x, mp["wi"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, mp["wg"])
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    return jnp.einsum("bsf,fd->bsd", h, mp["wo"])
+
+
+def _superblock(x, blk, cfg: TransformerConfig, positions):
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.moe_period):
+        sp = blk[f"sub{i}"]
+        x = x + _attn(rms_norm(x, sp["ln1"]), sp, cfg, positions)
+        hnorm = rms_norm(x, sp["ln2"])
+        if cfg.sublayer_is_moe(i):
+            y, a = moe_ffn(sp["moe"], hnorm, cfg.moe)
+            aux = aux + a
+        else:
+            y = _mlp(hnorm, sp["mlp"], cfg)
+        x = x + y
+    return x, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """tokens [B,S] -> hidden [B,S,D] (pre-head), aux loss."""
+    b, s = tokens.shape
+    from .attention import constrain_batch
+    x = constrain_batch(
+        params["embed"][tokens].astype(cfg.compute_dtype), cfg.batch_axes)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    stacked = {
+        f"sub{i}": params[f"sub{i}"] for i in range(cfg.moe_period)
+    }
+
+    def block(carry, blk):
+        x, aux = carry
+        blk = jax.tree.map(lambda p: p.astype(cfg.compute_dtype), blk)
+        x, a = _superblock(x, blk, cfg, positions)
+        # keep the residual stream batch-sharded through the scan carry
+        from .attention import constrain_batch
+        x = constrain_batch(x, cfg.batch_axes)
+        return (x, aux + a), None
+
+    block_fn = block
+    if cfg.remat == "full":
+        block_fn = jax.checkpoint(block)
+    (x, aux), _ = jax.lax.scan(block_fn, (x, jnp.zeros((), jnp.float32)),
+                               stacked)
+    x = rms_norm(x, params["ln_f"].astype(cfg.compute_dtype))
+    return x, aux
+
+
+def logits_fn(params, hidden, cfg: TransformerConfig):
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", hidden, head.astype(cfg.compute_dtype)
+    )
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def lm_loss(params, batch, cfg: TransformerConfig):
+    """batch: {"tokens": [B,S], "targets": [B,S]}; next-token CE.
+
+    The [B,S,V] logits tensor is never materialized: the vocab projection
+    + CE run per sequence chunk inside a scan (151k-256k vocabs would
+    otherwise dominate the activation footprint)."""
+    hidden, aux = forward(params, batch["tokens"], cfg)
+    b, s, d = hidden.shape
+    ck = cfg.loss_chunk or s
+    ck = min(ck, s)
+    if s % ck:
+        ck = s  # fallback: un-chunked
+    nchunk = s // ck
+    hc = hidden.reshape(b, nchunk, ck, d).transpose(1, 0, 2, 3)
+    tc = batch["targets"].reshape(b, nchunk, ck).transpose(1, 0, 2)
+
+    def chunk_nll(carry, xt):
+        h, t = xt
+        logits = logits_fn(params, h, cfg).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(chunk_nll, jnp.zeros((), jnp.float32),
+                            (hc, tc))
+    loss = total / (b * s)
+    return loss + cfg.aux_loss_weight * aux
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> PyTree:
+    dtype = dtype or cfg.compute_dtype
+    kvs = {}
+    for i in range(cfg.moe_period):
+        kvs[f"sub{i}"] = {
+            "k": jnp.zeros(
+                (cfg.n_super, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                dtype,
+            ),
+            "v": jnp.zeros(
+                (cfg.n_super, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                dtype,
+            ),
+        }
+    return {"kv": kvs, "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def abstract_cache(cfg, batch, max_len, dtype=None):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """One autoregressive step: tokens [B,1] -> (logits [B,1,V], cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    pos = cache["len"]  # [B]
+    positions = pos[:, None]
+
+    stacked = {
+        f"sub{i}": {
+            "p": params[f"sub{i}"],
+            "k": cache["kv"][f"sub{i}"]["k"],
+            "v": cache["kv"][f"sub{i}"]["v"],
+        }
+        for i in range(cfg.moe_period)
+    }
+
+    def block(x, blk):
+        new_kv = {}
+        for i in range(cfg.moe_period):
+            sp = jax.tree.map(
+                lambda p: p.astype(cfg.compute_dtype), blk[f"sub{i}"]["p"]
+            )
+            kc, vc = blk[f"sub{i}"]["k"], blk[f"sub{i}"]["v"]
+            h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            xin = rms_norm(x, sp["ln1"])
+            q = jnp.einsum("bsd,dk->bsk", xin, sp["wq"]).reshape(
+                b, 1, h, hd)
+            k = jnp.einsum("bsd,dk->bsk", xin, sp["wk"]).reshape(
+                b, 1, kv, hd)
+            v = jnp.einsum("bsd,dk->bsk", xin, sp["wv"]).reshape(
+                b, 1, kv, hd)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            # write the new KV at position len (same for all rows here)
+            oh = (jnp.arange(kc.shape[1])[None, :] == pos[:, None]).astype(
+                kc.dtype
+            )  # [B,S]
+            kc = kc * (1 - oh)[..., None, None] + oh[..., None, None] * k
+            vc = vc * (1 - oh)[..., None, None] + oh[..., None, None] * v
+            o = decode_attention(q, kc, vc, pos + 1)
+            x = x + jnp.einsum(
+                "bsk,kd->bsd", o.reshape(b, 1, h * hd), sp["wo"]
+            )
+            hnorm = rms_norm(x, sp["ln2"])
+            if cfg.sublayer_is_moe(i):
+                y, _ = moe_ffn(sp["moe"], hnorm, cfg.moe)
+            else:
+                y = _mlp(hnorm, sp["mlp"], cfg)
+            x = x + y
+            new_kv[f"sub{i}"] = {"k": kc, "v": vc}
+        return x, new_kv
+
+    x, new_kvs = jax.lax.scan(block, x, stacked)
+    x = rms_norm(x, params["ln_f"].astype(cfg.compute_dtype))
+    logits = logits_fn(params, x, cfg)
+    return logits, {"kv": new_kvs, "len": cache["len"] + 1}

@@ -1,0 +1,293 @@
+"""Trip-count-aware cost extraction from post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+undercounts every scanned-layer model by ~n_layers.  This analyzer walks
+the HLO call graph instead:
+
+* flops  - every ``dot`` contributes 2 * prod(result_dims) *
+  prod(contracting_dims), multiplied by the product of enclosing while
+  trip counts (parsed from ``backend_config={"known_trip_count"...}``).
+* bytes  - XLA's fusion memory model: each *top-level* instruction of a
+  computation reads its operands and writes its result once; fusion
+  interiors are free.  Bookkeeping ops (tuple/gte/parameter/constant/
+  bitcast) are free.
+* collectives - result bytes per op kind, trip-count multiplied.
+
+This is a text-level analyzer: it is deliberately conservative and only
+needs shapes, operand names, called computations and trip counts, all of
+which are stable in HLO dumps.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?[=:]\{"n":"(\d+)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _dims(shape_txt: str) -> List[Tuple[str, List[int]]]:
+    return [
+        (dt, [int(x) for x in dims.split(",") if x])
+        for dt, dims in _ARRAY_RE.findall(shape_txt)
+    ]
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dt, dims in _dims(shape_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "line")
+
+    def __init__(self, name, shape, op, line):
+        self.name, self.shape, self.op, self.line = name, shape, op, line
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.instrs: List[Instr] = []
+        self.shapes: Dict[str, str] = {}
+
+
+def _split_shape_op(rest: str):
+    """'f32[2,3]{1,0} dot(...)' or '(s32[], f32[..]) while(...)' ->
+    (shape_text, remainder-starting-at-op)."""
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[: i + 1], rest[i + 1:]
+        return rest, ""
+    i = rest.find(" ")
+    if i < 0:
+        return rest, ""
+    return rest[:i], rest[i:]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and "{" in stripped and "->" in stripped:
+            m = _COMP_HDR_RE.match(stripped.lstrip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if stripped.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        shape, tail = _split_shape_op(rest)
+        mo = _OP_RE.match(tail)
+        if not mo:
+            continue
+        op = mo.group(1)
+        cur.shapes[name] = shape
+        cur.instrs.append(Instr(name, shape, op, line))
+    comps["__entry__"] = comps.get(entry)  # type: ignore[assignment]
+    return comps
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out = 1
+        for _, dims in _dims(ins.shape):
+            for d in dims:
+                out *= d
+        m = _CONTRACT_RE.search(ins.line)
+        contract = 1
+        if m:
+            # operand list: text between 'dot(' and ')'
+            call = ins.line.split("dot(", 1)[1]
+            ops = _OPERAND_RE.findall(call.split(")")[0])
+            if ops:
+                lhs_shape = comp.shapes.get(ops[0], "")
+                darr = _dims(lhs_shape)
+                if darr:
+                    dims = darr[0][1]
+                    for idx in m.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contract *= dims[int(idx)]
+        return 2.0 * out * contract
+
+    def _operand_bytes(self, comp: Computation, ins: Instr) -> int:
+        inner = ins.line.split(ins.op + "(", 1)
+        if len(inner) < 2:
+            return 0
+        args = inner[1].split(")")[0]
+        total = 0
+        for op_name in _OPERAND_RE.findall(args):
+            if op_name in comp.shapes:
+                total += _shape_bytes(comp.shapes[op_name])
+        return total
+
+    def comp_cost(self, name: str) -> Tuple[float, float, Dict[str, float]]:
+        """(flops, bytes, collective_bytes_by_kind) with trip counts."""
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, {})
+        flops = 0.0
+        byts = 0.0
+        coll: Dict[str, float] = {}
+        self._memo[name] = (0.0, 0.0, {})  # cycle guard
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trips = 1
+                m = _TRIP_RE.search(ins.line)
+                if m:
+                    trips = int(m.group(1))
+                body = _BODY_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                for sub in (body, cond):
+                    if sub:
+                        f, b, c = self.comp_cost(sub.group(1))
+                        flops += trips * f
+                        byts += trips * b
+                        for k, v in c.items():
+                            coll[k] = coll.get(k, 0.0) + trips * v
+                continue
+            if ins.op in ("call", "conditional", "custom-call"):
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    f, b, c = self.comp_cost(m.group(1))
+                    flops += f
+                    byts += b
+                    for k, v in c.items():
+                        coll[k] = coll.get(k, 0.0) + v
+                byts += _shape_bytes(ins.shape)
+                continue
+            if ins.op == "fusion":
+                # fused interior flops: count dots inside the fused comp
+                m = _CALLS_RE.search(ins.line)
+                fcomp = self.comps.get(m.group(1)) if m else None
+                if m:
+                    f, _, _ = self.comp_cost(m.group(1))
+                    flops += f
+                dus = None
+                if fcomp is not None:
+                    for fi in fcomp.instrs:
+                        if fi.op == "dynamic-update-slice":
+                            dus = fi
+                            break
+                if dus is not None:
+                    # in-place window update: traffic = 2x the window (the
+                    # aliased full buffer passes through untouched)
+                    upd = 0
+                    inner = dus.line.split("dynamic-update-slice(", 1)
+                    if len(inner) == 2:
+                        ops = _OPERAND_RE.findall(inner[1].split(")")[0])
+                        if len(ops) >= 2 and ops[1] in fcomp.shapes:
+                            upd = _shape_bytes(fcomp.shapes[ops[1]])
+                    res = _shape_bytes(ins.shape)
+                    byts += 2 * (upd if upd else res)
+                    continue
+                byts += _shape_bytes(ins.shape) + self._operand_bytes(
+                    comp, ins
+                )
+                continue
+            if ins.op.startswith(COLLECTIVES):
+                kind = next(k for k in COLLECTIVES if ins.op.startswith(k))
+                b = _shape_bytes(ins.shape)
+                coll[kind] = coll.get(kind, 0.0) + b
+                byts += b + self._operand_bytes(comp, ins)
+                continue
+            if ins.op == "dot":
+                flops += self._dot_flops(comp, ins)
+                byts += _shape_bytes(ins.shape) + self._operand_bytes(
+                    comp, ins
+                )
+                continue
+            if ins.op in _FREE_OPS:
+                continue
+            if ins.op == "dynamic-slice":
+                # reads only the slice (counting the full operand would
+                # charge the whole stacked-weights array per scan trip)
+                byts += 2 * _shape_bytes(ins.shape)
+                continue
+            if ins.op == "dynamic-update-slice":
+                # traffic = the updated window (read-modify-write)
+                inner = ins.line.split("dynamic-update-slice(", 1)
+                upd_bytes = 0
+                if len(inner) == 2:
+                    ops = _OPERAND_RE.findall(inner[1].split(")")[0])
+                    if len(ops) >= 2 and ops[1] in comp.shapes:
+                        upd_bytes = _shape_bytes(comp.shapes[ops[1]])
+                byts += 2 * upd_bytes
+                continue
+            # generic elementwise / copy / gather etc.
+            byts += _shape_bytes(ins.shape) + self._operand_bytes(comp, ins)
+        # fused computations' dots were counted through their callers; a
+        # fused computation reached directly contributes only dots.
+        self._memo[name] = (flops, byts, coll)
+        return self._memo[name]
+
+    def entry_cost(self) -> Tuple[float, float, Dict[str, float]]:
+        entry = self.comps.get("__entry__")
+        if entry is None:
+            return (0.0, 0.0, {})
+        return self.comp_cost(entry.name)
+
+
+def analyze(text: str) -> Dict[str, float]:
+    f, b, coll = HloCost(text).entry_cost()
+    return {
+        "flops": f,
+        "bytes": b,
+        "collective_bytes": sum(coll.values()),
+        "collectives": coll,
+    }

@@ -1,0 +1,31 @@
+import os
+import sys
+
+# Smoke tests and benches run on the single real CPU device; only
+# launch/dryrun.py sets XLA_FLAGS host-device overrides (per instructions).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import random
+from typing import List
+
+from repro.core.compile import compile_sequence
+from repro.core.graphseq import TRSeq
+from repro.data.synthetic import random_graph_sequence
+
+
+def random_db(
+    seed: int,
+    n_seq: int = 6,
+    n_steps: int = 4,
+    n_v: int = 4,
+    n_vl: int = 2,
+    n_el: int = 2,
+) -> List[TRSeq]:
+    rng = random.Random(seed)
+    return [
+        compile_sequence(
+            random_graph_sequence(rng, n_steps=n_steps, n_v=n_v,
+                                  n_vl=n_vl, n_el=n_el)
+        )
+        for _ in range(n_seq)
+    ]

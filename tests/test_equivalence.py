@@ -1,0 +1,36 @@
+"""Property test: GTRACE-RS output == postfiltered GTRACE output.
+
+This is the paper's central correctness claim (Sec. 3): traversing the
+reverse-search tree enumerates exactly the set of relevant FTSs that the
+original GTRACE obtains by mining all FTSs and filtering, with identical
+supports.
+"""
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_db
+from repro.core.gtrace import mine_gtrace
+from repro.core.reverse_search import mine_gtrace_rs
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 100_000),
+    sigma=st.integers(2, 3),
+    n_seq=st.integers(4, 8),
+)
+def test_rs_equals_filtered_gtrace(seed, sigma, n_seq):
+    db = random_db(seed, n_seq=n_seq, n_steps=5, n_v=5, n_vl=2, n_el=2)
+    gt = mine_gtrace(db, sigma, max_len=5)
+    rs = mine_gtrace_rs(db, sigma, max_len=5)
+    assert gt.relevant() == rs.patterns
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_rs_enumeration_is_never_larger(seed):
+    """RS expands at most as many nodes as GT (usually far fewer):
+    the speedup mechanism of the paper."""
+    db = random_db(seed, n_seq=6, n_steps=5, n_v=5, n_vl=2, n_el=3)
+    gt = mine_gtrace(db, 2, max_len=5)
+    rs = mine_gtrace_rs(db, 2, max_len=5)
+    assert rs.n_enumerated <= gt.n_enumerated

@@ -1,0 +1,95 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype/mode sweeps + real data."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from conftest import random_db
+from repro.kernels.match_count.ops import match_signatures_kernel
+from repro.mining.encoding import (
+    encode_db,
+    encode_embeddings,
+    encode_pattern_trs,
+)
+from repro.mining.engine import match_signatures_ref
+
+
+def _random_inputs(rng, E, G, T, NI, NV, P, n_labels=5):
+    tokens = np.zeros((G, T, 6), np.int32)
+    tokens[..., 0] = rng.integers(0, 6, (G, T))
+    tokens[..., 1] = rng.integers(0, 8, (G, T))
+    tokens[..., 2] = np.where(
+        tokens[..., 0] >= 3, rng.integers(0, 8, (G, T)), -1
+    )
+    # avoid self loops for edge TRs
+    tokens[..., 2] = np.where(
+        (tokens[..., 0] >= 3) & (tokens[..., 2] == tokens[..., 1]),
+        (tokens[..., 2] + 1) % 8, tokens[..., 2],
+    )
+    tokens[..., 3] = rng.integers(-1, n_labels, (G, T))
+    tokens[..., 4] = np.sort(rng.integers(0, 6, (G, T)), axis=1)
+    tokens[..., 5] = rng.integers(0, 2, (G, T))
+    gid = rng.integers(0, G, (E,)).astype(np.int32)
+    phi = np.sort(rng.integers(0, 6, (E, NI)), axis=1).astype(np.int32)
+    phi[:, 2:] = 0x3FFFFFF  # pretend 2 itemsets
+    psi = rng.integers(-2, 8, (E, NV)).astype(np.int32)
+    # make psi rows injective where >= 0
+    for e in range(E):
+        seen = set()
+        for v in range(NV):
+            if psi[e, v] >= 0:
+                if psi[e, v] in seen:
+                    psi[e, v] = -2
+                else:
+                    seen.add(int(psi[e, v]))
+    valid = rng.integers(0, 2, (E,)).astype(np.int32)
+    existing = np.full((P, 5), -9, np.int32)
+    return tokens, gid, phi, psi, valid, existing
+
+
+@pytest.mark.parametrize("E,T", [(1, 1), (3, 7), (64, 128), (65, 129),
+                                 (128, 60), (17, 300)])
+@pytest.mark.parametrize("mode", [0, 1, 2, 3])
+def test_kernel_matches_ref_random(E, T, mode):
+    rng = np.random.default_rng(E * 1000 + T + mode)
+    G, NI, NV, P = 4, 8, 8, 16
+    tokens, gid, phi, psi, valid, existing = _random_inputs(
+        rng, E, G, T, NI, NV, P
+    )
+    args = [jnp.asarray(x) for x in (tokens, gid, phi, psi, valid, existing)]
+    scal = [jnp.int32(3), jnp.int32(2), jnp.int32(mode)]
+    ref = match_signatures_ref(*args, *scal)
+    ker = match_signatures_kernel(*args, *scal, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+@pytest.mark.parametrize("block_e,block_t", [(8, 16), (64, 128), (16, 256)])
+def test_kernel_block_shapes(block_e, block_t):
+    rng = np.random.default_rng(0)
+    tokens, gid, phi, psi, valid, existing = _random_inputs(
+        rng, 40, 4, 100, 8, 8, 16
+    )
+    args = [jnp.asarray(x) for x in (tokens, gid, phi, psi, valid, existing)]
+    scal = [jnp.int32(2), jnp.int32(1), jnp.int32(2)]
+    ref = match_signatures_ref(*args, *scal)
+    ker = match_signatures_kernel(
+        *args, *scal, block_e=block_e, block_t=block_t, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+def test_kernel_on_real_mining_data():
+    """Kernel vs ref on a scan the real miner would issue."""
+    db = random_db(13, n_seq=8, n_steps=5, n_v=5)
+    tdb = encode_db(db)
+    embs = [(g, (), ()) for g in range(len(db))]
+    gid, phi, psi = encode_embeddings(embs, 16, 12)
+    valid = np.ones((len(embs),), np.int32)
+    existing = encode_pattern_trs((), 64)
+    args = [jnp.asarray(x) for x in (tdb.tokens, gid, phi, psi, valid,
+                                     existing)]
+    for mode in (0, 3):
+        scal = [jnp.int32(0), jnp.int32(0), jnp.int32(mode)]
+        ref = match_signatures_ref(*args, *scal)
+        ker = match_signatures_kernel(*args, *scal, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+        assert (np.asarray(ref) >= 0).any()  # non-trivial scan

@@ -1,0 +1,111 @@
+"""Behaviour tests for GTRACE-RS reverse search (the paper's algorithm)."""
+import random
+
+import pytest
+
+from conftest import random_db
+from repro.core.canonical import canonical_form
+from repro.core.containment import support
+from repro.core.graphseq import (
+    LabeledGraph,
+    TRType,
+    edge_tr,
+    pattern_from_lists,
+    pattern_length,
+)
+from repro.core.graphseq import vertex_tr
+from repro.core.gtrace import mine_gtrace
+from repro.core.reverse_search import mine_gtrace_rs, parent
+from repro.core.union_graph import is_relevant
+
+
+def fig8_s6():
+    A, B, C, dash = 10, 11, 12, 0
+    return pattern_from_lists([
+        [vertex_tr(TRType.VI, 1, A)],
+        [vertex_tr(TRType.VI, 2, B)],
+        [vertex_tr(TRType.VI, 3, C)],
+        [edge_tr(TRType.EI, 1, 2, dash), edge_tr(TRType.EI, 2, 3, dash)],
+        [edge_tr(TRType.ED, 2, 3)],
+    ])
+
+
+def test_fig10_parent_chain():
+    """The parent chain of s_6 follows Fig. 10: three P1 steps, one P2,
+    two P3, reaching the root; every node is relevant."""
+    cur = canonical_form(fig8_s6())
+    lengths = [pattern_length(cur)]
+    while cur:
+        assert is_relevant(cur)
+        cur = parent(cur)
+        assert cur is not None
+        lengths.append(pattern_length(cur))
+    assert lengths == [6, 5, 4, 3, 2, 1, 0]
+
+
+def test_parent_shrinks_by_one_and_stays_relevant():
+    db = random_db(42, n_seq=8, n_steps=5, n_v=5)
+    rs = mine_gtrace_rs(db, 2, max_len=5)
+    for p in rs.patterns:
+        q = parent(p)
+        assert q is not None
+        assert pattern_length(q) == pattern_length(p) - 1
+        assert is_relevant(q)
+        if q:  # anti-monotone support along the tree
+            assert rs.patterns[q] >= rs.patterns[p]
+
+
+def build_fig8_db():
+    """Two graph sequences realizing the Fig. 8 evolution (plus noise in
+    the second one)."""
+    A, B, C, dash = 10, 11, 12, 0
+
+    def seq(extra):
+        g = LabeledGraph()
+        out = []
+        g.add_vertex(1, A); out.append(g.copy())
+        g.add_vertex(2, B); out.append(g.copy())
+        g.add_vertex(3, C)
+        if extra:
+            g.add_vertex(9, A)
+        out.append(g.copy())
+        g.add_edge(1, 2, dash); g.add_edge(2, 3, dash); out.append(g.copy())
+        g.remove_edge(2, 3); out.append(g.copy())
+        return out
+
+    from repro.core.compile import compile_sequence
+    return [compile_sequence(seq(False)), compile_sequence(seq(True))]
+
+
+def test_paper_sec23_example():
+    """Sec. 2.3: GTRACE must enumerate the irrelevant intermediates
+    s_2..s_4 to reach s_6; GTRACE-RS enumerates only the relevant ones."""
+    db = build_fig8_db()
+    gt = mine_gtrace(db, 2, max_len=6)
+    rs = mine_gtrace_rs(db, 2, max_len=6)
+
+    s6 = canonical_form(fig8_s6())
+    assert s6 in rs.patterns and rs.patterns[s6] == 2
+    # irrelevant s_2 = <vi[1,A] vi[2,B]> is an FTS but not an rFTS
+    s2 = canonical_form(pattern_from_lists(
+        [[vertex_tr(TRType.VI, 1, 10)], [vertex_tr(TRType.VI, 2, 11)]]))
+    assert s2 in gt.patterns
+    assert s2 not in rs.patterns
+    # every RS pattern is relevant; GT finds strictly more patterns
+    assert all(is_relevant(p) for p in rs.patterns)
+    assert gt.n_enumerated > rs.n_enumerated
+    assert gt.relevant() == rs.patterns
+
+
+def test_supports_match_oracle():
+    db = random_db(7, n_seq=6, n_steps=4)
+    rs = mine_gtrace_rs(db, 2, max_len=4)
+    for p, s in rs.patterns.items():
+        assert support(p, db) == s
+
+
+def test_rs_enumerates_only_relevant():
+    db = random_db(3, n_seq=6, n_steps=5, n_v=5, n_vl=3, n_el=2)
+    rs = mine_gtrace_rs(db, 2, max_len=5)
+    assert all(is_relevant(p) for p in rs.patterns)
+    assert all(is_relevant(p) and p for p in rs.patterns)
