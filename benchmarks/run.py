@@ -10,7 +10,7 @@ import time
 
 def main() -> None:
     from . import bench_kernel, bench_roofline, bench_scaling
-    from . import bench_table4, bench_table5
+    from . import bench_serving, bench_table4, bench_table5
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -19,6 +19,7 @@ def main() -> None:
         (bench_table5, "table5 (PM vs GT, Enron-like data)"),
         (bench_scaling, "mining scaling"),
         (bench_kernel, "match kernel micro"),
+        (bench_serving, "pattern serving vs host oracle"),
         (bench_roofline, "roofline table from dry-run"),
     ):
         print(f"# --- {tag} ---", file=sys.stderr)

@@ -3,8 +3,10 @@
 mined for frequent interaction patterns; the mined pattern ids become
 extra context features scored alongside the BERT4Rec session encoder.
 
-This is the honest integration point between the paper's technique and
-the recsys architecture (DESIGN.md §Arch-applicability).
+Mine-then-serve end-to-end: the mined bank is compiled into a
+PatternServer and the per-session pattern features come from batched
+device containment queries (repro.serving) instead of the per-sequence
+host backtracker.
 
     PYTHONPATH=src python examples/recsys_patterns.py
 """
@@ -18,11 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compile import compile_sequence
-from repro.core.containment import contains
 from repro.core.graphseq import LabeledGraph, pattern_str
 from repro.mining.driver import AcceleratedMiner
 from repro.models import bert4rec as b4r
 from repro.models.embedding import embedding_bag
+from repro.serving import PatternServer, compile_bank
 
 
 def session_to_graphseq(items, rng, n_cats=5):
@@ -55,18 +57,22 @@ def main():
 
     miner = AcceleratedMiner(db)
     res = miner.mine_rs(min_support=12, max_len=4)
-    patterns = sorted(res.patterns.items(), key=lambda kv: -kv[1])[:8]
-    print(f"mined {len(res.patterns)} session patterns; top:")
-    for p, sup in patterns:
-        print(f"  [{sup:3d}] {pattern_str(p)}")
 
-    # pattern-id features: which frequent patterns each session contains
-    feats = np.zeros((len(db), len(patterns)), np.float32)
-    for i, s in enumerate(db):
-        for j, (p, _) in enumerate(patterns):
-            feats[i, j] = contains(p, s)
+    # mine-then-serve: compile the strongest rFTSs into a pattern bank
+    # and answer "which patterns does each session contain?" as one
+    # batched device query (repro.serving)
+    bank = compile_bank(res, top=8)
+    srv = PatternServer(bank, topk=8)
+    print(f"mined {len(res.patterns)} session patterns; serving top "
+          f"{bank.n_patterns}:")
+    for pid in range(bank.n_patterns):
+        print(f"  [{bank.support[pid]:3d}] "
+              f"{pattern_str(bank.patterns[pid])}")
+
+    results = srv.query(db)
+    feats = np.stack([r.contained for r in results]).astype(np.float32)
     print(f"\npattern-feature matrix: {feats.shape}, "
-          f"density {feats.mean():.2f}")
+          f"density {feats.mean():.2f}, server stats {srv.stats}")
 
     # embed the pattern-id bags alongside the BERT4Rec session encoding
     cfg = b4r.Bert4RecConfig(name="demo", n_items=64, seq_len=8,
@@ -80,7 +86,7 @@ def main():
 
     # EmbeddingBag over each session's pattern ids (the recsys substrate)
     pat_table = jax.random.normal(jax.random.PRNGKey(1),
-                                  (len(patterns), cfg.d_model)) * 0.1
+                                  (bank.n_patterns, cfg.d_model)) * 0.1
     nz = np.nonzero(feats)
     pat_emb = embedding_bag(
         pat_table, jnp.asarray(nz[1], jnp.int32),

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification, reproducible from a clean checkout:
+#   pip install -r requirements-dev.txt   (optional deps stay optional)
+#   scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,35 @@
+"""jax version-compatibility shims (leaf module: importable from any
+layer without cycles).
+
+Covers the 0.4 -> 0.5+ API moves used in this repo: ``shard_map``'s
+promotion out of jax.experimental (with the ``check_rep`` ->
+``check_vma`` kwarg rename happening separately) and the ``set_mesh``
+context manager.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions."""
+    if hasattr(jax, "shard_map"):
+        params = inspect.signature(jax.shard_map).parameters
+        kw = "check_vma" if "check_vma" in params else "check_rep"
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{kw: False})
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def set_mesh_compat(mesh):
+    """jax.set_mesh context across versions (pre-0.5 shard_map takes the
+    mesh explicitly, so the context is a no-op)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext()

@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compile for real only on TPU.
+
+    Off-TPU backends (cpu, gpu) execute the kernel body through the
+    interpreter so the same call sites validate everywhere; on TPU the
+    kernel is compiled (interpret would silently serialize the hot loop).
+    """
+    return jax.default_backend() != "tpu"

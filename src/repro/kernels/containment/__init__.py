@@ -1,0 +1,6 @@
+"""Containment-step kernel: the per-step embedding-join predicate of the
+serving path (repro.serving.batch).  Same layout as match_count: ref.py is
+the pure-jnp oracle, containment.py the Pallas TPU kernel, ops.py the
+jitted public wrapper."""
+from .ops import contain_step_kernel  # noqa: F401
+from .ref import contain_step_core  # noqa: F401

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel for the batched containment step (the serving hot
+loop).
+
+One query step evaluates the embedding-join predicate for every
+(cell g, frontier row e, window token t) triple, where a *cell* is one
+(sequence, pattern) pair of the serving batch - the flattened
+sequences x patterns grid (dense, or prescreen-compacted to the
+surviving pairs, see repro.serving.batch).  Per cell the step touches
+its [Tm, 6] token window, its [E, NV] psi frontier and its [E, 8] step
+table; E (frontier capacity) and Tm (token-window width) are small
+statics, so the kernel grids over cells only and keeps whole cells in
+VMEM - the [bG, E, Tm, NV] injectivity broadcasts live in VMEM/VREGs
+instead of HBM.
+
+Tiling: grid (G/bG,); per grid step the kernel touches
+  tok block   [bG, Tm, 6]  int32
+  psi/srow    [bG, E, NV], [bG, E, 8]
+  out         [bG, E, Tm]  int32
+Default bG=64 with E,Tm <= 32 keeps the working set well under 1 MB of
+VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import default_interpret
+from .ref import contain_step_core
+
+
+def _kernel(tok_ref, psi_ref, srow_ref, out_ref):
+    out_ref[...] = contain_step_core(
+        tok_ref[...], psi_ref[...], srow_ref[...]
+    )
+
+
+def contain_step_blocked(
+    tok,        # [G, Tm, 6] int32 (per-cell token window)
+    psi,        # [G, E, NV] int32
+    srow,       # [G, E, 8] int32
+    *,
+    block_g: int = 64,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = default_interpret()
+    G, Tm, _ = tok.shape
+    _, E, NV = psi.shape
+    Gp = -(-G // block_g) * block_g
+    if Gp != G:
+        # zero padding gives token valid=0 / row_valid=0 -> no match bits
+        tok = jnp.pad(tok, ((0, Gp - G), (0, 0), (0, 0)))
+        psi = jnp.pad(psi, ((0, Gp - G), (0, 0), (0, 0)))
+        srow = jnp.pad(srow, ((0, Gp - G), (0, 0), (0, 0)))
+    grid = (Gp // block_g,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_g, Tm, 6), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_g, E, NV), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_g, E, 8), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_g, E, Tm), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Gp, E, Tm), jnp.int32),
+        interpret=interpret,
+    )(
+        tok.astype(jnp.int32),
+        psi.astype(jnp.int32),
+        srow.astype(jnp.int32),
+    )
+    return out[:G]

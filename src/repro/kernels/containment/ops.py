@@ -1,0 +1,25 @@
+"""Jitted public wrapper for the containment-step kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .containment import contain_step_blocked
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+def contain_step_kernel(
+    tok,        # [G, Tm, 6] int32 (per-cell token window)
+    psi,        # [G, E, NV] int32
+    srow,       # [G, E, 8] int32
+    *,
+    block_g: int = 64,
+    interpret: bool | None = None,
+):
+    """Drop-in replacement for ``contain_step_core`` as used by
+    repro.serving.batch (``interpret=None`` auto-selects: compiled on
+    TPU, interpreter elsewhere)."""
+    return contain_step_blocked(
+        tok, psi, srow, block_g=block_g, interpret=interpret,
+    )

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import default_interpret
 from .ref import match_core
 
 
@@ -53,8 +54,10 @@ def match_signatures_blocked(
     *,
     block_e: int = 64,
     block_t: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    if interpret is None:
+        interpret = default_interpret()
     E, T, _ = tok_e.shape
     NI, NV, P = phi.shape[1], psi.shape[1], existing.shape[0]
     Ep = -(-E // block_e) * block_e

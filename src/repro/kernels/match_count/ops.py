@@ -25,11 +25,12 @@ def match_signatures_kernel(
     *,
     block_e: int = 64,
     block_t: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Drop-in replacement for repro.mining.engine.match_signatures that
-    runs the match predicate as a Pallas kernel (interpret=True executes
-    the kernel body on CPU for validation; on TPU pass interpret=False)."""
+    runs the match predicate as a Pallas kernel (``interpret=None``
+    auto-selects from the backend: compiled on TPU, interpreter
+    elsewhere - real TPU runs must not silently take the slow path)."""
     tok_e = tokens[gid]
     return match_signatures_blocked(
         tok_e, phi, psi, emb_valid, existing,

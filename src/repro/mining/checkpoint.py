@@ -14,11 +14,35 @@ import os
 import tempfile
 from typing import Dict, List, Tuple
 
+import zlib
+
 import msgpack
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
 
 from ..core.enumerate_host import Emb
 from ..core.graphseq import Pattern, TR, TRType
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(data: bytes) -> bytes:
+    if data[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(data)
+    return zlib.decompress(data)
 
 
 def _pattern_to_wire(p: Pattern):
@@ -56,7 +80,7 @@ def save_state(
         ],
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    data = zstandard.ZstdCompressor(level=3).compress(raw)
+    data = _compress(raw)
     d = os.path.dirname(os.path.abspath(path)) or "."
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, prefix=".ckpt-")
@@ -73,7 +97,7 @@ def save_state(
 
 def load_state(path: str):
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     assert payload["version"] == 1
     patterns = {

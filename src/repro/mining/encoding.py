@@ -75,8 +75,8 @@ def encode_db(db: Sequence[TRSeq], pad_to: int | None = None,
     tokens[..., 2] = NO_VERTEX
     tokens[..., 3] = NO_LABEL
     for g, row in enumerate(rows):
-        for t, tr in enumerate(row):
-            tokens[g, t] = tr
+        if row:
+            tokens[g, : len(row)] = np.asarray(row, dtype=np.int32)
     n_itemsets = np.array(
         [len(s) for s in db] + [0] * (G - len(rows)), dtype=np.int32
     )

@@ -50,8 +50,13 @@ def constrain_batch(x, batch_axes, dim: int = 0):
 
 def _axes_size(axes):
     import numpy as np
-    mesh = jax.sharding.get_abstract_mesh()
     try:
+        if hasattr(jax.sharding, "get_abstract_mesh"):
+            mesh = jax.sharding.get_abstract_mesh()
+        else:  # pre-0.5: the thread-resources physical mesh
+            from jax._src import mesh as _mesh_lib
+
+            mesh = _mesh_lib.thread_resources.env.physical_mesh
         return int(np.prod([mesh.shape[a] for a in axes]))
     except Exception:
         return 1 << 30  # unknown mesh: skip constraint

@@ -277,9 +277,10 @@ def make_sharded_serve(cfg: Bert4RecConfig, mesh, dp_axes):
         },
         P(dp_dim, None),
     )
-    fn = jax.shard_map(
-        local, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(dp_dim, None), P(dp_dim, None)), check_vma=False,
+    from ..compat import shard_map_compat
+
+    fn = shard_map_compat(
+        local, mesh, in_specs, (P(dp_dim, None), P(dp_dim, None))
     )
 
     def serve(params, batch):

@@ -1,0 +1,39 @@
+"""Query-time pattern serving: from ``MiningResult`` to production
+containment queries.
+
+Mining (repro.mining) produces the rFTS bank; this package answers the
+deployment-side question - "which mined patterns does this incoming
+graph sequence contain?" - as a batched device computation instead of a
+per-sequence host backtrack.
+
+Module map:
+
+* ``bank.py``    - compile a ``MiningResult`` into a packed pattern bank
+                   (per-pattern int32 step programs + support/metadata
+                   rows) and canonical sequence fingerprints.
+* ``batch.py``   - the jitted embedding-join scan over
+                   (sequence, pattern) cells: dense ``batch_contains``,
+                   prescreen-compacted ``pair_contains``, the sound
+                   counts prescreen, inverted token index, frontier
+                   compaction and overflow flags; delegates the per-step
+                   predicate to ``repro.kernels.containment`` (Pallas
+                   kernel or jnp oracle).
+* ``server.py``  - ``PatternServer``: request batching into pow-2
+                   buckets, prescreen + pair join, fingerprint-keyed LRU
+                   cache, support-weighted top-k scoring, host-oracle
+                   fallback for overflow cells (results always exactly
+                   match ``core.containment``).
+* ``sharded.py`` - shard-by-pattern / shard-by-sequence serving step for
+                   device meshes (zero-collective shard_map).
+"""
+from .bank import PatternBank, compile_bank, sequence_fingerprint  # noqa: F401
+from .batch import (  # noqa: F401
+    batch_contains,
+    index_and_prescreen,
+    max_key_bucket,
+    pair_contains,
+    pair_contains_indexed,
+    prescreen_counts,
+)
+from .server import PatternServer, QueryResult  # noqa: F401
+from .sharded import make_serving_step  # noqa: F401

@@ -1,0 +1,183 @@
+"""Pattern bank: a ``MiningResult`` compiled for query-time containment.
+
+Each mined rFTS becomes a fixed-shape *step program*: its canonical
+itemsets in order, TRs sorted within each itemset, one int32 row per TR.
+Replaying the program against a data sequence with the embedding join
+(repro.serving.batch) grows exactly the prefix embeddings the host
+oracle backtracks over, so "frontier non-empty after the last step" is
+the Def-4 containment test.
+
+Step row layout (``STEP_FIELDS`` columns, int32):
+  0 type, 1 pu1, 2 pu2 (0 for vertex TRs), 3 label,
+  4 new_itemset (1 = first TR of its itemset), 5 itemset index,
+  6 step_valid (0 = padding row),
+  7 token key = type * n_label_keys + label + 1 (the inverted-index
+    bucket the step's candidate tokens live in, see batch.py)
+
+Banks also carry per-pattern metadata rows (support, #steps, #itemsets,
+#vertices, valid flag) used for top-k scoring and shard-by-pattern
+serving (see sharded.py), plus the per-pattern token-key requirement
+counts ``req`` [P, 6*n_label_keys] that drive the server's
+necessary-condition prescreen: psi injectivity + strictly increasing phi
+force distinct pattern TRs onto distinct data tokens, so a sequence can
+only contain a pattern if it has at least ``req[p, k]`` tokens of every
+key k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Mapping, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.canonical import canonical_code, canonical_form
+from ..core.graphseq import Pattern, TRSeq, pattern_length, pattern_vertices
+from ..core.gtrace import MiningResult
+
+STEP_FIELDS = 8
+
+
+@dataclasses.dataclass
+class PatternBank:
+    steps: np.ndarray          # [P, L, STEP_FIELDS] int32
+    support: np.ndarray        # [P] int32 (0 on padding rows)
+    n_steps: np.ndarray        # [P] int32
+    n_itemsets: np.ndarray     # [P] int32
+    n_vertices: np.ndarray     # [P] int32
+    pattern_valid: np.ndarray  # [P] int32 (0 = padding row)
+    req: np.ndarray            # [P, 6*n_label_keys] int32 prescreen rows
+    patterns: List[Pattern]    # the n_patterns real patterns, bank order
+    nv: int                    # max vertices over the bank (psi width)
+    n_label_keys: int          # label slots per TR type (max label + 2)
+
+    @property
+    def n_patterns(self) -> int:
+        return len(self.patterns)
+
+    @property
+    def n_rows(self) -> int:
+        return self.steps.shape[0]
+
+    @property
+    def max_steps(self) -> int:
+        return self.steps.shape[1]
+
+    def shard(self, n_shards: int) -> List["PatternBank"]:
+        """Split by pattern rows into ``n_shards`` equal banks (row count
+        must divide; use ``pad_patterns_to`` at compile time)."""
+        P = self.n_rows
+        assert P % n_shards == 0, (P, n_shards)
+        loc = P // n_shards
+        out = []
+        for i in range(n_shards):
+            sl = slice(i * loc, (i + 1) * loc)
+            n_real = int(self.pattern_valid[sl].sum())
+            out.append(PatternBank(
+                steps=self.steps[sl],
+                support=self.support[sl],
+                n_steps=self.n_steps[sl],
+                n_itemsets=self.n_itemsets[sl],
+                n_vertices=self.n_vertices[sl],
+                pattern_valid=self.pattern_valid[sl],
+                req=self.req[sl],
+                patterns=self.patterns[i * loc : i * loc + n_real],
+                nv=self.nv,
+                n_label_keys=self.n_label_keys,
+            ))
+        return out
+
+
+def pattern_steps(
+    p: Pattern, n_label_keys: int
+) -> List[Tuple[int, ...]]:
+    """The step program of one canonical pattern."""
+    rows = []
+    for i, itemset in enumerate(p):
+        for t_i, tr in enumerate(sorted(itemset)):
+            pu2 = 0 if tr.is_vertex else tr.u2
+            key = int(tr.type) * n_label_keys + tr.label + 1
+            rows.append((int(tr.type), tr.u1, pu2, tr.label,
+                         int(t_i == 0), i, 1, key))
+    return rows
+
+
+def compile_bank(
+    result: Union[MiningResult, Mapping[Pattern, int]],
+    *,
+    max_steps: int | None = None,
+    pad_patterns_to: int | None = None,
+    min_support: int = 0,
+    top: int | None = None,
+) -> PatternBank:
+    """Pack mined patterns (canonicalized) into a PatternBank.
+
+    Patterns are ordered by (-support, canonical code) so the bank layout
+    is deterministic; ``top`` keeps only the strongest patterns and
+    ``pad_patterns_to`` rounds the row count up (padding rows have
+    ``pattern_valid=0`` and never report containment).
+    """
+    items = result.patterns if isinstance(result, MiningResult) else result
+    chosen = [
+        (canonical_form(p), int(s))
+        for p, s in items.items()
+        if len(p) > 0 and s >= min_support
+    ]
+    chosen.sort(key=lambda ps: (-ps[1], canonical_code(ps[0])))
+    if top is not None:
+        chosen = chosen[:top]
+    patterns = [p for p, _ in chosen]
+    max_label = max(
+        (tr.label for p in patterns for s in p for tr in s), default=-1
+    )
+    n_label_keys = max_label + 2  # labels -1..max_label
+    progs = [pattern_steps(p, n_label_keys) for p in patterns]
+    L = max((len(r) for r in progs), default=1)
+    if max_steps is not None:
+        assert max_steps >= L, (max_steps, L)
+        L = max_steps
+    P = len(patterns)
+    rows = P
+    if pad_patterns_to is not None:
+        assert pad_patterns_to >= P, (pad_patterns_to, P)
+        rows = pad_patterns_to
+    rows = max(rows, 1)
+    steps = np.zeros((rows, max(L, 1), STEP_FIELDS), dtype=np.int32)
+    for pi, prog in enumerate(progs):
+        for si, row in enumerate(prog):
+            steps[pi, si] = row
+    meta = {
+        "support": [s for _, s in chosen],
+        "n_steps": [len(r) for r in progs],
+        "n_itemsets": [len(p) for p in patterns],
+        "n_vertices": [len(pattern_vertices(p)) for p in patterns],
+        "pattern_valid": [1] * P,
+    }
+    pad = rows - P
+    arrays = {
+        k: np.array(v + [0] * pad, dtype=np.int32) for k, v in meta.items()
+    }
+    req = np.zeros((rows, 6 * n_label_keys), dtype=np.int32)
+    for pi, prog in enumerate(progs):
+        for row in prog:
+            req[pi, row[7]] += 1
+    nv = int(arrays["n_vertices"].max(initial=0))
+    assert all(pattern_length(p) <= steps.shape[1] for p in patterns)
+    return PatternBank(steps=steps, patterns=patterns, nv=max(nv, 1),
+                       req=req, n_label_keys=n_label_keys, **arrays)
+
+
+def sequence_fingerprint(s: TRSeq) -> str:
+    """Cache key for a data sequence: blake2b over a canonical byte
+    encoding (TRs sorted within each itemset, empty itemsets dropped -
+    they can never host a pattern itemset, so containment is invariant).
+    Vertex IDs enter raw; renaming-invariant fingerprints are a
+    follow-on (see ROADMAP)."""
+    h = hashlib.blake2b(digest_size=16)
+    for itemset in s:
+        if not itemset:
+            continue
+        for tr in sorted(itemset):
+            h.update(b"%d,%d,%d,%d;" % (tr.type, tr.u1, tr.u2, tr.label))
+        h.update(b"|")
+    return h.hexdigest()

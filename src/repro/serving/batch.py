@@ -1,0 +1,387 @@
+"""Batched on-device containment: TRSeq batch x pattern bank -> bool.
+
+The Def-4 containment test is replayed as an *embedding join*: per
+(sequence, pattern) cell we scan the pattern's step program (bank.py)
+and maintain a fixed-capacity frontier of partial embeddings (phi over
+claimed data itemsets, psi over bound data vertices).  One step
+evaluates the match predicate for every
+(frontier row x window token x orientation) candidate - the containment
+kernel or its jnp oracle - then compacts the accepted candidates back
+into the ``emax`` frontier slots.  The pattern is contained iff its
+frontier is non-empty after its last step.
+
+Three query-time reductions keep the join off the B*P*T dense wall:
+
+* **inverted token index** - tokens are bucketed per sequence by
+  (type, label) key; a step only ever scans its own bucket, a ``tmax``
+  window instead of all T tokens,
+* **counts prescreen** (``prescreen_counts``) - psi injectivity +
+  strictly increasing phi force distinct pattern TRs onto distinct data
+  tokens, so ``counts[b] >= bank.req[p]`` (per key) is a sound
+  necessary condition; the server joins only surviving pairs
+  (``pair_contains``), typically a small fraction,
+* **sort compaction** - frontier selection is "first emax accepted
+  candidates", computed with one small sort per cell (top_k is an order
+  of magnitude slower on CPU backends).
+
+Exactness: every kept embedding is a genuine prefix embedding, so
+``contained=True`` is always exact - truncation (frontier or token
+window) can only lose matches, and any step that may have lost one sets
+the cell's ``overflow`` flag.  Only ``overflow & ~contained`` cells are
+undecided; the server re-checks just those against the host oracle.
+
+The whole scan is one jitted program (the step loop unrolls - L is
+small), so a serving step costs L kernel launches regardless of bank
+size, and shapes are static per (batch bucket, bank) pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.containment.containment import contain_step_blocked
+from ..kernels.containment.ref import contain_step_core
+from ..mining.encoding import PAD_PHI, PAD_PSI
+
+
+def token_keys_np(tokens: np.ndarray, n_label_keys: int) -> np.ndarray:
+    """Host mirror of the device key computation ([B,T] int, 6*NL =
+    out-of-bank dump key)."""
+    NL = n_label_keys
+    ty, lab, val = tokens[..., 0], tokens[..., 3], tokens[..., 5]
+    lab1 = lab + 1
+    ok = (val > 0) & (lab1 >= 0) & (lab1 < NL)
+    return np.where(ok, ty * NL + lab1, 6 * NL)
+
+
+def max_key_bucket(tokens: np.ndarray, n_label_keys: int) -> int:
+    """Largest same-key token bucket in the batch: the exact ``tmax``
+    (no window overflow).  Host-side helper for callers of the jitted
+    entry points."""
+    key = token_keys_np(np.asarray(tokens), n_label_keys)
+    K = 6 * n_label_keys
+    B = key.shape[0]
+    rowed = (key + np.arange(B)[:, None] * (K + 1)).ravel()
+    rowed = rowed[(key < K).ravel()]
+    if not rowed.size:
+        return 1
+    return max(int(np.bincount(rowed).max()), 1)
+
+
+def build_token_index(tokens, *, n_label_keys: int):
+    """[B,T,6] -> (order [B,T], start [B,K], count [B,K]); bucket k of
+    sequence b is order[b, start[b,k] : start[b,k]+count[b,k]].  Tokens
+    whose label falls outside the bank's label space go to a dump bucket
+    - they can never match a bank step."""
+    NL = n_label_keys
+    K = 6 * NL
+    B, T, _ = tokens.shape
+    ty = tokens[..., 0]
+    lab1 = tokens[..., 3] + 1
+    ok = (tokens[..., 5] > 0) & (lab1 >= 0) & (lab1 < NL)
+    key = jnp.where(ok, ty * NL + lab1, K).astype(jnp.int32)
+    # composite sort key makes the order unique hence fully deterministic
+    t_ids = jnp.arange(T, dtype=jnp.int32)
+    order = jnp.argsort(key * T + t_ids[None, :], axis=1)
+    kcol = jnp.arange(K, dtype=jnp.int32)
+    count = (key[:, :, None] == kcol[None, None, :]).sum(1)
+    start = jnp.cumsum(count, -1) - count
+    return order.astype(jnp.int32), start.astype(jnp.int32), \
+        count.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_label_keys",))
+def prescreen_counts(tokens, req, *, n_label_keys: int):
+    """Sound necessary condition: possible[b,p] = counts_b >= req_p
+    elementwise over token keys (see bank.req)."""
+    _, _, count = build_token_index(tokens, n_label_keys=n_label_keys)
+    return (count[:, None, :] >= req[None, :, :]).all(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_label_keys",))
+def index_and_prescreen(tokens, req, *, n_label_keys: int):
+    """One pass producing both the inverted token index and the
+    prescreen matrix, so a serving batch builds the index once and
+    shares it across the per-group ``pair_contains_indexed`` calls."""
+    order, start, count = build_token_index(
+        tokens, n_label_keys=n_label_keys
+    )
+    possible = (count[:, None, :] >= req[None, :, :]).all(-1)
+    return order, start, count, possible
+
+
+def _join(tokens, order, start, count, cell_b, cell_steps, *,
+          nv, emax, tmax, use_kernel, block_g, uniform_length=False):
+    """The embedding-join scan over N cells (cell i = sequence
+    cell_b[i] vs step program cell_steps[i]).  ``uniform_length``
+    promises every cell's program is exactly L steps (no padding rows),
+    which drops the pass-through selects and lets the final step skip
+    compaction and the state update entirely.  Returns
+    (contained [N] bool, overflow [N] bool)."""
+    B, T, _ = tokens.shape
+    N, L, _ = cell_steps.shape
+    NI = L  # a pattern has at most as many itemsets as steps
+    NV = nv
+    E, Tm = emax, tmax
+    tokens = tokens.astype(jnp.int32)
+    cell_steps = cell_steps.astype(jnp.int32)
+    cell_b = cell_b.astype(jnp.int32)
+
+    nv_ids = jnp.arange(NV, dtype=jnp.int32)
+    ni_ids = jnp.arange(NI, dtype=jnp.int32)
+    m_ids = jnp.arange(Tm, dtype=jnp.int32)
+
+    # step 0 always joins against the single root embedding, so the
+    # initial frontier is one row; compaction widens it to E rows
+    phi0 = jnp.full((N, 1, NI), PAD_PHI, jnp.int32)
+    psi0 = jnp.full((N, 1, NV), PAD_PSI, jnp.int32)
+    valid0 = jnp.ones((N, 1), jnp.bool_)
+    overflow0 = jnp.zeros((N,), jnp.bool_)
+
+    def body(state, step_k, final):
+        # NOTE: called from an unrolled python loop, not lax.scan - the
+        # scan + shard_map combination miscompiles on the jax 0.4 CPU
+        # backend (dropped matches on non-zero data shards), and L is
+        # small enough that unrolling is also the faster choice.
+        # ``final`` (uniform-length callers only, where every cell ends
+        # at step L-1) short-circuits the step: containment just needs
+        # "any candidate accepted", so frontier compaction and the
+        # phi/psi update are skipped entirely.
+        phi, psi, valid, overflow = state
+        Ein = psi.shape[1]  # 1 on step 0, E afterwards
+        C = Ein * Tm * 2  # candidates: frontier rows x window x orient
+        cand_ids = jnp.arange(C, dtype=jnp.int32)
+        ty_s, pu1_s, pu2_s, lab_s, new_s, idx_s, sval_s, key_s = (
+            step_k[:, c] for c in range(8)
+        )
+
+        # ---- per-cell token window for this step's (type,label) bucket
+        st_sel = start[cell_b, key_s]   # [N]
+        ct_sel = count[cell_b, key_s]
+        wpos = jnp.minimum(st_sel[:, None] + m_ids[None, :], T - 1)
+        wvalid = m_ids[None, :] < ct_sel[:, None]
+        tpos = order[cell_b[:, None], wpos]       # [N, Tm]
+        tok_w = tokens[cell_b[:, None], tpos]     # [N, Tm, 6]
+        tok_w = tok_w.at[..., 5].set(
+            jnp.where(wvalid, tok_w[..., 5], 0)
+        )
+
+        # ---- per-row step table for the predicate
+        idx_b = jnp.broadcast_to(idx_s[:, None, None], (N, Ein, 1))
+        cur_phi = jnp.take_along_axis(phi, idx_b, axis=-1)[..., 0]
+        prev_b = jnp.clip(idx_b - 1, 0, NI - 1)
+        prev_phi = jnp.take_along_axis(phi, prev_b, axis=-1)[..., 0]
+        prev_phi = jnp.where(idx_s[:, None] > 0, prev_phi, -1)
+        if uniform_length:
+            row_valid = valid  # every step row is a real step
+        else:
+            row_valid = valid & (sval_s[:, None] > 0)
+
+        def bro(x):  # [N] -> [N, Ein]
+            return jnp.broadcast_to(x[:, None], (N, Ein))
+
+        srow = jnp.stack(
+            [bro(ty_s), bro(pu1_s), bro(pu2_s), bro(lab_s), bro(new_s),
+             prev_phi, cur_phi, row_valid.astype(jnp.int32)],
+            axis=-1,
+        )
+
+        # ---- match predicate over (cell, row, window token)
+        if use_kernel:
+            bits = contain_step_blocked(tok_w, psi, srow, block_g=block_g)
+        else:
+            bits = contain_step_core(tok_w, psi, srow)
+
+        # ---- compact accepted candidates into the emax frontier slots:
+        # first E in (row, token, orientation) order, by iterative
+        # min-extraction - E passes of trivial ops beat a [N, C] sort by
+        # a wide margin on CPU and keep everything in VREG-sized tiles
+        flags = (
+            jnp.stack([bits & 1, (bits >> 1) & 1], -1) > 0
+        ).reshape(N, C)
+        # a truncated window may lose matches only if the frontier was
+        # still live going into the step
+        window_ovf = (ct_sel > Tm) & valid.any(-1)
+        if final:
+            return flags.any(-1), overflow | window_ovf
+        cand_row = cand_ids[None, :]
+        sels = []
+        last = jnp.full((N, 1), -1, jnp.int32)
+        for _ in range(E):
+            cur = jnp.min(
+                jnp.where(flags & (cand_row > last), cand_row, C),
+                -1, keepdims=True,
+            )
+            sels.append(cur)
+            last = cur
+        # anything still flagged past the E extracted slots was dropped
+        frontier_ovf = jnp.min(
+            jnp.where(flags & (cand_row > last), cand_row, C), -1
+        ) < C
+        sel = jnp.concatenate(sels, -1)  # [N, E] ascending, C = empty
+        new_valid = sel < C
+        sel = jnp.minimum(sel, C - 1)
+        e_old = sel // (Tm * 2)
+        t_w = (sel // 2) % Tm
+        var = sel % 2
+
+        phi_src = jnp.take_along_axis(phi, e_old[..., None], axis=1)
+        psi_src = jnp.take_along_axis(psi, e_old[..., None], axis=1)
+
+        def wfield(f):  # [N, E] gather of tok_w[n, t_w, f]
+            return jnp.take_along_axis(tok_w[..., f], t_w, axis=1)
+
+        u1_g, u2_g, j_g = wfield(1), wfield(2), wfield(4)
+
+        # phi: the first TR of a new pattern itemset claims data itemset j
+        claim = (new_s[:, None] > 0) & new_valid
+        onehot_ni = ni_ids[None, None, :] == idx_s[:, None, None]
+        phi_new = jnp.where(
+            onehot_ni & claim[..., None], j_g[..., None], phi_src
+        )
+
+        # psi: fresh pattern vertices bind per the matched orientation
+        a_g = jnp.where(var == 0, u1_g, u2_g)
+        b_g = jnp.where(var == 0, u2_g, u1_g)
+        is_v = (ty_s <= 2)[:, None]
+        pu1_b = jnp.broadcast_to(pu1_s[:, None, None], (N, E, 1))
+        pu2_b = jnp.broadcast_to(pu2_s[:, None, None], (N, E, 1))
+        fresh1 = jnp.take_along_axis(psi_src, pu1_b, axis=-1)[..., 0] < 0
+        fresh2 = jnp.take_along_axis(psi_src, pu2_b, axis=-1)[..., 0] < 0
+        onehot1 = nv_ids[None, None, :] == pu1_b
+        onehot2 = nv_ids[None, None, :] == pu2_b
+        assign1 = jnp.where(is_v, u1_g, a_g)
+        psi_new = jnp.where(
+            onehot1 & (fresh1 & new_valid)[..., None],
+            assign1[..., None], psi_src,
+        )
+        psi_new = jnp.where(
+            onehot2 & ((~is_v) & fresh2 & new_valid)[..., None],
+            b_g[..., None], psi_new,
+        )
+
+        ovf_step = frontier_ovf | window_ovf
+        if uniform_length:
+            return (phi_new, psi_new, new_valid, ovf_step | overflow), None
+        # ---- pass-through for cells already past their last step
+        alive = sval_s > 0
+        phi = jnp.where(alive[:, None, None], phi_new, phi)
+        psi = jnp.where(alive[:, None, None], psi_new, psi)
+        valid = jnp.where(alive[:, None], new_valid, valid)
+        overflow = jnp.where(alive, ovf_step | overflow, overflow)
+        return (phi, psi, valid, overflow), None
+
+    state = (phi0, psi0, valid0, overflow0)
+    for k in range(L):
+        final = uniform_length and k == L - 1
+        out = body(state, cell_steps[:, k], final)
+        if final:
+            return out
+        state, _ = out
+    _, _, valid, overflow = state
+    return valid.any(-1), overflow
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nv", "n_label_keys", "emax", "tmax", "use_kernel", "block_g",
+        "uniform_length",
+    ),
+)
+def pair_contains(
+    tokens,   # [B, T, 6] int32
+    steps,    # [P, L, STEP_FIELDS] int32
+    b_idx,    # [N] int32: sequence per cell
+    p_idx,    # [N] int32: pattern row per cell
+    *,
+    nv: int,
+    n_label_keys: int,
+    emax: int = 8,
+    tmax: int = 16,
+    use_kernel: bool = False,
+    block_g: int = 64,
+    uniform_length: bool = False,
+):
+    """Containment over a compacted (sequence, pattern) pair list - the
+    server's post-prescreen path.  Returns (contained [N], overflow [N])."""
+    order, start, count = build_token_index(
+        tokens, n_label_keys=n_label_keys
+    )
+    return _join(
+        tokens, order, start, count, b_idx, steps[p_idx],
+        nv=nv, emax=emax, tmax=tmax,
+        use_kernel=use_kernel, block_g=block_g,
+        uniform_length=uniform_length,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nv", "emax", "tmax", "use_kernel", "block_g",
+                     "uniform_length"),
+)
+def pair_contains_indexed(
+    tokens, order, start, count,  # tokens + prebuilt inverted index
+    steps, b_idx, p_idx,
+    *,
+    nv: int,
+    emax: int = 8,
+    tmax: int = 16,
+    use_kernel: bool = False,
+    block_g: int = 64,
+    uniform_length: bool = False,
+):
+    """``pair_contains`` with the token index precomputed (see
+    ``index_and_prescreen``)."""
+    return _join(
+        tokens, order, start, count, b_idx, steps[p_idx],
+        nv=nv, emax=emax, tmax=tmax,
+        use_kernel=use_kernel, block_g=block_g,
+        uniform_length=uniform_length,
+    )
+
+
+def batch_contains_ref(
+    tokens,         # [B, T, 6] int32 (encode_db layout)
+    steps,          # [P, L, STEP_FIELDS] int32 (bank.steps)
+    pattern_valid,  # [P] int32 (bank.pattern_valid)
+    *,
+    nv: int,
+    n_label_keys: int,
+    emax: int = 8,
+    tmax: int = 16,
+    use_kernel: bool = False,
+    block_g: int = 64,
+):
+    """Dense batch x bank containment (every cell joined; unjitted body,
+    traceable inside shard_map - use ``batch_contains`` standalone).
+    Returns (contained [B,P] bool, overflow [B,P] bool)."""
+    B = tokens.shape[0]
+    P = steps.shape[0]
+    order, start, count = build_token_index(
+        tokens, n_label_keys=n_label_keys
+    )
+    cell_b = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+    cell_steps = jnp.broadcast_to(
+        steps[None], (B,) + steps.shape
+    ).reshape(B * P, *steps.shape[1:])
+    contained, overflow = _join(
+        tokens, order, start, count, cell_b, cell_steps,
+        nv=nv, emax=emax, tmax=tmax,
+        use_kernel=use_kernel, block_g=block_g,
+    )
+    real = (pattern_valid > 0)[None, :]
+    return (contained.reshape(B, P) & real,
+            overflow.reshape(B, P) & real)
+
+
+batch_contains = functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nv", "n_label_keys", "emax", "tmax", "use_kernel", "block_g",
+    ),
+)(batch_contains_ref)

@@ -1,0 +1,222 @@
+"""PatternServer: the request-facing layer over batched containment.
+
+A query is a batch of incoming ``TRSeq``s; the answer, per sequence, is
+which bank patterns it contains plus a support-weighted top-k.  The
+server owns the production concerns around the batch.py entry points:
+
+* request batching - misses are encoded into power-of-two (batch,
+  token, pair-count) buckets so the jitted join recompiles a bounded
+  number of times,
+* the counts prescreen - only (sequence, pattern) pairs that pass the
+  sound necessary condition are joined (``pair_contains``), typically a
+  small fraction of the dense grid,
+* an LRU cache keyed on canonical sequence fingerprints (bank.py),
+* exactness - cells flagged ``overflow & ~contained`` (the only
+  undecided ones, see batch.py) are re-checked against the
+  ``core.containment`` host oracle, so results always equal the oracle,
+* counters (queries, cache hits, device batches, prescreened pairs,
+  fallback cells) for the ops dashboards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.containment import contains
+from ..core.graphseq import TRSeq
+from ..mining.encoding import encode_db
+from .bank import PatternBank, sequence_fingerprint
+from .batch import (
+    index_and_prescreen,
+    max_key_bucket,
+    pair_contains_indexed,
+)
+
+
+def _pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+@dataclasses.dataclass
+class QueryResult:
+    fingerprint: str
+    contained: np.ndarray          # [n_patterns] bool, bank order
+    topk: List[Tuple[int, int]]    # (pattern id, support score)
+    cached: bool = False
+
+    @property
+    def pattern_ids(self) -> np.ndarray:
+        return np.nonzero(self.contained)[0]
+
+
+class PatternServer:
+    def __init__(
+        self,
+        bank: PatternBank,
+        *,
+        emax: int = 4,
+        emax_retry: int = 16,
+        max_batch: int = 256,
+        cache_size: int = 4096,
+        topk: int = 10,
+        use_kernel: bool = False,
+        block_g: int = 64,
+    ):
+        self.bank = bank
+        self.emax = emax
+        self.emax_retry = emax_retry
+        self.max_batch = max_batch
+        self.cache_size = cache_size
+        self.topk = topk
+        self.use_kernel = use_kernel
+        self.block_g = block_g
+        self._req = jnp.asarray(bank.req)
+        # patterns grouped by program length: the join runs exactly L_g
+        # steps per group instead of the bank-wide maximum, and the
+        # group's phi width shrinks to match
+        self._groups = []
+        n_steps = bank.n_steps[: bank.n_patterns]
+        for L_g in sorted(set(int(x) for x in n_steps)):
+            rows = np.nonzero(n_steps == L_g)[0].astype(np.int32)
+            steps_g = jnp.asarray(bank.steps[rows][:, :L_g])
+            self._groups.append((rows, steps_g))
+        self._cache: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self.stats: Dict[str, int] = {
+            "queries": 0, "cache_hits": 0, "device_batches": 0,
+            "pairs_possible": 0, "pairs_prescreened": 0,
+            "escalated_cells": 0, "host_fallback_cells": 0,
+        }
+
+    # ------------------------------------------------------------- device
+    def _run_batch(self, seqs: List[TRSeq]) -> np.ndarray:
+        """Exact containment rows [len(seqs), n_patterns] for one chunk."""
+        assert len(seqs) <= self.max_batch
+        bank = self.bank
+        tdb = encode_db(
+            seqs,
+            pad_to=_pow2(max(
+                1, max(sum(len(it) for it in s) for s in seqs)
+            )),
+            pad_seqs_to=_pow2(len(seqs)),
+        )
+        tokens = jnp.asarray(tdb.tokens)
+        tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
+        # one index build per batch, shared by every group join below
+        order, start, count, possible = index_and_prescreen(
+            tokens, self._req, n_label_keys=bank.n_label_keys
+        )
+        possible = np.asarray(possible)[: len(seqs), : bank.n_patterns]
+        self.stats["device_batches"] += 1
+        self.stats["pairs_possible"] += int(possible.sum())
+        self.stats["pairs_prescreened"] += int(possible.size)
+        contained = np.zeros((len(seqs), bank.n_patterns), bool)
+        for rows, steps_g in self._groups:
+            b_idx, g_idx = np.nonzero(possible[:, rows])
+            if not len(b_idx):
+                continue
+            if steps_g.shape[1] == 1:
+                # single-TR patterns: the counts prescreen IS the exact
+                # containment test (one matching-key token always embeds:
+                # fresh vertices bind freely under an empty psi)
+                contained[b_idx, rows[g_idx]] = True
+                continue
+            n = len(b_idx)
+            npad = _pow2(n)
+            bi = np.zeros(npad, np.int32)
+            pi = np.zeros(npad, np.int32)
+            bi[:n], pi[:n] = b_idx, g_idx
+            c, o = pair_contains_indexed(
+                tokens, order, start, count, steps_g,
+                jnp.asarray(bi), jnp.asarray(pi),
+                nv=bank.nv, emax=self.emax, tmax=tmax,
+                use_kernel=self.use_kernel, block_g=self.block_g,
+                uniform_length=True,
+            )
+            c = np.array(c)[:n]
+            o = np.array(o)[:n]
+            # only overflow & ~contained cells are undecided (batch.py);
+            # escalate them through a wider device frontier before
+            # paying for the per-cell host oracle
+            und = np.nonzero(o & ~c)[0]
+            if len(und) and self.emax_retry > self.emax:
+                m = len(und)
+                mpad = _pow2(m)
+                bi2 = np.zeros(mpad, np.int32)
+                pi2 = np.zeros(mpad, np.int32)
+                bi2[:m], pi2[:m] = b_idx[und], g_idx[und]
+                c2, o2 = pair_contains_indexed(
+                    tokens, order, start, count, steps_g,
+                    jnp.asarray(bi2), jnp.asarray(pi2),
+                    nv=bank.nv, emax=self.emax_retry, tmax=tmax,
+                    use_kernel=self.use_kernel, block_g=self.block_g,
+                    uniform_length=True,
+                )
+                c[und] = np.asarray(c2)[:m]
+                o[und] = np.asarray(o2)[:m]
+                self.stats["escalated_cells"] += m
+            p_global = rows[g_idx]
+            contained[b_idx, p_global] = c
+            for i in np.nonzero(o & ~c)[0]:
+                contained[b_idx[i], p_global[i]] = contains(
+                    bank.patterns[p_global[i]], seqs[b_idx[i]]
+                )
+                self.stats["host_fallback_cells"] += 1
+        return contained
+
+    # ------------------------------------------------------------ scoring
+    def _score(self, contained: np.ndarray, k: int) -> List[Tuple[int, int]]:
+        # bank rows are ordered by (-support, canonical code), so the
+        # first k contained ids are already the support-weighted top-k
+        ids = np.nonzero(contained)[0][:k]
+        sup = self.bank.support
+        return [(int(i), int(sup[i])) for i in ids]
+
+    # ------------------------------------------------------------- public
+    def query(
+        self, seqs: Sequence[TRSeq], k: Optional[int] = None
+    ) -> List[QueryResult]:
+        k = self.topk if k is None else k
+        self.stats["queries"] += len(seqs)
+        fps = [sequence_fingerprint(s) for s in seqs]
+        rows: Dict[str, np.ndarray] = {}
+        cached: Dict[str, bool] = {}
+        miss_fps: List[str] = []
+        miss_seqs: List[TRSeq] = []
+        for fp, s in zip(fps, seqs):
+            if fp in rows:
+                continue
+            if fp in self._cache:
+                self._cache.move_to_end(fp)
+                rows[fp] = self._cache[fp]
+                cached[fp] = True
+                self.stats["cache_hits"] += 1
+            else:
+                rows[fp] = None  # placeholder, preserves first-seen order
+                cached[fp] = False
+                miss_fps.append(fp)
+                miss_seqs.append(s)
+        for start in range(0, len(miss_seqs), self.max_batch):
+            chunk = miss_seqs[start : start + self.max_batch]
+            got = self._run_batch(chunk)
+            for i, fp in enumerate(miss_fps[start : start + len(chunk)]):
+                rows[fp] = got[i]
+                self._cache[fp] = got[i]
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+        return [
+            QueryResult(
+                fingerprint=fp, contained=rows[fp],
+                topk=self._score(rows[fp], k), cached=cached[fp],
+            )
+            for fp in fps
+        ]
+
+    def query_one(self, seq: TRSeq, k: Optional[int] = None) -> QueryResult:
+        return self.query([seq], k)[0]

@@ -1,0 +1,57 @@
+"""Shard-by-pattern serving over a device mesh.
+
+Mirrors mining/distributed.py's layout: query sequences shard over the
+"data" axis, the pattern bank (step programs + metadata rows) shards
+over the "model" axis.  Containment cells are embarrassingly parallel -
+cell (b, p) touches only sequence b and pattern p - so the step needs
+*zero* collectives: each device computes its [B_loc, P_loc] block and
+the output is the [B, P] matrix sharded over both axes (gather it, or
+feed it sharded into downstream scoring).
+
+Bank rows must divide the pattern axis; compile the bank with
+``pad_patterns_to`` a multiple of the mesh's model-axis size (padding
+rows report no containment).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..compat import shard_map_compat
+from .batch import batch_contains_ref
+
+
+def make_serving_step(
+    mesh: Mesh,
+    *,
+    nv: int,
+    n_label_keys: int,
+    emax: int = 8,
+    tmax: int = 16,
+    db_axis: str = "data",
+    pat_axis: str = "model",
+    use_kernel: bool = False,
+    block_g: int = 64,
+):
+    """Build the jitted, shard-mapped containment step.
+
+    Returns ``step(tokens [B,T,6], steps [P,L,F], pattern_valid [P]) ->
+    (contained [B,P] bool, overflow [B,P] bool)`` with B sharded over
+    ``db_axis`` and P over ``pat_axis``.
+    """
+
+    def local_step(tokens, steps, pattern_valid):
+        return batch_contains_ref(
+            tokens, steps, pattern_valid,
+            nv=nv, n_label_keys=n_label_keys, emax=emax, tmax=tmax,
+            use_kernel=use_kernel, block_g=block_g,
+        )
+
+    specs_in = (
+        P(db_axis, None, None),   # tokens
+        P(pat_axis, None, None),  # steps
+        P(pat_axis),              # pattern_valid
+    )
+    specs_out = (P(db_axis, pat_axis), P(db_axis, pat_axis))
+    step = shard_map_compat(local_step, mesh, specs_in, specs_out)
+    return jax.jit(step)

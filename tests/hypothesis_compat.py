@@ -1,0 +1,61 @@
+"""Pure-pytest fallback for the optional ``hypothesis`` dependency.
+
+The property tests only use ``@settings(max_examples=N, deadline=None)``
+stacked on ``@given(st.integers(lo, hi), ...)``.  When hypothesis is not
+installed we emulate exactly that subset: each wrapped test runs
+``max_examples`` times with arguments drawn from a PRNG seeded
+deterministically from the test's qualified name, so failures are
+reproducible run-to-run (no shrinking, but the seed of a failing draw is
+reported in the assertion traceback via the argument values).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+
+class _Integers:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+st = strategies
+
+_DEFAULT_EXAMPLES = 20
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                args = [s.sample(rng) for s in arg_strats]
+                kwargs = {k: s.sample(rng) for k, s in kw_strats.items()}
+                fn(*args, **kwargs)
+
+        # pytest must see the zero-arg signature, not the wrapped one
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco

@@ -2,7 +2,11 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-sampling fallback
+    from hypothesis_compat import given, settings, strategies as st
 
 from conftest import random_db
 from repro.core.canonical import (

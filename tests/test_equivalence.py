@@ -5,7 +5,10 @@ reverse-search tree enumerates exactly the set of relevant FTSs that the
 original GTRACE obtains by mining all FTSs and filtering, with identical
 supports.
 """
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-sampling fallback
+    from hypothesis_compat import given, settings, strategies as st
 
 from conftest import random_db
 from repro.core.gtrace import mine_gtrace

@@ -3,7 +3,10 @@ the pure-host reference, and the fixed-size device candidate table must
 agree with the exact host aggregation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-sampling fallback
+    from hypothesis_compat import given, settings, strategies as st
 
 import jax.numpy as jnp
 

@@ -91,8 +91,9 @@ def test_walker_counts_collectives_inside_scans():
 
     from jax.sharding import PartitionSpec as P
 
-    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(),
-                               out_specs=P(), check_vma=False))
+    from repro.compat import shard_map_compat
+
+    fn = jax.jit(shard_map_compat(f, mesh, P(), P()))
     x = jax.ShapeDtypeStruct((256,), jnp.float32)
     res = analyze(fn.lower(x).compile().as_text())
     # 7 trips x 1KB all-reduce (may be optimized away on 1 device; accept

@@ -1,0 +1,300 @@
+"""Serving subsystem: batched containment must equal the host oracle."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-sampling fallback
+    from hypothesis_compat import given, settings, strategies as st
+
+from conftest import random_db
+from repro.core.containment import contains, support
+from repro.kernels.containment.ops import contain_step_kernel
+from repro.kernels.containment.ref import contain_step_core
+from repro.mining.driver import AcceleratedMiner
+from repro.mining.encoding import encode_db
+from repro.serving.bank import (
+    PatternBank,
+    compile_bank,
+    sequence_fingerprint,
+)
+from repro.serving.batch import (
+    batch_contains,
+    max_key_bucket,
+    pair_contains,
+    prescreen_counts,
+)
+from repro.serving.server import PatternServer
+
+import jax
+
+
+def _mine_bank(db, *, rs: bool, sigma=2, max_len=4, **bank_kw):
+    miner = AcceleratedMiner(db)
+    res = miner.mine_rs(sigma, max_len=max_len) if rs else \
+        miner.mine_gtrace(sigma, max_len=max_len)
+    return compile_bank(res, **bank_kw)
+
+
+def _device_rows(db, bank, **kw):
+    tdb = encode_db(db)
+    kw.setdefault("tmax", max_key_bucket(tdb.tokens, bank.n_label_keys))
+    cont, ovf = batch_contains(
+        jnp.asarray(tdb.tokens), jnp.asarray(bank.steps),
+        jnp.asarray(bank.pattern_valid), nv=bank.nv,
+        n_label_keys=bank.n_label_keys, **kw,
+    )
+    n = bank.n_patterns
+    return np.asarray(cont)[:, :n], np.asarray(ovf)[:, :n]
+
+
+# ---------------------------------------------------- oracle equivalence
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_batch_contains_equals_oracle_rs_patterns(seed):
+    """GTRACE-RS patterns (search modes root/vertex/edge) served exactly."""
+    db = random_db(seed, n_seq=6, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    if not bank.n_patterns:
+        return
+    cont, ovf = _device_rows(db, bank, emax=64)
+    assert not ovf.any(), "emax=64 must not overflow on these sizes"
+    want = np.array([[contains(p, s) for p in bank.patterns] for s in db])
+    np.testing.assert_array_equal(cont, want)
+    # support agreement on the mined DB
+    for j, p in enumerate(bank.patterns):
+        assert cont[:, j].sum() == support(p, list(db))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_batch_contains_equals_oracle_gtrace_patterns(seed):
+    """Baseline-GTRACE patterns (tail mode) on a DB they were NOT mined
+    from - pure query-time containment."""
+    db = random_db(seed, n_seq=5, n_steps=4, n_v=4)
+    other = random_db(seed + 1, n_seq=5, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False)
+    if not bank.n_patterns:
+        return
+    cont, ovf = _device_rows(other, bank, emax=64)
+    assert not ovf.any()
+    want = np.array(
+        [[contains(p, s) for p in bank.patterns] for s in other]
+    )
+    np.testing.assert_array_equal(cont, want)
+
+
+def test_overflow_is_conservative():
+    """Tiny frontier capacity: positives stay exact and every lost match
+    is covered by the overflow flag (the server's fallback contract)."""
+    db = random_db(11, n_seq=10, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    cont, ovf = _device_rows(db, bank, emax=2)
+    want = np.array([[contains(p, s) for p in bank.patterns] for s in db])
+    assert not (cont & ~want).any(), "false positive under overflow"
+    assert not (~cont & want & ~ovf).any(), "unflagged false negative"
+
+
+# ------------------------------------------------------- kernel vs ref
+@pytest.mark.parametrize("G,E,Tm", [(1, 1, 1), (65, 8, 9), (40, 4, 16)])
+@pytest.mark.parametrize("block_g", [16, 64])
+def test_contain_step_kernel_matches_ref(G, E, Tm, block_g):
+    rng = np.random.default_rng(G * 100 + E + Tm + block_g)
+    NV = 6
+    tok = np.zeros((G, Tm, 6), np.int32)
+    tok[..., 0] = rng.integers(0, 6, (G, Tm))
+    tok[..., 1] = rng.integers(0, 8, (G, Tm))
+    tok[..., 2] = rng.integers(0, 8, (G, Tm))
+    tok[..., 3] = rng.integers(-1, 4, (G, Tm))
+    tok[..., 4] = np.sort(rng.integers(0, 6, (G, Tm)), axis=1)
+    tok[..., 5] = rng.integers(0, 2, (G, Tm))
+    psi = rng.integers(-2, 8, (G, E, NV)).astype(np.int32)
+    srow = np.zeros((G, E, 8), np.int32)
+    srow[..., 0] = rng.integers(0, 6, (G, E))
+    srow[..., 1] = rng.integers(0, NV, (G, E))
+    srow[..., 2] = rng.integers(0, NV, (G, E))
+    srow[..., 3] = rng.integers(-1, 4, (G, E))
+    srow[..., 4] = rng.integers(0, 2, (G, E))
+    srow[..., 5] = rng.integers(-1, 6, (G, E))
+    srow[..., 6] = rng.integers(-1, 6, (G, E))
+    srow[..., 7] = rng.integers(0, 2, (G, E))
+    args = [jnp.asarray(x) for x in (tok, psi, srow)]
+    ref = contain_step_core(*args)
+    ker = contain_step_kernel(*args, block_g=block_g, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+def test_batch_contains_kernel_path_equals_ref_path():
+    db = random_db(5, n_seq=6, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    a = _device_rows(db, bank, emax=16)
+    b = _device_rows(db, bank, emax=16, use_kernel=True, block_g=32)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_prescreen_is_sound_and_pair_join_matches_dense():
+    db = random_db(21, n_seq=8, n_steps=4, n_v=4)
+    queries = random_db(22, n_seq=8, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=True)
+    tdb = encode_db(queries)
+    tok = jnp.asarray(tdb.tokens)
+    tmax = max_key_bucket(tdb.tokens, bank.n_label_keys)
+    possible = np.asarray(prescreen_counts(
+        tok, jnp.asarray(bank.req), n_label_keys=bank.n_label_keys
+    ))[:, : bank.n_patterns]
+    want = np.array(
+        [[contains(p, s) for p in bank.patterns] for s in queries]
+    )
+    assert not (want & ~possible).any(), "prescreen killed a contained pair"
+    b_idx, p_idx = np.nonzero(possible)
+    if len(b_idx):
+        c, o = pair_contains(
+            tok, jnp.asarray(bank.steps),
+            jnp.asarray(b_idx.astype(np.int32)),
+            jnp.asarray(p_idx.astype(np.int32)),
+            nv=bank.nv, n_label_keys=bank.n_label_keys,
+            emax=16, tmax=tmax,
+        )
+        got = np.zeros_like(want)
+        got[b_idx, p_idx] = np.asarray(c)
+        assert not np.asarray(o).any()
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- server
+def test_server_matches_oracle_and_caches():
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    queries = random_db(4, n_seq=7, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    srv = PatternServer(bank, emax=64, max_batch=4, topk=5)
+    res1 = srv.query(queries)
+    for s, r in zip(queries, res1):
+        want = np.array([contains(p, s) for p in bank.patterns])
+        np.testing.assert_array_equal(r.contained, want)
+        assert not r.cached
+    hits_before = srv.stats["cache_hits"]
+    res2 = srv.query(queries)
+    assert srv.stats["cache_hits"] == hits_before + len(queries)
+    for r1, r2 in zip(res1, res2):
+        assert r2.cached
+        np.testing.assert_array_equal(r1.contained, r2.contained)
+        assert r1.topk == r2.topk
+
+
+def test_server_overflow_fallback_is_exact():
+    db = random_db(11, n_seq=10, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    # emax_retry == emax disables device escalation: undecided cells go
+    # straight to the host oracle
+    srv = PatternServer(bank, emax=2, emax_retry=2, max_batch=16)
+    res = srv.query(list(db))
+    assert srv.stats["host_fallback_cells"] > 0, "emax=2 should overflow"
+    for s, r in zip(db, res):
+        want = np.array([contains(p, s) for p in bank.patterns])
+        np.testing.assert_array_equal(r.contained, want)
+
+
+def test_server_escalation_is_exact():
+    db = random_db(11, n_seq=10, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    srv = PatternServer(bank, emax=1, emax_retry=64, max_batch=16)
+    res = srv.query(list(db))
+    assert srv.stats["escalated_cells"] > 0, "emax=1 should escalate"
+    for s, r in zip(db, res):
+        want = np.array([contains(p, s) for p in bank.patterns])
+        np.testing.assert_array_equal(r.contained, want)
+
+
+def test_server_topk_is_support_weighted():
+    db = random_db(3, n_seq=8, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    srv = PatternServer(bank, emax=64, topk=3)
+    for r in srv.query(list(db)):
+        sups = [s for _, s in r.topk]
+        assert sups == sorted(sups, reverse=True)
+        assert len(r.topk) <= 3
+        got = {i for i, _ in r.topk}
+        best = sorted(
+            np.nonzero(r.contained)[0],
+            key=lambda i: (-int(bank.support[i]), int(i)),
+        )[:3]
+        assert got == set(best)
+
+
+def test_fingerprint_ignores_empty_itemsets_only():
+    db = random_db(9, n_seq=3, n_steps=4, n_v=4)
+    s = db[0]
+    with_empty = s[:1] + ((),) + s[1:]
+    assert sequence_fingerprint(s) == sequence_fingerprint(with_empty)
+    if len(db[1]) and db[0] != db[1]:
+        assert sequence_fingerprint(db[0]) != sequence_fingerprint(db[1])
+
+
+# --------------------------------------------------------------- bank
+def test_bank_compile_ordering_and_padding():
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True, pad_patterns_to=64)
+    assert bank.n_rows == 64
+    assert bank.pattern_valid[: bank.n_patterns].all()
+    assert not bank.pattern_valid[bank.n_patterns :].any()
+    sups = bank.support[: bank.n_patterns]
+    assert (np.diff(sups) <= 0).all(), "bank ordered by support desc"
+    shards = bank.shard(4)
+    assert sum(s.n_patterns for s in shards) == bank.n_patterns
+    assert all(s.n_rows == 16 for s in shards)
+
+
+SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src"); sys.path.insert(0, "tests")
+import numpy as np
+import jax
+import jax.numpy as jnp
+from conftest import random_db
+from repro.mining.driver import AcceleratedMiner
+from repro.mining.encoding import encode_db
+from repro.serving.bank import compile_bank
+from repro.serving.batch import batch_contains
+from repro.serving.sharded import make_serving_step
+
+db = random_db(3, n_seq=8, n_steps=4, n_v=4)
+res = AcceleratedMiner(db).mine_rs(2, max_len=4)
+bank = compile_bank(res, pad_patterns_to=-(-len(
+    [p for p in res.patterns if p]) // 2) * 2)
+tdb = encode_db(db)
+tok = jnp.asarray(tdb.tokens)
+from repro.serving.batch import max_key_bucket
+tmax = max_key_bucket(tdb.tokens, bank.n_label_keys)
+ref_c, ref_o = batch_contains(
+    tok, jnp.asarray(bank.steps), jnp.asarray(bank.pattern_valid),
+    nv=bank.nv, n_label_keys=bank.n_label_keys, emax=16, tmax=tmax)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+step = make_serving_step(mesh, nv=bank.nv,
+                         n_label_keys=bank.n_label_keys,
+                         emax=16, tmax=tmax)
+sh_c, sh_o = step(tok, jnp.asarray(bank.steps),
+                  jnp.asarray(bank.pattern_valid))
+assert np.array_equal(np.asarray(sh_c), np.asarray(ref_c))
+assert np.array_equal(np.asarray(sh_o), np.asarray(ref_o))
+print("SHARDED-SERVING-OK", int(np.asarray(sh_c).sum()))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_serving_step_8dev():
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", SHARD_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), env=env,
+    )
+    assert "SHARDED-SERVING-OK" in r.stdout, r.stdout + "\n" + r.stderr

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-sampling fallback
+    from hypothesis_compat import given, settings, strategies as st
 
 from repro.training.optimizer import (
     AdamW,
