@@ -1,13 +1,21 @@
 """Serving benchmark: batched device containment vs the per-sequence
-host oracle, on a 1k-sequence query batch against a mined rFTS bank.
+host oracle, flat vs trie bank layout, on a query batch against a mined
+rFTS bank.
 
-Emits ``BENCH_serving.json`` (QPS both ways + speedup) next to the repo
-root and the harness CSV rows.  The host oracle backtracks every
-(pattern, sequence) pair in Python, so it is timed on a subsample and
-extrapolated (the subsample size is recorded in the json).
+Emits ``BENCH_serving.json`` (QPS for the flat server, the trie server
+and the host oracle; flat-vs-trie joined-steps counts and speedup) next
+to the repo root plus the harness CSV rows.  The host oracle backtracks
+every (pattern, sequence) pair in Python, so it is timed on a subsample
+and extrapolated (the subsample size is recorded in the json).
+
+``--smoke`` is the CI tier-2 gate: a tiny config, both layouts, and a
+hard failure on any flat/trie row mismatch (results are written to
+``BENCH_serving_smoke.json`` so the full-run json is never clobbered by
+a smoke pass).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -19,58 +27,100 @@ from repro.core.containment import contains
 from repro.data.synthetic import Table3Params, generate_table3_db
 from repro.mining.driver import AcceleratedMiner
 from repro.mining.encoding import encode_db
-from repro.serving.bank import compile_bank
+from repro.serving.bank import compile_bank, sequence_fingerprint
 from repro.serving.batch import batch_contains, max_key_bucket
 from repro.serving.server import PatternServer
+from repro.serving.trie import build_trie, parent_prefix_hits
 
-N_QUERIES = 1000
-ORACLE_SAMPLE = 30
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+OUT_SMOKE = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_serving_smoke.json"
+)
 
 
-def main(csv=print):
-    params = Table3Params(db_size=150, v_avg=5, n_interstates=3)
+def _timed_pass(srv, queries):
+    srv._cache.clear()
+    sequence_fingerprint.cache_clear()  # truly cold: re-canonicalize
+    for k in srv.stats:  # count only the final timed pass
+        srv.stats[k] = 0
+    t0 = time.perf_counter()
+    res = srv.query(queries)
+    return res, time.perf_counter() - t0
+
+
+def main(csv=print, smoke: bool = False):
+    if smoke:
+        db_size, n_queries, oracle_sample, n_rounds = 60, 128, 8, 2
+        sigma_div, out_path = 10, OUT_SMOKE
+    else:
+        # sigma = |DB|/15 mines a ~150-pattern bank: comfortably past
+        # the regime where prefix sharing pays (the trie's win grows
+        # with bank size; tiny banks are flat's territory, see trie.py)
+        db_size, n_queries, oracle_sample, n_rounds = 150, 1000, 30, 6
+        sigma_div, out_path = 15, OUT
+    params = Table3Params(db_size=db_size, v_avg=5, n_interstates=3)
     db = generate_table3_db(params, seed=0)
-    sigma = max(2, len(db) // 10)
-    bank = compile_bank(AcceleratedMiner(db).mine_rs(sigma, max_len=4))
+    sigma = max(2, len(db) // sigma_div)
+    result = AcceleratedMiner(db).mine_rs(sigma, max_len=4)
+    bank = compile_bank(result)
+    trie = build_trie(bank)
 
-    qparams = Table3Params(db_size=N_QUERIES, v_avg=5, n_interstates=3)
+    qparams = Table3Params(db_size=n_queries, v_avg=5, n_interstates=3)
     queries = generate_table3_db(qparams, seed=1)
 
-    srv = PatternServer(bank, max_batch=512)
-    srv.query(queries)  # warm all jit shape buckets outside the timing
+    flat_srv = PatternServer(bank, max_batch=1024)
+    trie_srv = PatternServer(bank, max_batch=1024, bank_layout="trie",
+                             trie=trie)
+    # warm all jit shape buckets outside the timing, and gate on the
+    # layouts agreeing on every (query, pattern) cell - both are exact,
+    # so any mismatch is a bug (this is the CI tier-2 smoke check)
+    flat_rows = np.stack([r.contained for r in flat_srv.query(queries)])
+    trie_rows = np.stack([r.contained for r in trie_srv.query(queries)])
+    if not np.array_equal(flat_rows, trie_rows):
+        bad = int((flat_rows != trie_rows).sum())
+        raise AssertionError(
+            f"flat/trie mismatch on {bad} cells of "
+            f"{flat_rows.size} - exactness contract broken"
+        )
+
     # stratified oracle sample (first-N could be atypically easy)
-    stride = max(1, len(queries) // ORACLE_SAMPLE)
-    sample = queries[::stride][:ORACLE_SAMPLE]
-    # measure in paired rounds - a cold-cache server pass immediately
-    # followed by a host-oracle pass - and form the speedup per round:
-    # the box this runs on swings 2x in throughput between measurement
-    # windows, so only adjacent measurements compare like with like.
-    # The json carries every round; the headline is the best round
-    # (steady-state capability), with the median alongside.
+    stride = max(1, len(queries) // oracle_sample)
+    sample = queries[::stride][:oracle_sample]
+    # measure in paired rounds - interleaved cold-cache flat/trie/flat/
+    # trie passes (per-layout minimum, so a transient slowdown landing
+    # mid-round cannot bias one side), then a host-oracle pass - and
+    # form speedups per round: the box this runs on swings 2x in
+    # throughput between measurement windows, so only adjacent
+    # measurements compare like with like.  The json carries every
+    # round; headlines are the best round (steady-state capability),
+    # with the median alongside.
     rounds = []
-    for _ in range(4):
-        srv._cache.clear()
-        for k in srv.stats:  # count only the final timed pass
-            srv.stats[k] = 0
-        t0 = time.perf_counter()
-        res = srv.query(queries)
-        td = time.perf_counter() - t0
+    for _ in range(n_rounds):
+        res, td_flat = _timed_pass(flat_srv, queries)
+        _, td_trie = _timed_pass(trie_srv, queries)
+        _, td_flat2 = _timed_pass(flat_srv, queries)
+        _, td_trie2 = _timed_pass(trie_srv, queries)
+        td_flat = min(td_flat, td_flat2)
+        td_trie = min(td_trie, td_trie2)
         t0 = time.perf_counter()
         host = np.array(
             [[contains(p, s) for p in bank.patterns] for s in sample]
         )
         th = time.perf_counter() - t0
-        rounds.append(
-            {"server_qps": len(queries) / td,
-             "oracle_qps": len(sample) / th,
-             "speedup": (len(queries) / td) / (len(sample) / th)}
-        )
+        rounds.append({
+            "server_qps": len(queries) / td_flat,
+            "trie_qps": len(queries) / td_trie,
+            "oracle_qps": len(sample) / th,
+            "speedup": (len(queries) / td_flat) / (len(sample) / th),
+            "speedup_trie_vs_flat": td_flat / td_trie,
+        })
     best = max(rounds, key=lambda r: r["speedup"])
     dev_qps = best["server_qps"]
     host_qps = best["oracle_qps"]
     t_dev = len(queries) / dev_qps
     t_host = len(sample) / host_qps
+    best_trie = max(rounds, key=lambda r: r["speedup_trie_vs_flat"])
+    tvf = sorted(r["speedup_trie_vs_flat"] for r in rounds)
     speedups = sorted(r["speedup"] for r in rounds)
     median_speedup = speedups[len(speedups) // 2]
 
@@ -98,9 +148,15 @@ def main(csv=print):
         "db_size": len(db),
         "bank_patterns": bank.n_patterns,
         "bank_max_steps": bank.max_steps,
+        "bank_total_steps": int(bank.n_steps[: bank.n_patterns].sum()),
+        "trie_nodes": trie.n_nodes,
+        "trie_depth": trie.depth,
+        "trie_sharing_ratio": trie.sharing_ratio,
+        "parent_prefix_hits": parent_prefix_hits(bank),
         "n_queries": len(queries),
         "server_seconds": t_dev,
         "server_qps": dev_qps,
+        "trie_qps": best_trie["trie_qps"],
         "batched_seconds": t_raw,
         "batched_qps": raw_qps,
         "oracle_seqs_timed": len(sample),
@@ -108,25 +164,49 @@ def main(csv=print):
         "oracle_qps": host_qps,
         "speedup_server": dev_qps / host_qps,
         "speedup_server_median": median_speedup,
+        "speedup_trie_vs_flat": best_trie["speedup_trie_vs_flat"],
+        "speedup_trie_vs_flat_median": tvf[len(tvf) // 2],
         "speedup_batched": raw_qps / host_qps,
+        # per-cold-pass join work: the trie advances one frontier per
+        # surviving (sequence, trie node), the flat layout one per
+        # surviving (sequence, pattern) program step
+        "joined_steps_flat": flat_srv.stats["joined_steps"],
+        "joined_steps_trie": trie_srv.stats["joined_steps"],
         "rounds": rounds,
-        "escalated_cells": srv.stats["escalated_cells"],
-        "host_fallback_cells": srv.stats["host_fallback_cells"],
+        "escalated_cells": trie_srv.stats["escalated_cells"],
+        "host_fallback_cells": trie_srv.stats["host_fallback_cells"],
     }
-    with open(OUT, "w") as f:
+    with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     csv(f"serving/server_1k,{t_dev/len(queries)*1e6:.0f},"
         f"qps={dev_qps:.0f}")
+    csv(f"serving/trie_1k,"
+        f"{1e6/max(best_trie['trie_qps'], 1e-9):.0f},"
+        f"qps={best_trie['trie_qps']:.0f}")
     csv(f"serving/batched_1k,{t_raw/len(queries)*1e6:.0f},"
         f"qps={raw_qps:.0f}")
     csv(f"serving/host_oracle,{t_host/len(sample)*1e6:.0f},"
         f"qps={host_qps:.1f}")
     csv(f"serving/speedup,{0:.0f},x{dev_qps/host_qps:.1f}")
+    csv(f"serving/trie_vs_flat,{0:.0f},"
+        f"x{best_trie['speedup_trie_vs_flat']:.2f}")
+    csv(f"serving/joined_steps,"
+        f"{payload['joined_steps_trie']},"
+        f"flat={payload['joined_steps_flat']}")
     assert res[0].contained.shape[0] == bank.n_patterns
     return payload
 
 
 if __name__ == "__main__":
-    out = main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config; hard-fails on flat/trie mismatch"
+                         " (the CI tier-2 gate)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
     print(f"# speedup over host oracle: x{out['speedup_server']:.1f} "
-          f"(raw dense batch x{out['speedup_batched']:.1f})")
+          f"(raw dense batch x{out['speedup_batched']:.1f}); "
+          f"trie vs flat x{out['speedup_trie_vs_flat']:.2f} "
+          f"(joined steps {out['joined_steps_flat']} -> "
+          f"{out['joined_steps_trie']}, "
+          f"sharing x{out['trie_sharing_ratio']:.2f})")

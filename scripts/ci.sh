@@ -2,6 +2,18 @@
 # Tier-1 verification, reproducible from a clean checkout:
 #   pip install -r requirements-dev.txt   (optional deps stay optional)
 #   scripts/ci.sh [extra pytest args]
+#
+# Tier-2 (CI_TIER2=0 to skip): a tiny-config serving benchmark smoke
+# that runs BOTH bank layouts over the same queries and hard-fails on
+# any flat/trie containment mismatch (the layouts are required to be
+# exact, so any disagreement is a correctness bug).  No timing
+# assertions - perf numbers come from the full benchmark run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+if [[ "${CI_TIER2:-1}" != "0" ]]; then
+    echo "[ci] tier-2: serving smoke (flat vs trie layout agreement)"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/bench_serving.py --smoke
+fi

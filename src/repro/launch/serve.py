@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--topk", type=int, default=5)
     ap.add_argument("--top-patterns", type=int, default=None,
                     help="serve only the strongest N patterns")
+    ap.add_argument("--bank-layout", choices=("flat", "trie"),
+                    default="flat",
+                    help="flat per-pattern joins, or the prefix-trie "
+                         "layout that joins shared rFTS prefixes once")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run the match predicate as the Pallas kernel")
     ap.add_argument("--checkpoint", default=None)
@@ -50,9 +54,16 @@ def main():
     print(f"[serve] bank: {bank.n_patterns} rFTSs "
           f"(max {bank.max_steps} TRs, {bank.nv} vertices) "
           f"mined in {time.time()-t0:.2f}s")
+    trie = None
+    if args.bank_layout == "trie":
+        from ..serving.trie import build_trie
+        trie = build_trie(bank)
+        print(f"[serve] trie: {trie.n_nodes} nodes, depth {trie.depth},"
+              f" sharing x{trie.sharing_ratio:.2f}")
 
     srv = PatternServer(bank, emax=args.emax, max_batch=args.max_batch,
-                        topk=args.topk, use_kernel=args.use_kernel)
+                        topk=args.topk, use_kernel=args.use_kernel,
+                        bank_layout=args.bank_layout, trie=trie)
     qparams = Table3Params(db_size=args.queries, v_avg=args.v_avg,
                            n_interstates=args.interstates)
     queries = generate_table3_db(qparams, seed=args.seed + 1)

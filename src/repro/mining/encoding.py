@@ -53,20 +53,21 @@ class TokenDB:
 
 def encode_db(db: Sequence[TRSeq], pad_to: int | None = None,
               pad_seqs_to: int | None = None) -> TokenDB:
-    rows: List[List[Tuple[int, int, int, int, int, int]]] = []
-    max_label = 0
+    # one flat row list + a single scatter: serving encodes a fresh
+    # batch per cache-miss chunk, so this path is throughput-critical
+    flat: List[Tuple[int, ...]] = []
+    lens: List[int] = []
     for s in db:
-        row = []
+        n0 = len(flat)
         for j, itemset in enumerate(s):
-            for tr in itemset:
-                row.append((int(tr.type), tr.u1, tr.u2, tr.label, j, 1))
-                max_label = max(max_label, tr.label)
-        rows.append(row)
-    T = max((len(r) for r in rows), default=1)
+            flat += [tr + (j, 1) for tr in itemset]
+        lens.append(len(flat) - n0)
+    T = max(lens, default=1)
     if pad_to is not None:
         assert pad_to >= T, (pad_to, T)
         T = pad_to
-    G = len(rows)
+    G0 = len(db)
+    G = G0
     if pad_seqs_to is not None:
         assert pad_seqs_to >= G
         G = pad_seqs_to
@@ -74,11 +75,18 @@ def encode_db(db: Sequence[TRSeq], pad_to: int | None = None,
     tokens[..., 1] = NO_VERTEX
     tokens[..., 2] = NO_VERTEX
     tokens[..., 3] = NO_LABEL
-    for g, row in enumerate(rows):
-        if row:
-            tokens[g, : len(row)] = np.asarray(row, dtype=np.int32)
+    if flat:
+        arr = np.asarray(flat, dtype=np.int32)
+        lens_a = np.asarray(lens)
+        off = np.cumsum(lens_a) - lens_a
+        idx_g = np.repeat(np.arange(G0), lens_a)
+        idx_t = np.arange(len(flat)) - np.repeat(off, lens_a)
+        tokens[idx_g, idx_t] = arr
+        max_label = int(arr[:, 3].max(initial=0))
+    else:
+        max_label = 0
     n_itemsets = np.array(
-        [len(s) for s in db] + [0] * (G - len(rows)), dtype=np.int32
+        [len(s) for s in db] + [0] * (G - G0), dtype=np.int32
     )
     assert max_label + 1 < (1 << _LAB_BITS) - 1, "label space too large"
     return TokenDB(tokens=tokens, n_itemsets=n_itemsets,

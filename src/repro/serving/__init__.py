@@ -10,30 +10,66 @@ Module map:
 
 * ``bank.py``    - compile a ``MiningResult`` into a packed pattern bank
                    (per-pattern int32 step programs + support/metadata
-                   rows) and canonical sequence fingerprints.
-* ``batch.py``   - the jitted embedding-join scan over
-                   (sequence, pattern) cells: dense ``batch_contains``,
-                   prescreen-compacted ``pair_contains``, the sound
-                   counts prescreen, inverted token index, frontier
-                   compaction and overflow flags; delegates the per-step
-                   predicate to ``repro.kernels.containment`` (Pallas
-                   kernel or jnp oracle).
+                   rows) and renaming-invariant canonical sequence
+                   fingerprints (cache keys that hit for any vertex
+                   bijection of a previously served sequence).
+* ``trie.py``    - the prefix-trie re-layout of a bank: mined rFTSs are
+                   nodes of the reverse-search spanning tree and share
+                   program prefixes, so the trie stores each distinct
+                   prefix once (LCP merging; one node per step row) and
+                   carries per-node residual ``node_req`` prescreen rows
+                   (min over the subtree's terminals) that prune whole
+                   subtrees at their highest failing ancestor.  See its
+                   docstring for when to prefer flat vs trie.
+* ``batch.py``   - the jitted embedding-join scans: the flat
+                   per-(sequence, pattern) layout (dense
+                   ``batch_contains``, prescreen-compacted
+                   ``pair_contains``) and the trie layout
+                   (level-synchronous ``trie_contains`` /
+                   ``trie_level_advance``, one frontier per
+                   (sequence, trie node) seeded from its parent's
+                   compacted frontier - bit-identical answers, shared
+                   prefixes joined once); plus the sound counts
+                   prescreens, inverted token index, frontier compaction
+                   and overflow flags.  Delegates the per-step predicate
+                   to ``repro.kernels.containment`` (Pallas kernel or
+                   jnp oracle).
 * ``server.py``  - ``PatternServer``: request batching into pow-2
-                   buckets, prescreen + pair join, fingerprint-keyed LRU
-                   cache, support-weighted top-k scoring, host-oracle
-                   fallback for overflow cells (results always exactly
-                   match ``core.containment``).
-* ``sharded.py`` - shard-by-pattern / shard-by-sequence serving step for
-                   device meshes (zero-collective shard_map).
+                   buckets, prescreen + join (``bank_layout="flat"`` or
+                   ``"trie"``), fingerprint-keyed LRU cache,
+                   support-weighted top-k scoring, device escalation +
+                   host-oracle fallback for overflow cells (results
+                   always exactly match ``core.containment``).
+* ``sharded.py`` - shard-by-pattern (flat) / shard-by-subtree (trie)
+                   serving steps for device meshes (zero-collective
+                   shard_map).
 """
-from .bank import PatternBank, compile_bank, sequence_fingerprint  # noqa: F401
+from .bank import (  # noqa: F401
+    PatternBank,
+    canonical_sequence_map,
+    compile_bank,
+    sequence_fingerprint,
+)
 from .batch import (  # noqa: F401
     batch_contains,
+    index_and_node_prescreen,
     index_and_prescreen,
     max_key_bucket,
     pair_contains,
     pair_contains_indexed,
     prescreen_counts,
+    trie_contains,
+    trie_level_advance,
 )
 from .server import PatternServer, QueryResult  # noqa: F401
-from .sharded import make_serving_step  # noqa: F401
+from .sharded import (  # noqa: F401
+    make_serving_step,
+    make_trie_serving_step,
+    stack_trie_shards,
+)
+from .trie import (  # noqa: F401
+    TrieBank,
+    build_trie,
+    compile_trie_bank,
+    parent_prefix_hits,
+)

@@ -33,6 +33,20 @@ undecided; the server re-checks just those against the host oracle.
 The whole scan is one jitted program (the step loop unrolls - L is
 small), so a serving step costs L kernel launches regardless of bank
 size, and shapes are static per (batch bucket, bank) pair.
+
+**Trie layout** (trie.py): the same step dynamics, but one frontier per
+(sequence, trie *node*) instead of per (sequence, pattern) - a
+level-synchronous scan over trie depth where a node's frontier is
+seeded from its parent's compacted frontier, so patterns sharing a
+program prefix share its join work.  Entry points: dense
+``trie_contains`` (shard_map-able via ``trie_contains_ref``), and the
+server's per-level ``trie_root_advance`` /
+``trie_level_advance_gather`` (seed gather fused into the jitted
+program - one dispatch per level) with the per-node residual-``req``
+prescreen ``index_and_node_prescreen``.  Because ``_step_once`` is
+shared and deterministic, trie and flat joins are bit-identical in both
+``contained`` and ``overflow``; the soundness contract above carries
+over unchanged.
 """
 from __future__ import annotations
 
@@ -113,6 +127,158 @@ def index_and_prescreen(tokens, req, *, n_label_keys: int):
     return order, start, count, possible
 
 
+def _step_once(tokens, order, start, count, cell_b, step_k, phi, psi,
+               valid, *, emax, tmax, use_kernel, block_g, uniform,
+               compact, count_frontier_ovf=False):
+    """One embedding-join step for N cells: evaluate the match predicate
+    for every (frontier row x window token x orientation) candidate of
+    step row ``step_k[i]`` against sequence ``cell_b[i]``, then compact
+    the accepted candidates into ``emax`` frontier slots.
+
+    This is the shared core of both bank layouts: the flat per-pattern
+    scan (``_join``) replays each pattern's whole program through it,
+    the trie join advances one frontier per (sequence, trie node) and
+    calls it once per trie level.  ``uniform`` promises every step row
+    is real (no ``step_valid=0`` padding), dropping one select.
+
+    Returns ``(phi_new, psi_new, new_valid, step_ovf)`` with
+    ``step_ovf = frontier_ovf | window_ovf``; with ``compact=False``
+    (terminal steps, where only "any candidate accepted" is needed)
+    skips compaction entirely and returns ``(accepted, step_ovf)``.
+    There ``count_frontier_ovf`` picks the overflow semantics: False
+    omits frontier overflow (exact and cheaper - nothing follows a
+    terminal step, so dropped candidates cannot lose anything; the
+    uniform-length flat path and the server's trie leaves do this),
+    True folds in ``#accepted > emax``, which equals the compacted
+    path's frontier flag bit-for-bit (dense ``trie_contains`` uses it
+    to stay bit-identical to dense ``batch_contains``, whose unpadded
+    final steps do run compaction).
+    """
+    T = tokens.shape[1]
+    N, Ein, NI = phi.shape  # Ein: 1 on the root frontier, E afterwards
+    NV = psi.shape[2]
+    E, Tm = emax, tmax
+    C = Ein * Tm * 2  # candidates: frontier rows x window x orient
+    nv_ids = jnp.arange(NV, dtype=jnp.int32)
+    ni_ids = jnp.arange(NI, dtype=jnp.int32)
+    m_ids = jnp.arange(Tm, dtype=jnp.int32)
+    cand_ids = jnp.arange(C, dtype=jnp.int32)
+    ty_s, pu1_s, pu2_s, lab_s, new_s, idx_s, sval_s, key_s = (
+        step_k[:, c] for c in range(8)
+    )
+
+    # ---- per-cell token window for this step's (type,label) bucket
+    st_sel = start[cell_b, key_s]   # [N]
+    ct_sel = count[cell_b, key_s]
+    wpos = jnp.minimum(st_sel[:, None] + m_ids[None, :], T - 1)
+    wvalid = m_ids[None, :] < ct_sel[:, None]
+    tpos = order[cell_b[:, None], wpos]       # [N, Tm]
+    tok_w = tokens[cell_b[:, None], tpos]     # [N, Tm, 6]
+    tok_w = tok_w.at[..., 5].set(
+        jnp.where(wvalid, tok_w[..., 5], 0)
+    )
+
+    # ---- per-row step table for the predicate
+    idx_b = jnp.broadcast_to(idx_s[:, None, None], (N, Ein, 1))
+    cur_phi = jnp.take_along_axis(phi, idx_b, axis=-1)[..., 0]
+    prev_b = jnp.clip(idx_b - 1, 0, NI - 1)
+    prev_phi = jnp.take_along_axis(phi, prev_b, axis=-1)[..., 0]
+    prev_phi = jnp.where(idx_s[:, None] > 0, prev_phi, -1)
+    if uniform:
+        row_valid = valid  # every step row is a real step
+    else:
+        row_valid = valid & (sval_s[:, None] > 0)
+
+    def bro(x):  # [N] -> [N, Ein]
+        return jnp.broadcast_to(x[:, None], (N, Ein))
+
+    srow = jnp.stack(
+        [bro(ty_s), bro(pu1_s), bro(pu2_s), bro(lab_s), bro(new_s),
+         prev_phi, cur_phi, row_valid.astype(jnp.int32)],
+        axis=-1,
+    )
+
+    # ---- match predicate over (cell, row, window token)
+    if use_kernel:
+        bits = contain_step_blocked(tok_w, psi, srow, block_g=block_g)
+    else:
+        bits = contain_step_core(tok_w, psi, srow)
+
+    # ---- compact accepted candidates into the emax frontier slots:
+    # first E in (row, token, orientation) order, by iterative
+    # min-extraction - E passes of trivial ops beat a [N, C] sort by
+    # a wide margin on CPU and keep everything in VREG-sized tiles
+    flags = (
+        jnp.stack([bits & 1, (bits >> 1) & 1], -1) > 0
+    ).reshape(N, C)
+    # a truncated window may lose matches only if the frontier was
+    # still live going into the step
+    window_ovf = (ct_sel > Tm) & valid.any(-1)
+    if not compact:
+        if count_frontier_ovf:
+            # equals the compacted path's frontier flag: the first-E
+            # extraction leaves a flagged candidate iff #accepted > E
+            frontier_ovf = flags.sum(-1) > E
+            return flags.any(-1), window_ovf | frontier_ovf
+        return flags.any(-1), window_ovf
+    cand_row = cand_ids[None, :]
+    sels = []
+    last = jnp.full((N, 1), -1, jnp.int32)
+    for _ in range(E):
+        cur = jnp.min(
+            jnp.where(flags & (cand_row > last), cand_row, C),
+            -1, keepdims=True,
+        )
+        sels.append(cur)
+        last = cur
+    # anything still flagged past the E extracted slots was dropped
+    frontier_ovf = jnp.min(
+        jnp.where(flags & (cand_row > last), cand_row, C), -1
+    ) < C
+    sel = jnp.concatenate(sels, -1)  # [N, E] ascending, C = empty
+    new_valid = sel < C
+    sel = jnp.minimum(sel, C - 1)
+    e_old = sel // (Tm * 2)
+    t_w = (sel // 2) % Tm
+    var = sel % 2
+
+    phi_src = jnp.take_along_axis(phi, e_old[..., None], axis=1)
+    psi_src = jnp.take_along_axis(psi, e_old[..., None], axis=1)
+
+    def wfield(f):  # [N, E] gather of tok_w[n, t_w, f]
+        return jnp.take_along_axis(tok_w[..., f], t_w, axis=1)
+
+    u1_g, u2_g, j_g = wfield(1), wfield(2), wfield(4)
+
+    # phi: the first TR of a new pattern itemset claims data itemset j
+    claim = (new_s[:, None] > 0) & new_valid
+    onehot_ni = ni_ids[None, None, :] == idx_s[:, None, None]
+    phi_new = jnp.where(
+        onehot_ni & claim[..., None], j_g[..., None], phi_src
+    )
+
+    # psi: fresh pattern vertices bind per the matched orientation
+    a_g = jnp.where(var == 0, u1_g, u2_g)
+    b_g = jnp.where(var == 0, u2_g, u1_g)
+    is_v = (ty_s <= 2)[:, None]
+    pu1_b = jnp.broadcast_to(pu1_s[:, None, None], (N, E, 1))
+    pu2_b = jnp.broadcast_to(pu2_s[:, None, None], (N, E, 1))
+    fresh1 = jnp.take_along_axis(psi_src, pu1_b, axis=-1)[..., 0] < 0
+    fresh2 = jnp.take_along_axis(psi_src, pu2_b, axis=-1)[..., 0] < 0
+    onehot1 = nv_ids[None, None, :] == pu1_b
+    onehot2 = nv_ids[None, None, :] == pu2_b
+    assign1 = jnp.where(is_v, u1_g, a_g)
+    psi_new = jnp.where(
+        onehot1 & (fresh1 & new_valid)[..., None],
+        assign1[..., None], psi_src,
+    )
+    psi_new = jnp.where(
+        onehot2 & ((~is_v) & fresh2 & new_valid)[..., None],
+        b_g[..., None], psi_new,
+    )
+    return phi_new, psi_new, new_valid, frontier_ovf | window_ovf
+
+
 def _join(tokens, order, start, count, cell_b, cell_steps, *,
           nv, emax, tmax, use_kernel, block_g, uniform_length=False):
     """The embedding-join scan over N cells (cell i = sequence
@@ -121,167 +287,52 @@ def _join(tokens, order, start, count, cell_b, cell_steps, *,
     which drops the pass-through selects and lets the final step skip
     compaction and the state update entirely.  Returns
     (contained [N] bool, overflow [N] bool)."""
-    B, T, _ = tokens.shape
     N, L, _ = cell_steps.shape
     NI = L  # a pattern has at most as many itemsets as steps
-    NV = nv
-    E, Tm = emax, tmax
     tokens = tokens.astype(jnp.int32)
     cell_steps = cell_steps.astype(jnp.int32)
     cell_b = cell_b.astype(jnp.int32)
 
-    nv_ids = jnp.arange(NV, dtype=jnp.int32)
-    ni_ids = jnp.arange(NI, dtype=jnp.int32)
-    m_ids = jnp.arange(Tm, dtype=jnp.int32)
-
     # step 0 always joins against the single root embedding, so the
     # initial frontier is one row; compaction widens it to E rows
-    phi0 = jnp.full((N, 1, NI), PAD_PHI, jnp.int32)
-    psi0 = jnp.full((N, 1, NV), PAD_PSI, jnp.int32)
-    valid0 = jnp.ones((N, 1), jnp.bool_)
-    overflow0 = jnp.zeros((N,), jnp.bool_)
+    phi = jnp.full((N, 1, NI), PAD_PHI, jnp.int32)
+    psi = jnp.full((N, 1, nv), PAD_PSI, jnp.int32)
+    valid = jnp.ones((N, 1), jnp.bool_)
+    overflow = jnp.zeros((N,), jnp.bool_)
 
-    def body(state, step_k, final):
-        # NOTE: called from an unrolled python loop, not lax.scan - the
-        # scan + shard_map combination miscompiles on the jax 0.4 CPU
-        # backend (dropped matches on non-zero data shards), and L is
-        # small enough that unrolling is also the faster choice.
-        # ``final`` (uniform-length callers only, where every cell ends
-        # at step L-1) short-circuits the step: containment just needs
-        # "any candidate accepted", so frontier compaction and the
-        # phi/psi update are skipped entirely.
-        phi, psi, valid, overflow = state
-        Ein = psi.shape[1]  # 1 on step 0, E afterwards
-        C = Ein * Tm * 2  # candidates: frontier rows x window x orient
-        cand_ids = jnp.arange(C, dtype=jnp.int32)
-        ty_s, pu1_s, pu2_s, lab_s, new_s, idx_s, sval_s, key_s = (
-            step_k[:, c] for c in range(8)
-        )
-
-        # ---- per-cell token window for this step's (type,label) bucket
-        st_sel = start[cell_b, key_s]   # [N]
-        ct_sel = count[cell_b, key_s]
-        wpos = jnp.minimum(st_sel[:, None] + m_ids[None, :], T - 1)
-        wvalid = m_ids[None, :] < ct_sel[:, None]
-        tpos = order[cell_b[:, None], wpos]       # [N, Tm]
-        tok_w = tokens[cell_b[:, None], tpos]     # [N, Tm, 6]
-        tok_w = tok_w.at[..., 5].set(
-            jnp.where(wvalid, tok_w[..., 5], 0)
-        )
-
-        # ---- per-row step table for the predicate
-        idx_b = jnp.broadcast_to(idx_s[:, None, None], (N, Ein, 1))
-        cur_phi = jnp.take_along_axis(phi, idx_b, axis=-1)[..., 0]
-        prev_b = jnp.clip(idx_b - 1, 0, NI - 1)
-        prev_phi = jnp.take_along_axis(phi, prev_b, axis=-1)[..., 0]
-        prev_phi = jnp.where(idx_s[:, None] > 0, prev_phi, -1)
-        if uniform_length:
-            row_valid = valid  # every step row is a real step
-        else:
-            row_valid = valid & (sval_s[:, None] > 0)
-
-        def bro(x):  # [N] -> [N, Ein]
-            return jnp.broadcast_to(x[:, None], (N, Ein))
-
-        srow = jnp.stack(
-            [bro(ty_s), bro(pu1_s), bro(pu2_s), bro(lab_s), bro(new_s),
-             prev_phi, cur_phi, row_valid.astype(jnp.int32)],
-            axis=-1,
-        )
-
-        # ---- match predicate over (cell, row, window token)
-        if use_kernel:
-            bits = contain_step_blocked(tok_w, psi, srow, block_g=block_g)
-        else:
-            bits = contain_step_core(tok_w, psi, srow)
-
-        # ---- compact accepted candidates into the emax frontier slots:
-        # first E in (row, token, orientation) order, by iterative
-        # min-extraction - E passes of trivial ops beat a [N, C] sort by
-        # a wide margin on CPU and keep everything in VREG-sized tiles
-        flags = (
-            jnp.stack([bits & 1, (bits >> 1) & 1], -1) > 0
-        ).reshape(N, C)
-        # a truncated window may lose matches only if the frontier was
-        # still live going into the step
-        window_ovf = (ct_sel > Tm) & valid.any(-1)
-        if final:
-            return flags.any(-1), overflow | window_ovf
-        cand_row = cand_ids[None, :]
-        sels = []
-        last = jnp.full((N, 1), -1, jnp.int32)
-        for _ in range(E):
-            cur = jnp.min(
-                jnp.where(flags & (cand_row > last), cand_row, C),
-                -1, keepdims=True,
-            )
-            sels.append(cur)
-            last = cur
-        # anything still flagged past the E extracted slots was dropped
-        frontier_ovf = jnp.min(
-            jnp.where(flags & (cand_row > last), cand_row, C), -1
-        ) < C
-        sel = jnp.concatenate(sels, -1)  # [N, E] ascending, C = empty
-        new_valid = sel < C
-        sel = jnp.minimum(sel, C - 1)
-        e_old = sel // (Tm * 2)
-        t_w = (sel // 2) % Tm
-        var = sel % 2
-
-        phi_src = jnp.take_along_axis(phi, e_old[..., None], axis=1)
-        psi_src = jnp.take_along_axis(psi, e_old[..., None], axis=1)
-
-        def wfield(f):  # [N, E] gather of tok_w[n, t_w, f]
-            return jnp.take_along_axis(tok_w[..., f], t_w, axis=1)
-
-        u1_g, u2_g, j_g = wfield(1), wfield(2), wfield(4)
-
-        # phi: the first TR of a new pattern itemset claims data itemset j
-        claim = (new_s[:, None] > 0) & new_valid
-        onehot_ni = ni_ids[None, None, :] == idx_s[:, None, None]
-        phi_new = jnp.where(
-            onehot_ni & claim[..., None], j_g[..., None], phi_src
-        )
-
-        # psi: fresh pattern vertices bind per the matched orientation
-        a_g = jnp.where(var == 0, u1_g, u2_g)
-        b_g = jnp.where(var == 0, u2_g, u1_g)
-        is_v = (ty_s <= 2)[:, None]
-        pu1_b = jnp.broadcast_to(pu1_s[:, None, None], (N, E, 1))
-        pu2_b = jnp.broadcast_to(pu2_s[:, None, None], (N, E, 1))
-        fresh1 = jnp.take_along_axis(psi_src, pu1_b, axis=-1)[..., 0] < 0
-        fresh2 = jnp.take_along_axis(psi_src, pu2_b, axis=-1)[..., 0] < 0
-        onehot1 = nv_ids[None, None, :] == pu1_b
-        onehot2 = nv_ids[None, None, :] == pu2_b
-        assign1 = jnp.where(is_v, u1_g, a_g)
-        psi_new = jnp.where(
-            onehot1 & (fresh1 & new_valid)[..., None],
-            assign1[..., None], psi_src,
-        )
-        psi_new = jnp.where(
-            onehot2 & ((~is_v) & fresh2 & new_valid)[..., None],
-            b_g[..., None], psi_new,
-        )
-
-        ovf_step = frontier_ovf | window_ovf
-        if uniform_length:
-            return (phi_new, psi_new, new_valid, ovf_step | overflow), None
-        # ---- pass-through for cells already past their last step
-        alive = sval_s > 0
-        phi = jnp.where(alive[:, None, None], phi_new, phi)
-        psi = jnp.where(alive[:, None, None], psi_new, psi)
-        valid = jnp.where(alive[:, None], new_valid, valid)
-        overflow = jnp.where(alive, ovf_step | overflow, overflow)
-        return (phi, psi, valid, overflow), None
-
-    state = (phi0, psi0, valid0, overflow0)
+    # NOTE: an unrolled python loop, not lax.scan - the scan + shard_map
+    # combination miscompiles on the jax 0.4 CPU backend (dropped
+    # matches on non-zero data shards, see the gated repro in
+    # tests/test_scan_shardmap.py), and L is small enough that
+    # unrolling is also the faster choice.
     for k in range(L):
-        final = uniform_length and k == L - 1
-        out = body(state, cell_steps[:, k], final)
-        if final:
-            return out
-        state, _ = out
-    _, _, valid, overflow = state
+        step_k = cell_steps[:, k]
+        if uniform_length and k == L - 1:
+            # every cell ends at step L-1: containment just needs "any
+            # candidate accepted", so compaction is skipped entirely
+            accepted, window_ovf = _step_once(
+                tokens, order, start, count, cell_b, step_k,
+                phi, psi, valid, emax=emax, tmax=tmax,
+                use_kernel=use_kernel, block_g=block_g,
+                uniform=True, compact=False,
+            )
+            return accepted, overflow | window_ovf
+        phi_new, psi_new, new_valid, ovf_step = _step_once(
+            tokens, order, start, count, cell_b, step_k,
+            phi, psi, valid, emax=emax, tmax=tmax,
+            use_kernel=use_kernel, block_g=block_g,
+            uniform=uniform_length, compact=True,
+        )
+        if uniform_length:
+            phi, psi, valid = phi_new, psi_new, new_valid
+            overflow = overflow | ovf_step
+        else:
+            # ---- pass-through for cells already past their last step
+            alive = step_k[:, 6] > 0
+            phi = jnp.where(alive[:, None, None], phi_new, phi)
+            psi = jnp.where(alive[:, None, None], psi_new, psi)
+            valid = jnp.where(alive[:, None], new_valid, valid)
+            overflow = jnp.where(alive, ovf_step | overflow, overflow)
     return valid.any(-1), overflow
 
 
@@ -343,6 +394,255 @@ def pair_contains_indexed(
         use_kernel=use_kernel, block_g=block_g,
         uniform_length=uniform_length,
     )
+
+
+# --------------------------------------------------------------- trie join
+#
+# The trie layout (trie.py) deduplicates shared prefix work: instead of
+# one frontier per (sequence, pattern) replaying the whole program, the
+# join advances one frontier per (sequence, trie node) in a
+# level-synchronous scan over trie depth - a node's frontier is seeded
+# from its parent's compacted frontier, so sibling patterns pay for
+# their common prefix exactly once.  The per-step dynamics are the same
+# ``_step_once`` as the flat join (same candidate order, same first-emax
+# compaction, same overflow flags), so for every pattern the frontier
+# sequence along its root-to-terminal path is *bit-identical* to the
+# flat join's - contained AND overflow agree exactly, and the
+# overflow-soundness contract carries over unchanged.
+
+
+def trie_root_state(n: int, ni: int, nv: int):
+    """The seed state for depth-1 trie cells: one root embedding per
+    cell, exactly the flat join's step-0 frontier."""
+    phi = jnp.full((n, 1, ni), PAD_PHI, jnp.int32)
+    psi = jnp.full((n, 1, nv), PAD_PSI, jnp.int32)
+    valid = jnp.ones((n, 1), jnp.bool_)
+    ovf = jnp.zeros((n,), jnp.bool_)
+    return phi, psi, valid, ovf
+
+
+def trie_level_advance_ref(
+    tokens, order, start, count,   # tokens + prebuilt inverted index
+    seed_phi, seed_psi, seed_valid, seed_ovf,  # [N,Ein,*], [N,Ein], [N]
+    cell_b, cell_step,             # [N], [N, STEP_FIELDS]
+    *,
+    emax: int,
+    tmax: int,
+    use_kernel: bool = False,
+    block_g: int = 64,
+    compact: bool = True,
+    count_frontier_ovf: bool = False,
+):
+    """Advance N (sequence, trie node) cells one step from their seeded
+    parent frontiers - the server's per-level entry point.  Returns
+    ``(phi, psi, valid, accepted [N], ovf_state [N], ovf_term [N])``;
+    with ``compact=False`` (leaf cells) just ``(accepted, ovf)``, where
+    ``count_frontier_ovf`` selects the terminal-step overflow semantics
+    (see ``_step_once``).  ``ovf_state`` (path frontier + window
+    losses) is what children must inherit; ``ovf_term`` drops this
+    step's own frontier overflow - the accept bit is exact no matter
+    what compaction dropped, so a terminal ending *here* is undecided
+    only via ``ovf_term`` (exactly the flat uniform-length semantics;
+    using ``ovf_state`` for terminals would spuriously escalate).
+    Padding cells carry ``step_valid=0`` rows, ``accepted=False``."""
+    tokens = tokens.astype(jnp.int32)
+    cell_step = cell_step.astype(jnp.int32)
+    cell_b = cell_b.astype(jnp.int32)
+    if not compact:
+        accepted, step_ovf = _step_once(
+            tokens, order, start, count, cell_b, cell_step,
+            seed_phi, seed_psi, seed_valid, emax=emax, tmax=tmax,
+            use_kernel=use_kernel, block_g=block_g,
+            uniform=False, compact=False,
+            count_frontier_ovf=count_frontier_ovf,
+        )
+        return accepted, seed_ovf | step_ovf
+    phi, psi, valid, ovf_step = _step_once(
+        tokens, order, start, count, cell_b, cell_step,
+        seed_phi, seed_psi, seed_valid, emax=emax, tmax=tmax,
+        use_kernel=use_kernel, block_g=block_g,
+        uniform=False, compact=True,
+    )
+    ct_sel = count[cell_b, cell_step[:, 7]]
+    window_ovf = (ct_sel > tmax) & seed_valid.any(-1)
+    return (phi, psi, valid, valid.any(-1), seed_ovf | ovf_step,
+            seed_ovf | window_ovf)
+
+
+trie_level_advance = functools.partial(
+    jax.jit,
+    static_argnames=("emax", "tmax", "use_kernel", "block_g", "compact",
+                     "count_frontier_ovf"),
+)(trie_level_advance_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ni", "nv", "emax", "tmax", "use_kernel", "block_g",
+                     "compact"),
+)
+def trie_root_advance(
+    tokens, order, start, count, cells,
+    *,
+    ni: int,
+    nv: int,
+    emax: int,
+    tmax: int,
+    use_kernel: bool = False,
+    block_g: int = 64,
+    compact: bool = True,
+):
+    """``trie_level_advance`` for depth-1 cells: the root seed (one
+    root embedding per cell) is built inside the jitted program, so the
+    whole level costs a single dispatch.  ``cells`` packs
+    ``[cell_b, parent_idx(unused), step row]`` as one [N, 2+F] int32
+    upload (the server's per-call host->device traffic)."""
+    seed = trie_root_state(cells.shape[0], ni, nv)
+    return trie_level_advance_ref(
+        tokens, order, start, count, *seed, cells[:, 0], cells[:, 2:],
+        emax=emax, tmax=tmax, use_kernel=use_kernel, block_g=block_g,
+        compact=compact,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("emax", "tmax", "use_kernel", "block_g", "compact"),
+)
+def trie_level_advance_gather(
+    tokens, order, start, count,
+    prev_phi, prev_psi, prev_valid, prev_ovf,  # previous level's cells
+    cells,  # [N, 2+F] int32: cell_b, parent cell index, step row
+    *,
+    emax: int,
+    tmax: int,
+    use_kernel: bool = False,
+    block_g: int = 64,
+    compact: bool = True,
+):
+    """``trie_level_advance`` with the parent-frontier gather fused into
+    the jitted program (cell i seeds from the previous level's cell
+    ``cells[i, 1]``) - one dispatch and one host upload per level
+    instead of four eager gathers plus three uploads plus the advance.
+    """
+    pidx = cells[:, 1]
+    seed = (prev_phi[pidx], prev_psi[pidx], prev_valid[pidx],
+            prev_ovf[pidx])
+    return trie_level_advance_ref(
+        tokens, order, start, count, *seed, cells[:, 0], cells[:, 2:],
+        emax=emax, tmax=tmax, use_kernel=use_kernel, block_g=block_g,
+        compact=compact,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_label_keys",))
+def index_and_node_prescreen(tokens, node_req, *, n_label_keys: int):
+    """Inverted token index plus the per-node residual-``req`` prescreen
+    (trie.py): ``possible[b, n] = counts_b >= node_req_n`` elementwise.
+    Monotone up the trie, so a failing node prunes its whole subtree at
+    its highest failing ancestor."""
+    order, start, count = build_token_index(
+        tokens, n_label_keys=n_label_keys
+    )
+    possible = (count[:, None, :] >= node_req[None, :, :]).all(-1)
+    return order, start, count, possible
+
+
+def trie_contains_ref(
+    tokens,          # [B, T, 6] int32 (encode_db layout)
+    lvl_steps,       # [D, Mh, STEP_FIELDS] int32 (TrieLevels.steps)
+    lvl_parent_pos,  # [D, Mh] int32
+    term_level,      # [P] int32 (TrieLevels.term_level)
+    term_pos,        # [P] int32
+    pattern_valid,   # [P] int32
+    *,
+    nv: int,
+    n_label_keys: int,
+    emax: int = 8,
+    tmax: int = 16,
+    use_kernel: bool = False,
+    block_g: int = 64,
+):
+    """Dense level-synchronous trie containment: every (sequence, trie
+    node) cell advances once per level, seeded from its parent's
+    compacted frontier; pattern answers are read off at their terminal
+    (level, position).  Unjitted body, traceable inside shard_map - use
+    ``trie_contains`` standalone.  Bit-identical to ``batch_contains``
+    over the same bank.  Returns (contained [B,P] bool, ovf [B,P] bool).
+    """
+    B = tokens.shape[0]
+    D, Mh, _ = lvl_steps.shape
+    P = pattern_valid.shape[0]
+    NI = D  # a pattern has at most as many itemsets as trie levels
+    tokens = tokens.astype(jnp.int32)
+    lvl_steps = lvl_steps.astype(jnp.int32)
+    order, start, count = build_token_index(
+        tokens, n_label_keys=n_label_keys
+    )
+    cell_b = jnp.repeat(jnp.arange(B, dtype=jnp.int32), Mh)
+    # virtual root level: one root embedding per sequence
+    phi, psi, valid, _ = trie_root_state(B, NI, nv)
+    phi = phi[:, None]          # [B, Mprev=1, Ein=1, NI]
+    psi = psi[:, None]
+    valid = valid[:, None]
+    ovf = jnp.zeros((B, 1), jnp.bool_)
+    accs, ovfs = [], []
+    for d in range(D):
+        pp = lvl_parent_pos[d]  # [Mh] (all zeros on level 0)
+        seed_phi = phi[:, pp].reshape(B * Mh, *phi.shape[2:])
+        seed_psi = psi[:, pp].reshape(B * Mh, *psi.shape[2:])
+        seed_valid = valid[:, pp].reshape(B * Mh, valid.shape[2])
+        seed_ovf = ovf[:, pp].reshape(B * Mh)
+        step_d = jnp.broadcast_to(
+            lvl_steps[d][None], (B, Mh, lvl_steps.shape[2])
+        ).reshape(B * Mh, lvl_steps.shape[2])
+        if d == D - 1:
+            # the deepest level is all leaves: skip compaction but keep
+            # the compacted path's frontier-overflow semantics so the
+            # dense outputs stay bit-identical to batch_contains
+            accepted, lovf = trie_level_advance_ref(
+                tokens, order, start, count,
+                seed_phi, seed_psi, seed_valid, seed_ovf,
+                cell_b, step_d, emax=emax, tmax=tmax,
+                use_kernel=use_kernel, block_g=block_g, compact=False,
+                count_frontier_ovf=True,
+            )
+        else:
+            # dense outputs use the full path overflow (ovf_state) for
+            # terminals too: that is what batch_contains reports (its
+            # unpadded final steps run compaction), and the dense
+            # contract is bit-identity with it
+            nphi, npsi, nvalid, accepted, lovf, _ = \
+                trie_level_advance_ref(
+                    tokens, order, start, count,
+                    seed_phi, seed_psi, seed_valid, seed_ovf,
+                    cell_b, step_d, emax=emax, tmax=tmax,
+                    use_kernel=use_kernel, block_g=block_g,
+                    compact=True,
+                )
+            phi = nphi.reshape(B, Mh, *nphi.shape[1:])
+            psi = npsi.reshape(B, Mh, *npsi.shape[1:])
+            valid = nvalid.reshape(B, Mh, nvalid.shape[1])
+            ovf = lovf.reshape(B, Mh)
+        accs.append(accepted.reshape(B, Mh))
+        ovfs.append(lovf.reshape(B, Mh))
+    if not accs:  # empty trie: nothing is ever contained
+        zero = jnp.zeros((B, P), jnp.bool_)
+        return zero, zero
+    A = jnp.stack(accs)   # [D, B, Mh]
+    O = jnp.stack(ovfs)
+    real = (pattern_valid > 0)[None, :]
+    contained = A[term_level, :, term_pos].T & real
+    overflow = O[term_level, :, term_pos].T & real
+    return contained, overflow
+
+
+trie_contains = functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nv", "n_label_keys", "emax", "tmax", "use_kernel", "block_g",
+    ),
+)(trie_contains_ref)
 
 
 def batch_contains_ref(

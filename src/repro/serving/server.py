@@ -10,12 +10,25 @@ server owns the production concerns around the batch.py entry points:
 * the counts prescreen - only (sequence, pattern) pairs that pass the
   sound necessary condition are joined (``pair_contains``), typically a
   small fraction of the dense grid,
-* an LRU cache keyed on canonical sequence fingerprints (bank.py),
+* an LRU cache keyed on canonical sequence fingerprints (bank.py;
+  renaming-invariant, so bijection-renamed replays of a sequence hit),
 * exactness - cells flagged ``overflow & ~contained`` (the only
   undecided ones, see batch.py) are re-checked against the
   ``core.containment`` host oracle, so results always equal the oracle,
 * counters (queries, cache hits, device batches, prescreened pairs,
-  fallback cells) for the ops dashboards.
+  joined steps, fallback cells) for the ops dashboards.
+
+Two bank layouts share all of the above (``bank_layout=``):
+
+* ``"flat"`` - one (sequence, pattern) cell per surviving prescreen
+  pair, grouped by program length; each cell replays its whole program.
+* ``"trie"`` - the bank compiled into a prefix trie (trie.py); the join
+  advances one frontier per (sequence, trie node) level-synchronously,
+  seeded from the parent node's frontier, so patterns sharing a prefix
+  pay for it once.  The prescreen runs per node against the residual
+  ``node_req`` rows and prunes whole subtrees at their highest failing
+  ancestor.  Answers are identical either way (both are exact); the
+  trie wins on banks with real prefix sharing (see trie.py).
 """
 from __future__ import annotations
 
@@ -31,10 +44,14 @@ from ..core.graphseq import TRSeq
 from ..mining.encoding import encode_db
 from .bank import PatternBank, sequence_fingerprint
 from .batch import (
+    index_and_node_prescreen,
     index_and_prescreen,
     max_key_bucket,
     pair_contains_indexed,
+    trie_level_advance_gather,
+    trie_root_advance,
 )
+from .trie import TrieBank, build_trie
 
 
 def _pow2(n: int) -> int:
@@ -68,6 +85,8 @@ class PatternServer:
         topk: int = 10,
         use_kernel: bool = False,
         block_g: int = 64,
+        bank_layout: str = "flat",
+        trie: Optional[TrieBank] = None,
     ):
         self.bank = bank
         self.emax = emax
@@ -77,6 +96,9 @@ class PatternServer:
         self.topk = topk
         self.use_kernel = use_kernel
         self.block_g = block_g
+        if bank_layout not in ("flat", "trie"):
+            raise ValueError(f"unknown bank_layout {bank_layout!r}")
+        self.bank_layout = bank_layout
         self._req = jnp.asarray(bank.req)
         # patterns grouped by program length: the join runs exactly L_g
         # steps per group instead of the bank-wide maximum, and the
@@ -87,10 +109,57 @@ class PatternServer:
             rows = np.nonzero(n_steps == L_g)[0].astype(np.int32)
             steps_g = jnp.asarray(bank.steps[rows][:, :L_g])
             self._groups.append((rows, steps_g))
+        # both layouts escalate undecided cells through a uniform-length
+        # group replay (_resolve_undecided): map each bank row to its
+        # (group, position)
+        self._row_group = np.zeros(max(bank.n_patterns, 1), np.int32)
+        self._row_pos = np.zeros(max(bank.n_patterns, 1), np.int32)
+        for gi, (rows, _) in enumerate(self._groups):
+            self._row_group[rows] = gi
+            self._row_pos[rows] = np.arange(len(rows), dtype=np.int32)
+        self.trie: Optional[TrieBank] = None
+        if bank_layout == "trie":
+            t = self.trie = trie if trie is not None else build_trie(bank)
+            assert t.bank is bank, "trie must be built over this bank"
+            self._node_req = jnp.asarray(
+                t.node_req.reshape(t.n_nodes, bank.req.shape[1])
+            )
+            # per-level host tables driving the level-synchronous scan.
+            # Leaf nodes never seed children, so their cells take the
+            # compaction-free path (the trie's analogue of the flat
+            # join's uniform-length final step); only internal-node
+            # cells pay for frontier compaction.
+            has_child = np.zeros(max(t.n_nodes, 1), bool)
+            has_child[t.node_parent[t.node_parent >= 0]] = True
+            self._tlevels = []
+            term_depth = t.node_depth[t.terminal_node[: bank.n_patterns]]
+            for d, nodes in enumerate(t.levels):
+                rows = np.nonzero(term_depth == d + 1)[0]
+                term_pos = t.node_pos[t.terminal_node[rows]]
+                leaf = ~has_child[nodes]
+                term_leaf = leaf[term_pos]
+                self._tlevels.append({
+                    "nodes": nodes,
+                    "leaf": leaf,
+                    "steps": t.node_step[nodes],
+                    "parent_pos": (
+                        t.node_pos[t.node_parent[nodes]] if d
+                        else np.zeros(len(nodes), np.int32)
+                    ),
+                    "term_rows_int": rows[~term_leaf],
+                    "term_pos_int": term_pos[~term_leaf],
+                    "term_rows_leaf": rows[term_leaf],
+                    "term_pos_leaf": term_pos[term_leaf],
+                })
         self._cache: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        # pairs_* count (sequence, pattern) prescreen pairs (flat
+        # layout); cells_* count (sequence, trie node) prescreen cells
+        # (trie layout) - deliberately distinct keys, the units differ
         self.stats: Dict[str, int] = {
             "queries": 0, "cache_hits": 0, "device_batches": 0,
             "pairs_possible": 0, "pairs_prescreened": 0,
+            "cells_possible": 0, "cells_prescreened": 0,
+            "joined_steps": 0,
             "escalated_cells": 0, "host_fallback_cells": 0,
         }
 
@@ -98,6 +167,8 @@ class PatternServer:
     def _run_batch(self, seqs: List[TRSeq]) -> np.ndarray:
         """Exact containment rows [len(seqs), n_patterns] for one chunk."""
         assert len(seqs) <= self.max_batch
+        if self.bank_layout == "trie":
+            return self._run_batch_trie(seqs)
         bank = self.bank
         tdb = encode_db(
             seqs,
@@ -117,6 +188,7 @@ class PatternServer:
         self.stats["pairs_possible"] += int(possible.sum())
         self.stats["pairs_prescreened"] += int(possible.size)
         contained = np.zeros((len(seqs), bank.n_patterns), bool)
+        ovf_out = np.zeros_like(contained)
         for rows, steps_g in self._groups:
             b_idx, g_idx = np.nonzero(possible[:, rows])
             if not len(b_idx):
@@ -128,6 +200,7 @@ class PatternServer:
                 contained[b_idx, rows[g_idx]] = True
                 continue
             n = len(b_idx)
+            self.stats["joined_steps"] += n * int(steps_g.shape[1])
             npad = _pow2(n)
             bi = np.zeros(npad, np.int32)
             pi = np.zeros(npad, np.int32)
@@ -139,35 +212,169 @@ class PatternServer:
                 use_kernel=self.use_kernel, block_g=self.block_g,
                 uniform_length=True,
             )
-            c = np.array(c)[:n]
-            o = np.array(o)[:n]
-            # only overflow & ~contained cells are undecided (batch.py);
-            # escalate them through a wider device frontier before
-            # paying for the per-cell host oracle
-            und = np.nonzero(o & ~c)[0]
-            if len(und) and self.emax_retry > self.emax:
-                m = len(und)
+            p_global = rows[g_idx]
+            contained[b_idx, p_global] = np.array(c)[:n]
+            ovf_out[b_idx, p_global] = np.array(o)[:n]
+        self._resolve_undecided(
+            tokens, order, start, count, tmax, contained, ovf_out, seqs
+        )
+        return contained
+
+    def _resolve_undecided(self, tokens, order, start, count, tmax,
+                           contained, ovf, seqs):
+        """Resolve every ``ovf & ~contained`` cell in place - the only
+        undecided ones (batch.py) - first through a wider device
+        frontier (uniform-length replay per program-length group), then
+        the per-cell host oracle.  Shared by both bank layouts: this is
+        the whole exactness contract."""
+        bank = self.bank
+        und_b, und_p = np.nonzero(ovf & ~contained)
+        if len(und_b) and self.emax_retry > self.emax:
+            und_g = self._row_group[und_p]
+            for gi, (rows, steps_g) in enumerate(self._groups):
+                sel = und_g == gi
+                if not sel.any():
+                    continue
+                ub, up = und_b[sel], und_p[sel]
+                m = len(ub)
                 mpad = _pow2(m)
-                bi2 = np.zeros(mpad, np.int32)
-                pi2 = np.zeros(mpad, np.int32)
-                bi2[:m], pi2[:m] = b_idx[und], g_idx[und]
+                bi = np.zeros(mpad, np.int32)
+                pi = np.zeros(mpad, np.int32)
+                bi[:m], pi[:m] = ub, self._row_pos[up]
                 c2, o2 = pair_contains_indexed(
                     tokens, order, start, count, steps_g,
-                    jnp.asarray(bi2), jnp.asarray(pi2),
+                    jnp.asarray(bi), jnp.asarray(pi),
                     nv=bank.nv, emax=self.emax_retry, tmax=tmax,
                     use_kernel=self.use_kernel, block_g=self.block_g,
                     uniform_length=True,
                 )
-                c[und] = np.asarray(c2)[:m]
-                o[und] = np.asarray(o2)[:m]
+                contained[ub, up] = np.asarray(c2)[:m]
+                ovf[ub, up] = np.asarray(o2)[:m]
                 self.stats["escalated_cells"] += m
-            p_global = rows[g_idx]
-            contained[b_idx, p_global] = c
-            for i in np.nonzero(o & ~c)[0]:
-                contained[b_idx[i], p_global[i]] = contains(
-                    bank.patterns[p_global[i]], seqs[b_idx[i]]
+                self.stats["joined_steps"] += m * int(steps_g.shape[1])
+        for b, p in zip(*np.nonzero(ovf & ~contained)):
+            contained[b, p] = contains(bank.patterns[p], seqs[b])
+            self.stats["host_fallback_cells"] += 1
+
+    def _run_batch_trie(self, seqs: List[TRSeq]) -> np.ndarray:
+        """Trie-layout batch: one frontier per (sequence, trie node),
+        one device dispatch per trie level; a level's frontiers are
+        seeded by gathering its parents' compacted frontiers from the
+        previous level's cell array.  The residual-``req`` prescreen
+        compacts each level to its surviving cells (a pruned node's
+        subtree never seeds).  Same exactness contract as the flat
+        path: overflow-undecided terminals escalate through a wider
+        flat replay, then the host oracle."""
+        bank = self.bank
+        B0 = len(seqs)
+        contained = np.zeros((B0, bank.n_patterns), bool)
+        if not self._tlevels or not bank.n_patterns:
+            return contained
+        tdb = encode_db(
+            seqs,
+            pad_to=_pow2(max(
+                1, max(sum(len(it) for it in s) for s in seqs)
+            )),
+            pad_seqs_to=_pow2(len(seqs)),
+        )
+        tokens = jnp.asarray(tdb.tokens)
+        tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
+        order, start, count, possible = index_and_node_prescreen(
+            tokens, self._node_req, n_label_keys=bank.n_label_keys
+        )
+        poss = np.asarray(possible)[:B0]
+        self.stats["device_batches"] += 1
+        # node cells, not pattern pairs: a pattern spans several nodes,
+        # so these are NOT comparable to the flat layout's pairs_* keys
+        self.stats["cells_possible"] += int(poss.sum())
+        self.stats["cells_prescreened"] += int(poss.size)
+        ovf_out = np.zeros((B0, bank.n_patterns), bool)
+        D = len(self._tlevels)
+        prev = None      # device frontiers of the previous level's cells
+        pos_prev = None  # [B0, m_{d-1}] internal-cell index, -1 = none
+        fetch = []       # deferred device->host reads (one sync at end)
+
+        F = bank.steps.shape[2]
+
+        def _cells(b_idx, n_idx, lv, d, compact):
+            """Advance the given (sequence, node) cells one step.  One
+            packed [N, 2+F] upload carries cell_b / parent idx / step
+            rows."""
+            n = len(b_idx)
+            npad = _pow2(n)
+            cells = np.zeros((npad, 2 + F), np.int32)
+            cells[:n, 0] = b_idx
+            cells[:n, 2:] = lv["steps"][n_idx]
+            kw = dict(emax=self.emax, tmax=tmax,
+                      use_kernel=self.use_kernel, block_g=self.block_g,
+                      compact=compact)
+            if d == 0:
+                return trie_root_advance(
+                    tokens, order, start, count, jnp.asarray(cells),
+                    ni=D, nv=bank.nv, **kw,
                 )
-                self.stats["host_fallback_cells"] += 1
+            par = pos_prev[b_idx, lv["parent_pos"][n_idx]]
+            assert (par >= 0).all(), "parent cell pruned below child"
+            cells[:n, 1] = par
+            return trie_level_advance_gather(
+                tokens, order, start, count, *prev,
+                jnp.asarray(cells), **kw,
+            )
+
+        for d, lv in enumerate(self._tlevels):
+            act = poss[:, lv["nodes"]]
+            b_idx, n_idx = np.nonzero(act)
+            if not len(b_idx):
+                break  # prescreen is monotone: no deeper cell survives
+            is_leaf = lv["leaf"][n_idx]
+            lb, ln = b_idx[is_leaf], n_idx[is_leaf]
+            ib, inn = b_idx[~is_leaf], n_idx[~is_leaf]
+            # ---- leaf cells: compaction-free accept test.  Depth-1
+            # leaves skip the join entirely: the node prescreen IS the
+            # exact containment test for single-TR patterns (a matching
+            # -key token always embeds under an empty psi).
+            if len(lb):  # every leaf node is some pattern's terminal
+                cell_leaf = np.full((B0, len(lv["nodes"])), -1, np.int64)
+                cell_leaf[lb, ln] = np.arange(len(lb))
+                sub = cell_leaf[:, lv["term_pos_leaf"]]
+                if d == 0:
+                    contained[:, lv["term_rows_leaf"]] = sub >= 0
+                else:
+                    self.stats["joined_steps"] += len(lb)
+                    acc, ovf = _cells(lb, ln, lv, d, compact=False)
+                    fetch.append((lv["term_rows_leaf"], sub, acc, ovf,
+                                  len(lb)))
+            # ---- internal cells: compacted frontiers seed the children
+            n_int = len(ib)
+            if n_int:
+                self.stats["joined_steps"] += n_int
+                phi, psi, valid, acc, ovf_state, ovf_term = _cells(
+                    ib, inn, lv, d, compact=True
+                )
+                # children inherit the full path overflow; a terminal
+                # ending at this node is undecided only via ovf_term
+                # (its accept bit is exact regardless of what this
+                # step's compaction dropped)
+                prev = (phi, psi, valid, ovf_state)
+                cell_int = np.full((B0, len(lv["nodes"])), -1, np.int64)
+                cell_int[ib, inn] = np.arange(n_int)
+                pos_prev = cell_int
+                if len(lv["term_rows_int"]):
+                    sub = cell_int[:, lv["term_pos_int"]]
+                    fetch.append((lv["term_rows_int"], sub, acc,
+                                  ovf_term, n_int))
+            else:
+                break  # no internal frontier: nothing seeds deeper
+        for rows, sub, acc, ovf, n in fetch:
+            acc_np = np.asarray(acc)[:n]
+            ovf_np = np.asarray(ovf)[:n]
+            live = sub >= 0
+            idx = np.clip(sub, 0, None)
+            contained[:, rows] = np.where(live, acc_np[idx], False)
+            ovf_out[:, rows] = np.where(live, ovf_np[idx], False)
+        self._resolve_undecided(
+            tokens, order, start, count, tmax, contained, ovf_out, seqs
+        )
         return contained
 
     # ------------------------------------------------------------ scoring

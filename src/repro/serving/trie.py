@@ -1,0 +1,312 @@
+"""Prefix-trie pattern bank: shared-frontier serving over rFTS prefixes.
+
+GTRACE-RS enumerates rFTSs as nodes of a reverse-search spanning tree
+(Defs 8-10), so mined banks are heavily prefix-shared: sibling patterns
+extend a common ancestor, and their step programs (bank.py) agree on
+their leading rows.  The flat ``PatternBank`` replays those shared
+prefixes once per pattern per sequence; the trie bank stores each
+distinct prefix once - a node table of (step row, parent id) where the
+root-to-node path is the shared prefix of every pattern below it, and a
+pattern terminates at the node ending its program - so the embedding
+join (batch.py) advances one frontier per (sequence, trie node) and
+sibling patterns pay for their common prefix exactly once.
+
+Construction is longest-common-prefix merging: programs are inserted
+row by row into the trie, so any two patterns share nodes for exactly
+their longest common program prefix.  The reverse-search ``parent()``
+chain motivates the layout but cannot drive it literally: ``parent(p)``
+re-canonicalizes after removing a TR (Def 7), so the parent's *program*
+is a literal prefix of the child's only when the canonical relabeling
+happens to survive the removal (``parent_prefix_hits`` counts these;
+typically a minority).  LCP merging subsumes the parent chain - every
+literal parent prefix is a trie path by construction - and also merges
+prefixes the spanning tree does not relate, so it is used for every
+input (``MiningResult`` or raw ``Mapping[Pattern, int]``); the chain is
+only consulted for the stats.
+
+Residual-``req`` prescreen: each node carries
+``node_req[n] = min over terminals t below n of bank.req[t]``
+(elementwise over token keys).  ``counts_b >= node_req[n]`` is a sound
+necessary condition for *any* pattern below ``n`` to be contained in
+sequence ``b`` (every such pattern needs at least ``req[t] >=
+node_req[n]`` tokens per key), and it is monotone up the trie
+(``node_req[parent] <= node_req[child]`` since the parent's subtree is
+a superset), so a failing node fails its whole subtree and the scan
+prunes it at its highest failing ancestor - no descendant cell is ever
+seeded.
+
+Flat vs trie: the trie join wins when patterns share prefixes (deep
+banks mined with reverse search; the win grows with bank size since
+sibling counts grow) and costs one device dispatch per trie *level*
+instead of one per program-length group.  Prefer the flat layout for
+tiny banks, banks of unrelated patterns (sharing ratio ~1), or
+single-level banks where the flat server's prescreen-is-containment
+shortcut for 1-TR patterns already answers without joining.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Tuple, Union
+
+import numpy as np
+
+from ..core.gtrace import MiningResult
+from .bank import STEP_FIELDS, PatternBank, compile_bank, pattern_steps
+
+
+@dataclasses.dataclass
+class TrieLevels:
+    """Level-padded dense view of a trie (the device join's layout).
+
+    Every level is padded to a common width ``Mh``; padding nodes have
+    ``step_valid=0`` rows (never match) and parent position 0.  A
+    pattern row ``p`` terminates at position ``term_pos[p]`` of level
+    ``term_level[p]`` (0/0 for bank padding rows - masked by
+    ``pattern_valid``)."""
+
+    steps: np.ndarray       # [D, Mh, STEP_FIELDS] int32
+    parent_pos: np.ndarray  # [D, Mh] int32, position within level d-1
+    term_level: np.ndarray  # [n_rows] int32
+    term_pos: np.ndarray    # [n_rows] int32
+
+    @property
+    def depth(self) -> int:
+        return self.steps.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.steps.shape[1]
+
+
+@dataclasses.dataclass
+class TrieBank:
+    """A ``PatternBank`` re-laid-out as a prefix trie of step rows."""
+
+    node_step: np.ndarray      # [M, STEP_FIELDS] int32
+    node_parent: np.ndarray    # [M] int32 (-1 = child of the root)
+    node_depth: np.ndarray     # [M] int32 (1-based; root is implicit)
+    node_req: np.ndarray       # [M, 6*n_label_keys] residual prescreen
+    terminal_node: np.ndarray  # [n_rows] int32 node per bank row (-1 pad)
+    bank: PatternBank          # the flat bank (same pattern row order)
+    # nodes per depth, ids ascending (ids are assigned in program order,
+    # so a parent's id is always smaller than its children's)
+    levels: List[np.ndarray] = dataclasses.field(default_factory=list)
+    node_pos: np.ndarray = None  # [M] position of each node in its level
+    parent_prefix_hits: int = -1  # reverse-search stats, -1 = unknown
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_step.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    @property
+    def sharing_ratio(self) -> float:
+        """Flat joined-steps over trie nodes (>= 1; higher = more shared
+        prefix work deduplicated)."""
+        total = int(self.bank.n_steps[: self.bank.n_patterns].sum())
+        return total / max(self.n_nodes, 1)
+
+    # ------------------------------------------------------------ views
+    def padded_levels(
+        self, depth: int | None = None, width: int | None = None
+    ) -> TrieLevels:
+        """Dense [D, Mh] view for the level-synchronous device join;
+        ``depth``/``width`` round up for cross-shard uniformity."""
+        D = max(self.depth, 1 if depth is None else 0)
+        if depth is not None:
+            assert depth >= self.depth, (depth, self.depth)
+            D = depth
+        Mh = max((len(lv) for lv in self.levels), default=1)
+        if width is not None:
+            assert width >= Mh, (width, Mh)
+            Mh = width
+        steps = np.zeros((D, Mh, STEP_FIELDS), np.int32)
+        parent_pos = np.zeros((D, Mh), np.int32)
+        for d, nodes in enumerate(self.levels):
+            steps[d, : len(nodes)] = self.node_step[nodes]
+            if d > 0:
+                parent_pos[d, : len(nodes)] = self.node_pos[
+                    self.node_parent[nodes]
+                ]
+        n_rows = self.bank.n_rows
+        term_level = np.zeros(n_rows, np.int32)
+        term_pos = np.zeros(n_rows, np.int32)
+        real = self.terminal_node[: self.bank.n_patterns]
+        term_level[: len(real)] = self.node_depth[real] - 1
+        term_pos[: len(real)] = self.node_pos[real]
+        return TrieLevels(steps=steps, parent_pos=parent_pos,
+                          term_level=term_level, term_pos=term_pos)
+
+    # ------------------------------------------------------------ shard
+    def shard(self, n_shards: int) -> List["TrieBank"]:
+        """Split by depth-1 subtree into ``n_shards`` tries whose
+        pattern sets partition the bank (greedy node-count balancing;
+        shards may be empty when the root has fewer children).  Each
+        shard keeps the global ``nv``/``n_label_keys`` so token keys and
+        psi widths stay consistent across the mesh."""
+        bank = self.bank
+        # depth-1 ancestor of each pattern row
+        anc = np.asarray(self.terminal_node[: bank.n_patterns])
+        anc = anc.copy()
+        for i, node in enumerate(anc):
+            n = int(node)
+            while self.node_parent[n] >= 0:
+                n = int(self.node_parent[n])
+            anc[i] = n
+        groups: Dict[int, List[int]] = {}
+        for row, a in enumerate(anc):
+            groups.setdefault(int(a), []).append(row)
+        # subtree weight = its node count (the join work it seeds)
+        sizes = self._subtree_sizes()
+        weight = {a: int(sizes[a]) for a in groups}
+        bins: List[List[int]] = [[] for _ in range(n_shards)]
+        load = [0] * n_shards
+        for a in sorted(groups, key=lambda a: -weight[a]):
+            i = int(np.argmin(load))
+            bins[i].extend(groups[a])
+            load[i] += weight[a]
+        out = []
+        for rows in bins:
+            rows = sorted(rows)  # keep bank (support-desc) order
+            sub = _slice_bank(bank, rows)
+            out.append(build_trie(sub))
+        return out
+
+    def _subtree_sizes(self) -> np.ndarray:
+        sizes = np.ones(max(self.n_nodes, 1), np.int64)
+        for n in range(self.n_nodes - 1, -1, -1):
+            p = int(self.node_parent[n])
+            if p >= 0:
+                sizes[p] += sizes[n]
+        return sizes
+
+    # ---------------------------------------------------------- checks
+    def program_of(self, row: int) -> List[Tuple[int, ...]]:
+        """Reconstruct pattern ``row``'s step program from its
+        root-to-terminal path (testing hook)."""
+        path = []
+        n = int(self.terminal_node[row])
+        while n >= 0:
+            path.append(tuple(int(x) for x in self.node_step[n]))
+            n = int(self.node_parent[n])
+        return path[::-1]
+
+
+def _slice_bank(bank: PatternBank, rows: List[int]) -> PatternBank:
+    """A flat sub-bank over the given pattern rows (no padding rows;
+    global ``nv``/``n_label_keys`` preserved)."""
+    idx = np.asarray(rows, np.int64)
+    if len(idx) == 0:
+        empty = compile_bank({})
+        return PatternBank(
+            steps=np.zeros((1, bank.max_steps, STEP_FIELDS), np.int32),
+            support=empty.support, n_steps=empty.n_steps,
+            n_itemsets=empty.n_itemsets, n_vertices=empty.n_vertices,
+            pattern_valid=empty.pattern_valid,
+            req=np.zeros((1, bank.req.shape[1]), np.int32),
+            patterns=[], nv=bank.nv, n_label_keys=bank.n_label_keys,
+        )
+    return PatternBank(
+        steps=bank.steps[idx],
+        support=bank.support[idx],
+        n_steps=bank.n_steps[idx],
+        n_itemsets=bank.n_itemsets[idx],
+        n_vertices=bank.n_vertices[idx],
+        pattern_valid=bank.pattern_valid[idx],
+        req=bank.req[idx],
+        patterns=[bank.patterns[i] for i in rows],
+        nv=bank.nv,
+        n_label_keys=bank.n_label_keys,
+    )
+
+
+def build_trie(bank: PatternBank) -> TrieBank:
+    """LCP-merge the bank's step programs into a ``TrieBank``.
+
+    Node ids are assigned in first-visit order walking each program
+    root-to-leaf, so every parent id is smaller than its children's and
+    one reversed pass computes all subtree reductions (``node_req``)."""
+    children: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+    steps: List[Tuple[int, ...]] = []
+    parents: List[int] = []
+    depths: List[int] = []
+    terminal = np.full(max(bank.n_rows, 1), -1, np.int32)
+    for row in range(bank.n_patterns):
+        cur = -1
+        for k in range(int(bank.n_steps[row])):
+            srow = tuple(int(x) for x in bank.steps[row, k])
+            key = (cur, srow)
+            nid = children.get(key)
+            if nid is None:
+                nid = len(steps)
+                children[key] = nid
+                steps.append(srow)
+                parents.append(cur)
+                depths.append(1 if cur < 0 else depths[cur] + 1)
+            cur = nid
+        terminal[row] = cur
+    M = len(steps)
+    node_step = np.asarray(steps, np.int32).reshape(M, STEP_FIELDS)
+    node_parent = np.asarray(parents, np.int32).reshape(M)
+    node_depth = np.asarray(depths, np.int32).reshape(M)
+    K = bank.req.shape[1]
+    big = np.iinfo(np.int32).max
+    node_req = np.full((M, K), big, np.int32)
+    for row in range(bank.n_patterns):
+        t = int(terminal[row])
+        if t >= 0:
+            np.minimum(node_req[t], bank.req[row], out=node_req[t])
+    for n in range(M - 1, -1, -1):
+        p = int(node_parent[n])
+        if p >= 0:
+            np.minimum(node_req[p], node_req[n], out=node_req[p])
+    # patterns of length 0 never reach compile_bank; every node has a
+    # terminal somewhere below, so no +inf requirement survives
+    assert M == 0 or int(node_req.max(initial=0)) < big
+    levels = [
+        np.nonzero(node_depth == d + 1)[0].astype(np.int32)
+        for d in range(int(node_depth.max(initial=0)))
+    ]
+    node_pos = np.zeros(max(M, 1), np.int32)
+    for nodes in levels:
+        node_pos[nodes] = np.arange(len(nodes), dtype=np.int32)
+    return TrieBank(node_step=node_step, node_parent=node_parent,
+                    node_depth=node_depth, node_req=node_req,
+                    terminal_node=terminal, bank=bank, levels=levels,
+                    node_pos=node_pos[:max(M, 1)])
+
+
+def parent_prefix_hits(bank: PatternBank) -> int:
+    """How many bank patterns have a reverse-search parent whose step
+    program is a *literal* prefix of theirs (the spanning-tree edges the
+    trie gets for free; canonical relabeling breaks the rest, which LCP
+    merging recovers whenever the leading rows still agree)."""
+    from ..core.reverse_search import parent
+
+    hits = 0
+    nl = bank.n_label_keys
+    for p in bank.patterns:
+        q = parent(p)
+        if not q:
+            continue
+        pp = pattern_steps(p, nl)
+        qq = pattern_steps(q, nl)
+        if pp[: len(qq)] == qq:
+            hits += 1
+    return hits
+
+
+def compile_trie_bank(
+    result: Union[MiningResult, Mapping], **bank_kw
+) -> TrieBank:
+    """``compile_bank`` then ``build_trie``; ``MiningResult`` inputs
+    additionally record the reverse-search ``parent_prefix_hits`` stat
+    (raw mappings have no spanning tree - pure LCP merging)."""
+    bank = compile_bank(result, **bank_kw)
+    trie = build_trie(bank)
+    if isinstance(result, MiningResult):
+        trie.parent_prefix_hits = parent_prefix_hits(bank)
+    return trie

@@ -232,6 +232,173 @@ def test_fingerprint_ignores_empty_itemsets_only():
         assert sequence_fingerprint(db[0]) != sequence_fingerprint(db[1])
 
 
+def _rename_seq(s, mapping):
+    from repro.core.graphseq import TR
+
+    out = []
+    for itemset in s:
+        row = []
+        for tr in itemset:
+            if tr.is_vertex:
+                row.append(TR(tr.type, mapping[tr.u1], tr.u2, tr.label))
+            else:
+                a, b = mapping[tr.u1], mapping[tr.u2]
+                if a > b:
+                    a, b = b, a
+                row.append(TR(tr.type, a, b, tr.label))
+        out.append(tuple(sorted(row)))
+    return tuple(out)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fingerprint_invariant_under_vertex_bijections(seed):
+    """Containment only sees vertices through psi, so any bijective
+    renaming of a sequence must produce the same canonical cache key."""
+    import random as _random
+
+    rng = _random.Random(seed)
+    for s in random_db(seed, n_seq=3, n_steps=4, n_v=5):
+        vs = sorted({v for it in s for tr in it for v in tr.vertices()})
+        if not vs:
+            continue
+        perm = vs[:]
+        rng.shuffle(perm)
+        mapping = {v: p + 1000 for v, p in zip(vs, perm)}
+        assert sequence_fingerprint(s) == \
+            sequence_fingerprint(_rename_seq(s, mapping))
+
+
+def test_renamed_sequences_hit_the_server_lru():
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    srv = PatternServer(bank, emax=64)
+    queries = random_db(4, n_seq=5, n_steps=4, n_v=4)
+    base = srv.query(queries)
+    hits = srv.stats["cache_hits"]
+    renamed = []
+    for s in queries:
+        vs = sorted({v for it in s for tr in it for v in tr.vertices()})
+        renamed.append(
+            _rename_seq(s, {v: 100 + len(vs) - 1 - i
+                            for i, v in enumerate(vs)})
+        )
+    res = srv.query(renamed)
+    assert srv.stats["cache_hits"] == hits + len(queries), \
+        "bijection-renamed sequences must hit the LRU"
+    for r0, r1 in zip(base, res):
+        assert r1.cached
+        np.testing.assert_array_equal(r0.contained, r1.contained)
+
+
+def test_fingerprints_of_distinct_sequences_do_not_collide():
+    """Across a pile of random sequences, equal fingerprints may only
+    occur for genuinely isomorphic pairs (which share containment
+    rows); structurally distinct sequences must separate."""
+    from repro.serving.bank import (
+        _relabeled_bytes,
+        canonical_sequence_map,
+    )
+
+    seen = {}
+    for seed in range(12):
+        for s in random_db(seed, n_seq=4, n_steps=4, n_v=4):
+            fp = sequence_fingerprint(s)
+            if fp in seen and seen[fp] != s:
+                # must be a truly isomorphic pair: the canonical byte
+                # encoding reconstructs the relabeled sequence, so byte
+                # equality proves a vertex bijection between the two
+                # (hence identical containment rows - a safe cache hit)
+                a, b = seen[fp], s
+                ea = _relabeled_bytes(a, canonical_sequence_map(a))
+                eb = _relabeled_bytes(b, canonical_sequence_map(b))
+                assert ea == eb, "fingerprint collision on distinct seqs"
+            seen[fp] = s
+    assert len(seen) > 20
+
+
+# --------------------------------------------- compile_bank edge cases
+def test_compile_bank_empty_result_and_top_zero():
+    from repro.core.gtrace import MiningResult
+
+    for bank in (
+        compile_bank({}),
+        compile_bank(MiningResult()),
+        compile_bank({(): 5}),          # empty pattern filtered out
+    ):
+        assert bank.n_patterns == 0
+        assert bank.n_rows == 1          # one padding row keeps shapes
+        assert not bank.pattern_valid.any()
+        assert bank.req.shape[0] == 1 and not bank.req.any()
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    res = AcceleratedMiner(db).mine_rs(2, max_len=4)
+    assert compile_bank(res, top=0).n_patterns == 0
+    top2 = compile_bank(res, top=2)
+    assert top2.n_patterns == 2
+    full = compile_bank(res)
+    assert top2.patterns == full.patterns[:2]
+
+
+def test_compile_bank_min_support_filters_everything():
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    res = AcceleratedMiner(db).mine_rs(2, max_len=4)
+    hi = max(res.patterns.values(), default=0) + 1
+    bank = compile_bank(res, min_support=hi)
+    assert bank.n_patterns == 0
+    assert not bank.pattern_valid.any()
+    # served gracefully: every query returns an empty row
+    srv = PatternServer(bank)
+    for r in srv.query(list(db)):
+        assert r.contained.shape == (0,) and r.topk == []
+
+
+def test_compile_bank_single_pattern():
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    res = AcceleratedMiner(db).mine_rs(2, max_len=4)
+    p = max(res.patterns, key=lambda q: sum(len(s) for s in q))
+    bank = compile_bank({p: 3})
+    assert bank.n_patterns == 1
+    assert bank.support[0] == 3
+    assert int(bank.n_steps[0]) == sum(len(s) for s in bank.patterns[0])
+    cont, ovf = _device_rows(db, bank, emax=64)
+    want = np.array([[contains(bank.patterns[0], s)] for s in db])
+    np.testing.assert_array_equal(cont, want)
+
+
+def test_bank_shard_metadata_alignment():
+    """Per shard, (support, req, n_steps, patterns) must stay aligned
+    row-for-row with the sliced step programs."""
+    from repro.serving.bank import pattern_steps
+
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True, pad_patterns_to=64)
+    shards = bank.shard(4)
+    assert [s.n_rows for s in shards] == [16] * 4
+    recovered = [p for s in shards for p in s.patterns]
+    assert recovered == bank.patterns
+    for si, s in enumerate(shards):
+        base = si * 16
+        for r in range(s.n_rows):
+            np.testing.assert_array_equal(
+                s.steps[r], bank.steps[base + r]
+            )
+            assert s.support[r] == bank.support[base + r]
+            np.testing.assert_array_equal(s.req[r], bank.req[base + r])
+            assert s.n_steps[r] == bank.n_steps[base + r]
+            assert s.pattern_valid[r] == bank.pattern_valid[base + r]
+        for r, p in enumerate(s.patterns):
+            prog = pattern_steps(p, s.n_label_keys)
+            assert len(prog) == int(s.n_steps[r])
+            np.testing.assert_array_equal(
+                s.steps[r, : len(prog)], np.asarray(prog, np.int32)
+            )
+            # req row is exactly the key histogram of the program
+            req = np.zeros_like(s.req[r])
+            for row in prog:
+                req[row[7]] += 1
+            np.testing.assert_array_equal(s.req[r], req)
+
+
 # --------------------------------------------------------------- bank
 def test_bank_compile_ordering_and_padding():
     db = random_db(3, n_seq=6, n_steps=4, n_v=4)

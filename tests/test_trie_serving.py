@@ -1,0 +1,336 @@
+"""Trie-layout serving: differential harness against the flat join and
+the host oracle.
+
+The trie join replays exactly the same step sequence per pattern as the
+flat join (shared ``_step_once`` core, frontiers seeded from the shared
+prefix), so its raw outputs must be *bit-identical* - contained AND
+overflow - cell for cell, at every frontier capacity, including forced
+overflow.  At the server level both layouts are exact, so their rows
+must equal the ``core.containment`` oracle everywhere, through the
+escalation and host-fallback paths too.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: seeded-sampling fallback
+    from hypothesis_compat import given, settings, strategies as st
+
+from conftest import random_db
+from repro.core.containment import contains
+from repro.mining.driver import AcceleratedMiner
+from repro.mining.encoding import encode_db
+from repro.serving.bank import compile_bank, pattern_steps
+from repro.serving.batch import batch_contains, max_key_bucket, \
+    trie_contains
+from repro.serving.server import PatternServer
+from repro.serving.trie import TrieBank, build_trie, compile_trie_bank, \
+    parent_prefix_hits
+
+
+def _mine_bank(db, *, rs: bool, sigma=2, max_len=4, **bank_kw):
+    miner = AcceleratedMiner(db)
+    res = miner.mine_rs(sigma, max_len=max_len) if rs else \
+        miner.mine_gtrace(sigma, max_len=max_len)
+    return compile_bank(res, **bank_kw)
+
+
+def _flat_rows(db, bank, **kw):
+    tdb = encode_db(db)
+    kw.setdefault("tmax", max_key_bucket(tdb.tokens, bank.n_label_keys))
+    cont, ovf = batch_contains(
+        jnp.asarray(tdb.tokens), jnp.asarray(bank.steps),
+        jnp.asarray(bank.pattern_valid), nv=bank.nv,
+        n_label_keys=bank.n_label_keys, **kw,
+    )
+    n = bank.n_patterns
+    return np.asarray(cont)[:, :n], np.asarray(ovf)[:, :n]
+
+
+def _trie_rows(db, trie: TrieBank, **kw):
+    bank = trie.bank
+    lv = trie.padded_levels()
+    tdb = encode_db(db)
+    kw.setdefault("tmax", max_key_bucket(tdb.tokens, bank.n_label_keys))
+    cont, ovf = trie_contains(
+        jnp.asarray(tdb.tokens), jnp.asarray(lv.steps),
+        jnp.asarray(lv.parent_pos), jnp.asarray(lv.term_level),
+        jnp.asarray(lv.term_pos), jnp.asarray(bank.pattern_valid),
+        nv=bank.nv, n_label_keys=bank.n_label_keys, **kw,
+    )
+    n = bank.n_patterns
+    return np.asarray(cont)[:, :n], np.asarray(ovf)[:, :n]
+
+
+# ----------------------------------------------- join-level differential
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), emax=st.integers(1, 6))
+def test_trie_join_bitwise_equals_flat_join(seed, emax):
+    """Random banks, random query batches, random (small -> overflowing)
+    frontier capacities: contained AND overflow agree bit-for-bit."""
+    db = random_db(seed, n_seq=6, n_steps=4, n_v=4)
+    queries = random_db(seed + 1, n_seq=6, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=(seed % 2 == 0))
+    if not bank.n_patterns:
+        return
+    trie = build_trie(bank)
+    for batch in (db, queries):
+        fc, fo = _flat_rows(batch, bank, emax=emax)
+        tc, to = _trie_rows(batch, trie, emax=emax)
+        np.testing.assert_array_equal(fc, tc)
+        np.testing.assert_array_equal(fo, to)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_trie_join_equals_oracle(seed):
+    """With an ample frontier the trie join must not overflow and must
+    equal the Def-4 backtracking oracle exactly."""
+    db = random_db(seed, n_seq=6, n_steps=4, n_v=4)
+    queries = random_db(seed + 7, n_seq=5, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=True)
+    if not bank.n_patterns:
+        return
+    trie = build_trie(bank)
+    cont, ovf = _trie_rows(queries, trie, emax=64)
+    assert not ovf.any(), "emax=64 must not overflow on these sizes"
+    want = np.array(
+        [[contains(p, s) for p in bank.patterns] for s in queries]
+    )
+    np.testing.assert_array_equal(cont, want)
+
+
+def test_trie_join_forced_tmax_window_overflow_is_conservative():
+    """A tiny token window forces window overflow: positives stay exact
+    and every lost match is covered by the flag, identically to flat."""
+    db = random_db(13, n_seq=8, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    trie = build_trie(bank)
+    fc, fo = _flat_rows(db, bank, emax=4, tmax=2)
+    tc, to = _trie_rows(db, trie, emax=4, tmax=2)
+    np.testing.assert_array_equal(fc, tc)
+    np.testing.assert_array_equal(fo, to)
+    want = np.array([[contains(p, s) for p in bank.patterns] for s in db])
+    assert not (tc & ~want).any(), "false positive under overflow"
+    assert not (~tc & want & ~to).any(), "unflagged false negative"
+
+
+# -------------------------------------------- server-level differential
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_trie_server_equals_flat_server_and_oracle(seed):
+    db = random_db(seed, n_seq=8, n_steps=4, n_v=4)
+    queries = random_db(seed + 3, n_seq=7, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    if not bank.n_patterns:
+        return
+    flat = PatternServer(bank, emax=16, max_batch=4, topk=5)
+    trie = PatternServer(bank, emax=16, max_batch=4, topk=5,
+                         bank_layout="trie")
+    rf = flat.query(queries)
+    rt = trie.query(queries)
+    for s, a, b in zip(queries, rf, rt):
+        want = np.array([contains(p, s) for p in bank.patterns])
+        np.testing.assert_array_equal(a.contained, want)
+        np.testing.assert_array_equal(b.contained, want)
+        assert a.topk == b.topk
+        assert a.fingerprint == b.fingerprint
+    # the trie's joined steps can exceed flat's by a few cells on tiny
+    # batches (its node prescreen is the weaker min-over-subtree
+    # condition) but never the dense all-cells bound
+    dense = len(queries) * int(bank.n_steps[: bank.n_patterns].sum())
+    assert trie.stats["joined_steps"] <= \
+        dense + trie.stats["escalated_cells"] * bank.max_steps
+
+
+def test_trie_server_overflow_fallback_is_exact():
+    """emax_retry == emax disables escalation: undecided cells go
+    straight to the host oracle, results still exact."""
+    db = random_db(11, n_seq=10, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    srv = PatternServer(bank, emax=2, emax_retry=2, max_batch=16,
+                        bank_layout="trie")
+    res = srv.query(list(db))
+    assert srv.stats["host_fallback_cells"] > 0, "emax=2 should overflow"
+    for s, r in zip(db, res):
+        want = np.array([contains(p, s) for p in bank.patterns])
+        np.testing.assert_array_equal(r.contained, want)
+
+
+def test_trie_server_escalation_is_exact():
+    db = random_db(11, n_seq=10, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    srv = PatternServer(bank, emax=1, emax_retry=64, max_batch=16,
+                        bank_layout="trie")
+    res = srv.query(list(db))
+    assert srv.stats["escalated_cells"] > 0, "emax=1 should escalate"
+    for s, r in zip(db, res):
+        want = np.array([contains(p, s) for p in bank.patterns])
+        np.testing.assert_array_equal(r.contained, want)
+
+
+def test_trie_server_caches_and_empty_bank():
+    db = random_db(5, n_seq=6, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    srv = PatternServer(bank, emax=32, bank_layout="trie")
+    srv.query(list(db))
+    hits = srv.stats["cache_hits"]
+    r2 = srv.query(list(db))
+    assert srv.stats["cache_hits"] == hits + len(db)
+    assert all(r.cached for r in r2)
+    empty = PatternServer(compile_bank({}), bank_layout="trie")
+    for r in empty.query(list(db)):
+        assert r.contained.shape == (0,) and r.topk == []
+
+
+# ------------------------------------------------------- trie structure
+def test_trie_paths_reconstruct_programs_and_req_is_monotone():
+    db = random_db(21, n_seq=8, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    trie = build_trie(bank)
+    assert trie.n_nodes <= int(bank.n_steps[: bank.n_patterns].sum())
+    assert trie.sharing_ratio >= 1.0
+    for row, p in enumerate(bank.patterns):
+        assert trie.program_of(row) == [
+            tuple(r) for r in pattern_steps(p, bank.n_label_keys)
+        ]
+    # residual req: monotone along every parent edge, and each node's
+    # requirement is dominated by every terminal below it
+    for n in range(trie.n_nodes):
+        par = int(trie.node_parent[n])
+        if par >= 0:
+            assert (trie.node_req[par] <= trie.node_req[n]).all()
+    for row in range(bank.n_patterns):
+        n = int(trie.terminal_node[row])
+        while n >= 0:
+            assert (trie.node_req[n] <= bank.req[row]).all()
+            n = int(trie.node_parent[n])
+
+
+def test_trie_node_prescreen_is_sound():
+    """Node prescreen must never kill an ancestor cell of a contained
+    pattern (else the subtree prune would drop a true positive)."""
+    db = random_db(23, n_seq=8, n_steps=4, n_v=4)
+    queries = random_db(24, n_seq=8, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=True)
+    trie = build_trie(bank)
+    from repro.serving.batch import index_and_node_prescreen
+
+    tdb = encode_db(queries)
+    _, _, _, poss = index_and_node_prescreen(
+        jnp.asarray(tdb.tokens), jnp.asarray(trie.node_req),
+        n_label_keys=bank.n_label_keys,
+    )
+    poss = np.asarray(poss)
+    for b, s in enumerate(queries):
+        for row, p in enumerate(bank.patterns):
+            if not contains(p, s):
+                continue
+            n = int(trie.terminal_node[row])
+            while n >= 0:
+                assert poss[b, n], (b, row, n)
+                n = int(trie.node_parent[n])
+
+
+def test_compile_trie_bank_and_parent_chain_stats():
+    db = random_db(3, n_seq=6, n_steps=4, n_v=4)
+    res = AcceleratedMiner(db).mine_rs(2, max_len=4)
+    trie = compile_trie_bank(res)
+    assert trie.parent_prefix_hits >= 0  # MiningResult: chain consulted
+    assert trie.parent_prefix_hits == parent_prefix_hits(trie.bank)
+    # raw-mapping input: pure LCP merge, no spanning tree available
+    trie2 = compile_trie_bank(dict(res.patterns))
+    assert trie2.parent_prefix_hits == -1
+    assert trie2.n_nodes == trie.n_nodes
+    np.testing.assert_array_equal(trie2.node_step, trie.node_step)
+    # single-pattern trie: a pure chain
+    p = max(res.patterns, key=lambda q: len(q))
+    one = compile_trie_bank({p: 1})
+    assert one.bank.n_patterns == 1
+    assert one.n_nodes == int(one.bank.n_steps[0])
+    assert (np.diff(one.node_depth) == 1).all()
+
+
+def test_trie_subtree_shard_partitions_bank():
+    db = random_db(7, n_seq=8, n_steps=4, n_v=4)
+    bank = _mine_bank(db, rs=True)
+    trie = build_trie(bank)
+    shards = trie.shard(3)
+    assert len(shards) == 3
+    got = [p for t in shards for p in t.bank.patterns]
+    assert len(got) == bank.n_patterns
+    assert set(got) == set(bank.patterns)
+    for t in shards:
+        # shard-local tries are intact subtrees of the global trie:
+        # every pattern's program reconstructs inside its shard
+        for row, p in enumerate(t.bank.patterns):
+            assert t.program_of(row) == [
+                tuple(r) for r in pattern_steps(p, bank.n_label_keys)
+            ]
+        assert t.bank.nv == bank.nv
+        assert t.bank.n_label_keys == bank.n_label_keys
+
+
+SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src"); sys.path.insert(0, "tests")
+import numpy as np
+import jax
+import jax.numpy as jnp
+from conftest import random_db
+from repro.core.containment import contains
+from repro.mining.driver import AcceleratedMiner
+from repro.mining.encoding import encode_db
+from repro.serving.bank import compile_bank
+from repro.serving.batch import max_key_bucket
+from repro.serving.trie import build_trie
+from repro.serving.sharded import make_trie_serving_step, \
+    stack_trie_shards
+
+db = random_db(3, n_seq=8, n_steps=4, n_v=4)
+res = AcceleratedMiner(db).mine_rs(2, max_len=4)
+bank = compile_bank(res)
+trie = build_trie(bank)
+shards = trie.shard(2)
+stack = stack_trie_shards(shards)
+tdb = encode_db(db)
+tok = jnp.asarray(tdb.tokens)
+tmax = max_key_bucket(tdb.tokens, bank.n_label_keys)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+step = make_trie_serving_step(
+    mesh, nv=bank.nv, n_label_keys=bank.n_label_keys, emax=16,
+    tmax=tmax)
+c, o = step(tok, jnp.asarray(stack["lvl_steps"]),
+            jnp.asarray(stack["lvl_parent_pos"]),
+            jnp.asarray(stack["term_level"]),
+            jnp.asarray(stack["term_pos"]),
+            jnp.asarray(stack["pattern_valid"]))
+c, o = np.asarray(c), np.asarray(o)
+pats = [p for sh in stack["patterns"] for p in sh]
+cols = np.nonzero(stack["pattern_valid"])[0]
+assert not o[:, cols].any()
+want = np.array([[contains(p, s) for p in pats] for s in db])
+assert np.array_equal(c[:, cols], want)
+assert sum(t.bank.n_patterns for t in shards) == bank.n_patterns
+print("SHARDED-TRIE-OK", int(c.sum()))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_trie_serving_step_8dev():
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", SHARD_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), env=env,
+    )
+    assert "SHARDED-TRIE-OK" in r.stdout, r.stdout + "\n" + r.stderr
