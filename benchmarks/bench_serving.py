@@ -11,12 +11,13 @@ and extrapolated (the subsample size is recorded in the json).
 ``--smoke`` is the CI tier-2 gate: a tiny config, both layouts, and a
 hard failure on any flat/trie row mismatch (results are written to
 ``BENCH_serving_smoke.json`` so the full-run json is never clobbered by
-a smoke pass).
+a smoke pass).  All json writes go through a tempfile + rename, so a
+failing or interrupted run never truncates the last good artifact
+(scripts/check_bench.py compares against it).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -31,6 +32,11 @@ from repro.serving.bank import compile_bank, sequence_fingerprint
 from repro.serving.batch import batch_contains, max_key_bucket
 from repro.serving.server import PatternServer
 from repro.serving.trie import build_trie, parent_prefix_hits
+
+try:
+    from .bench_streaming import atomic_write_json, machine_id
+except ImportError:  # standalone `python benchmarks/bench_serving.py`
+    from bench_streaming import atomic_write_json, machine_id
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
 OUT_SMOKE = os.path.join(
@@ -145,6 +151,7 @@ def main(csv=print, smoke: bool = False):
     del cont
 
     payload = {
+        "machine": machine_id(),
         "db_size": len(db),
         "bank_patterns": bank.n_patterns,
         "bank_max_steps": bank.max_steps,
@@ -176,8 +183,9 @@ def main(csv=print, smoke: bool = False):
         "escalated_cells": trie_srv.stats["escalated_cells"],
         "host_fallback_cells": trie_srv.stats["host_fallback_cells"],
     }
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
+    # tempfile + rename: a mismatch-failure above or a crash mid-run
+    # must never clobber the last good artifact CI baselines against
+    atomic_write_json(out_path, payload)
     csv(f"serving/server_1k,{t_dev/len(queries)*1e6:.0f},"
         f"qps={dev_qps:.0f}")
     csv(f"serving/trie_1k,"

@@ -1,0 +1,200 @@
+#!/usr/bin/env python
+"""Validate committed BENCH_*.json artifacts and gate CI on them.
+
+Three kinds of checks, all stdlib-only (runs before deps install if
+needed):
+
+1. **Schema**: every known artifact present in the repo parses and
+   carries its required keys with sane types/signs.  A benchmark that
+   silently stopped writing a field fails here, not three PRs later.
+2. **Invariant gates** (committed full-run artifacts):
+   - ``BENCH_serving.json``: the trie layout must not have regressed
+     below parity - ``speedup_trie_vs_flat_median >= 1.0`` (the trie is
+     pointless the moment the flat join beats it on the bank it was
+     built for), and the serving speedup over the host oracle must stay
+     > 1.
+   - ``BENCH_streaming.json``: streamed maintenance must beat the
+     re-mine-per-window baseline by >= 5x (``speedup_streaming``), and
+     the final frequent-map equality is asserted inside the bench
+     itself (it raises before writing on any divergence).
+3. **Smoke throughput regression** (fresh tier-2 runs): the smoke
+   artifact just (re)written by ``bench_serving.py --smoke`` is
+   compared against the committed baseline (``git show HEAD:...``);
+   a >3x drop in ``server_qps`` fails.  The wide factor absorbs the
+   ~2x box-to-box throughput swings the full benches document; an
+   actual serving-path pessimization lands well past it.
+
+Exit code 0 = all gates green.  Used by scripts/ci.sh tier-2.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# artifact -> {key: type or (type, predicate)}
+_NUM = (int, float)
+SCHEMAS = {
+    "BENCH_serving.json": {
+        "bank_patterns": int,
+        "n_queries": int,
+        "server_qps": _NUM,
+        "trie_qps": _NUM,
+        "oracle_qps": _NUM,
+        "speedup_server": _NUM,
+        "speedup_trie_vs_flat": _NUM,
+        "speedup_trie_vs_flat_median": _NUM,
+        "joined_steps_flat": int,
+        "joined_steps_trie": int,
+        "rounds": list,
+    },
+    "BENCH_serving_smoke.json": {
+        "bank_patterns": int,
+        "server_qps": _NUM,
+        "speedup_server": _NUM,
+    },
+    "BENCH_streaming.json": {
+        "window": int,
+        "minsup": int,
+        "n_updates": int,
+        "streamed_updates_per_sec": _NUM,
+        "streamed_updates_per_sec_trie": _NUM,
+        "remine_updates_per_sec": _NUM,
+        "speedup_streaming": _NUM,
+        "refreshes": int,
+        "frontier_scans": int,
+        "frontier_scans_skipped": int,
+    },
+    "BENCH_streaming_smoke.json": {
+        "window": int,
+        "streamed_updates_per_sec": _NUM,
+        "remine_updates_per_sec": _NUM,
+        "speedup_streaming": _NUM,
+    },
+}
+
+SMOKE_REGRESSION_FACTOR = 3.0
+
+
+class GateError(Exception):
+    pass
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_schema(name: str, payload: dict) -> None:
+    schema = SCHEMAS[name]
+    for key, ty in schema.items():
+        if key not in payload:
+            raise GateError(f"{name}: missing key {key!r}")
+        val = payload[key]
+        if not isinstance(val, ty) or isinstance(val, bool):
+            raise GateError(
+                f"{name}: {key} has type {type(val).__name__}, "
+                f"expected {ty}"
+            )
+        if isinstance(val, _NUM) and not isinstance(val, bool) \
+                and val < 0:
+            raise GateError(f"{name}: {key} = {val} is negative")
+
+
+def check_invariants(name: str, payload: dict) -> None:
+    if name == "BENCH_serving.json":
+        med = payload["speedup_trie_vs_flat_median"]
+        if med < 1.0:
+            raise GateError(
+                f"{name}: trie/flat median speedup {med:.3f} < 1.0 - "
+                "the trie layout regressed below parity"
+            )
+        if payload["speedup_server"] <= 1.0:
+            raise GateError(
+                f"{name}: serving speedup over the host oracle "
+                f"{payload['speedup_server']:.2f} <= 1"
+            )
+    if name == "BENCH_streaming.json":
+        sp = payload["speedup_streaming"]
+        if sp < 5.0:
+            raise GateError(
+                f"{name}: streamed maintenance speedup {sp:.2f} < 5.0 "
+                "over re-mine-per-window"
+            )
+
+
+def committed_baseline(name: str) -> dict | None:
+    """The artifact as committed at HEAD (None when unavailable - fresh
+    repo without the artifact, or no git)."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{name}"], cwd=ROOT,
+            capture_output=True, text=True, timeout=30,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def check_smoke_regression(payload: dict) -> str:
+    base = committed_baseline("BENCH_serving_smoke.json")
+    if base is None or "server_qps" not in base:
+        return "smoke regression: no committed baseline, skipped"
+    cur, ref = payload["server_qps"], base["server_qps"]
+    if base.get("machine") != payload.get("machine"):
+        # absolute qps is meaningless across hardware (a CI runner is
+        # legitimately >3x slower than a dev box): advisory only
+        return (f"smoke regression: baseline from a different machine "
+                f"({base.get('machine')!r} vs "
+                f"{payload.get('machine')!r}), advisory: server_qps "
+                f"{cur:.0f} vs committed {ref:.0f}")
+    if ref > 0 and cur < ref / SMOKE_REGRESSION_FACTOR:
+        raise GateError(
+            f"BENCH_serving_smoke.json: server_qps {cur:.0f} dropped "
+            f">{SMOKE_REGRESSION_FACTOR:.0f}x below the committed "
+            f"same-machine baseline {ref:.0f}"
+        )
+    return (f"smoke regression: server_qps {cur:.0f} vs committed "
+            f"{ref:.0f} (>{ref / SMOKE_REGRESSION_FACTOR:.0f} required)")
+
+
+def main() -> int:
+    failures = []
+    for name in SCHEMAS:
+        path = os.path.join(ROOT, name)
+        if not os.path.exists(path):
+            # smoke artifacts only exist after a tier-2/3 run; full
+            # artifacts are committed - warn loudly if those vanish
+            level = ("missing (committed artifact!)"
+                     if "smoke" not in name else "absent, skipped")
+            print(f"[check_bench] {name}: {level}")
+            if "smoke" not in name:
+                failures.append(f"{name} missing from the repo")
+            continue
+        try:
+            payload = _load(path)
+            check_schema(name, payload)
+            check_invariants(name, payload)
+            print(f"[check_bench] {name}: schema + invariants OK")
+            if name == "BENCH_serving_smoke.json":
+                print(f"[check_bench] {check_smoke_regression(payload)}")
+        except (GateError, json.JSONDecodeError, OSError) as e:
+            failures.append(str(e))
+            print(f"[check_bench] FAIL {name}: {e}")
+    if failures:
+        print(f"[check_bench] {len(failures)} gate(s) failed")
+        return 1
+    print("[check_bench] all gates green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

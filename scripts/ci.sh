@@ -1,19 +1,60 @@
 #!/usr/bin/env bash
-# Tier-1 verification, reproducible from a clean checkout:
+# Tiered CI, reproducible from a clean checkout:
 #   pip install -r requirements-dev.txt   (optional deps stay optional)
 #   scripts/ci.sh [extra pytest args]
 #
-# Tier-2 (CI_TIER2=0 to skip): a tiny-config serving benchmark smoke
-# that runs BOTH bank layouts over the same queries and hard-fails on
-# any flat/trie containment mismatch (the layouts are required to be
-# exact, so any disagreement is a correctness bug).  No timing
-# assertions - perf numbers come from the full benchmark run.
+# Tier matrix (each tier gated by its env toggle, default = run):
+#
+#   tier-1  CI_TIER1=0 skips   pytest suite.  CI_FAST=1 runs the fast
+#           lane (-m "not slow": skips the multi-device subprocess
+#           tests and the heavy hypothesis differentials); the default
+#           full lane runs everything.  Extra args pass through.
+#   tier-2  CI_TIER2=0 skips   serving smoke: bench_serving.py --smoke
+#           runs BOTH bank layouts over the same queries and hard-fails
+#           on any flat/trie containment mismatch (the layouts are
+#           required to be exact, so any disagreement is a correctness
+#           bug).
+#   tier-3  CI_TIER3=0 skips   streaming smoke: bench_streaming.py
+#           --smoke drives an arrival stream through StreamingBank
+#           (both layouts) and hard-fails if the streamed supports
+#           differ from a batch re-mine of the same window at ANY
+#           refresh point - the incremental-maintenance exactness gate.
+#   gates   run with tier-2, but AFTER tier-3 so the freshly written
+#           smoke artifacts are the ones validated:
+#           scripts/check_bench.py checks every BENCH_*.json schema,
+#           gates on the committed trie/flat median speedup (>= 1.0)
+#           and streaming speedup (>= 5x), and fails if smoke
+#           throughput dropped >3x below the committed same-machine
+#           baseline.
+#
+# No timing assertions inside the smokes - perf numbers come from the
+# full benchmark runs; regressions are caught by check_bench.py against
+# the committed artifacts.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+if [[ "${CI_TIER1:-1}" != "0" ]]; then
+    if [[ "${CI_FAST:-0}" == "1" ]]; then
+        echo "[ci] tier-1: pytest (fast lane, -m 'not slow')"
+        python -m pytest -x -q -m "not slow" "$@"
+    else
+        echo "[ci] tier-1: pytest (full lane)"
+        python -m pytest -x -q "$@"
+    fi
+fi
 
 if [[ "${CI_TIER2:-1}" != "0" ]]; then
     echo "[ci] tier-2: serving smoke (flat vs trie layout agreement)"
-    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python benchmarks/bench_serving.py --smoke
+    python benchmarks/bench_serving.py --smoke
+fi
+
+if [[ "${CI_TIER3:-1}" != "0" ]]; then
+    echo "[ci] tier-3: streaming smoke (streamed == batch re-mine)"
+    python benchmarks/bench_streaming.py --smoke
+fi
+
+if [[ "${CI_TIER2:-1}" != "0" ]]; then
+    echo "[ci] bench artifact gates (schemas + committed baselines)"
+    python scripts/check_bench.py
 fi

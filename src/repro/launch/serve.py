@@ -2,6 +2,15 @@
 PatternServer, and drive a synthetic query workload end-to-end.
 
     PYTHONPATH=src python -m repro.launch.serve --db-size 150 --queries 500
+
+With ``--window N`` the launcher instead stands up a ``StreamingBank``:
+the mined DB seeds an N-sequence sliding window, the query stream is
+observed batch by batch (supports maintained incrementally, tombstones
+masked), and ``--refresh-every R`` reconciles the bank with the window
+every R batches via the frontier re-mine.
+
+    PYTHONPATH=src python -m repro.launch.serve --db-size 100 \
+        --queries 200 --window 100 --refresh-every 4 --bank-layout trie
 """
 from __future__ import annotations
 
@@ -13,6 +22,7 @@ from ..data.synthetic import Table3Params, generate_table3_db
 from ..mining.driver import AcceleratedMiner
 from ..serving.bank import compile_bank
 from ..serving.server import PatternServer
+from ..serving.streaming import StreamingBank
 
 
 def main():
@@ -34,6 +44,14 @@ def main():
                          "layout that joins shared rFTS prefixes once")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run the match predicate as the Pallas kernel")
+    ap.add_argument("--window", type=int, default=None,
+                    help="streaming mode: maintain supports over a "
+                         "sliding window of this many sequences")
+    ap.add_argument("--refresh-every", type=int, default=4,
+                    help="streaming mode: reconcile (frontier re-mine) "
+                         "every N observed batches")
+    ap.add_argument("--stream-batch", type=int, default=25,
+                    help="streaming mode: arrivals per observed batch")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -43,6 +61,8 @@ def main():
                           n_interstates=args.interstates)
     db = generate_table3_db(params, seed=args.seed)
     sigma = max(2, int(args.min_support_frac * len(db)))
+    if args.window is not None:
+        return _stream_main(args, db, sigma)
     print(f"[serve] mining |DB|={len(db)} sigma={sigma} "
           f"max_len={args.max_len}")
     miner = AcceleratedMiner(db)
@@ -85,6 +105,42 @@ def main():
     srv.query(queries)
     print(f"[serve] cached pass {time.time()-t0:.3f}s, "
           f"cache_hits={srv.stats['cache_hits']}")
+
+
+def _stream_main(args, db, sigma):
+    """Streaming-mode demo: seed a window, observe the query stream,
+    reconcile on a cadence, report support drift and frontier stats."""
+    print(f"[serve] streaming: mining seed window |DB|={len(db)} "
+          f"sigma={sigma} max_len={args.max_len}")
+    t0 = time.time()
+    sb = StreamingBank.from_db(
+        db, minsup=sigma, window=args.window, max_len=args.max_len,
+        bank_layout=args.bank_layout, refresh_every=args.refresh_every,
+        emax=args.emax, use_kernel=args.use_kernel,
+    )
+    print(f"[serve] seeded in {time.time()-t0:.2f}s: "
+          f"{sb.bank.n_patterns} rFTSs, {len(sb.frequent())} frequent "
+          f"over the {args.window}-seq window")
+    qparams = Table3Params(db_size=args.queries, v_avg=args.v_avg,
+                           n_interstates=args.interstates)
+    stream = generate_table3_db(qparams, seed=args.seed + 1)
+    t0 = time.time()
+    for i in range(0, len(stream), args.stream_batch):
+        batch = stream[i: i + args.stream_batch]
+        r = sb.observe(batch)
+        print(f"[serve] batch {i // args.stream_batch}: "
+              f"+{r.arrived}/-{r.evicted} seqs, "
+              f"{r.tombstoned} tombstoned"
+              + (", refreshed" if r.refreshed else ""))
+    freq = sb.refresh()
+    dt = time.time() - t0
+    print(f"[serve] streamed {len(stream)} arrivals in {dt:.3f}s "
+          f"({len(stream)/max(dt, 1e-9):.0f} updates/s), "
+          f"{len(freq)} frequent after final refresh; stats={sb.stats}")
+    top = sorted(freq.items(), key=lambda ps: -ps[1])[: args.topk]
+    print(f"[serve] top-{args.topk} by live window support:")
+    for p, sup in top:
+        print(f"    [{sup:3d}] {pattern_str(p)}")
 
 
 if __name__ == "__main__":

@@ -159,6 +159,72 @@ class AcceleratedMiner:
                         out.append(emb)
         return out
 
+    # -------------------------------------------------- child expansion
+    def expand_children(
+        self,
+        pattern: Pattern,
+        embs: List[Emb],
+        min_support: int,
+        *,
+        rs: bool = True,
+        want_embs: Optional[Callable[[Pattern], bool]] = None,
+    ) -> List[Tuple[Pattern, Set[int], List[Emb]]]:
+        """One reverse-search (or baseline tail-growth) expansion: scan
+        the DB for one-TR extensions of ``pattern`` and return its
+        frequent children as ``(child, gids, child_embs)``.  ``gids`` is
+        the exact set of DB sequences containing the child (supports are
+        ``len(gids)``; the streaming layer turns these into window
+        containment bitmaps without a separate join).
+
+        With ``rs=True`` children are filtered by the spanning-tree
+        membership test (``parent(child) == pattern``) exactly as the
+        full miner does, so iterating this from the root reproduces
+        ``mine_rs`` - and iterating it from a *frontier* of known
+        patterns is the incremental re-mine (mining.incremental).
+        ``want_embs(child)`` lets callers skip the embedding rebuild for
+        children whose subtree they will not descend into (the
+        clean-subtree prune); such children come back with ``[]``.
+        Respects the miner's itemset/vertex capacity guards."""
+        if len(pattern) >= self.ni:
+            return []  # capacity guard (configurable)
+        if rs:
+            if not pattern:
+                mode = MODE_ROOT
+            elif any(tr.is_vertex for s in pattern for tr in s):
+                mode = MODE_VERTEX_PHASE
+            else:
+                mode = MODE_EDGE_PHASE
+        else:
+            mode = MODE_TAIL
+        merged = self._scan(pattern, embs, mode)
+        by_child: Dict[Pattern, Tuple[Set[int], int, List[np.ndarray]]] = {}
+        for sig, (gset, et_rows) in merged.items():
+            key = signature_to_extkey(sig)
+            if max(key[1].u1, key[1].u2) >= self.nv:
+                continue  # vertex-capacity guard
+            child_raw = apply_extension(pattern, key)
+            child = canonical_form(child_raw)
+            if child in by_child:
+                by_child[child][0].update(gset)
+            else:
+                by_child[child] = (set(gset), sig, et_rows)
+        out: List[Tuple[Pattern, Set[int], List[Emb]]] = []
+        for child, (gids, sig, et_rows) in by_child.items():
+            if len(gids) < min_support:
+                continue
+            if rs and parent(child) != pattern:
+                continue  # reverse-search membership test
+            if want_embs is not None and not want_embs(child):
+                out.append((child, gids, []))
+                continue
+            key = signature_to_extkey(sig)
+            child_raw = apply_extension(pattern, key)
+            child_embs = self._rebuild_embeddings(
+                pattern, embs, sig, et_rows, child_raw
+            )
+            out.append((child, gids, child_embs))
+        return out
+
     # ------------------------------------------------------------ mining
     def _mine(
         self,
@@ -187,44 +253,18 @@ class AcceleratedMiner:
                 continue
             if len(pattern) >= self.ni:
                 continue  # capacity guard (configurable)
-            if rs:
-                if not pattern:
-                    mode = MODE_ROOT
-                elif any(tr.is_vertex for s in pattern for tr in s):
-                    mode = MODE_VERTEX_PHASE
-                else:
-                    mode = MODE_EDGE_PHASE
-            else:
-                mode = MODE_TAIL
             res.n_extension_scans += 1
-            merged = self._scan(pattern, embs, mode)
-            # group raw signatures by canonical child
-            by_child: Dict[Pattern, Tuple[Set[int], int, List[np.ndarray]]] = {}
-            nv = len(pattern_vertices(pattern))
-            for sig, (gset, et_rows) in merged.items():
-                key = signature_to_extkey(sig)
-                if max(key[1].u1, key[1].u2) >= self.nv:
-                    continue  # vertex-capacity guard
-                child_raw = apply_extension(pattern, key)
-                child = canonical_form(child_raw)
-                if child in by_child:
-                    by_child[child][0].update(gset)
-                else:
-                    by_child[child] = (set(gset), sig, et_rows)
-            for child, (gids, sig, et_rows) in by_child.items():
-                if len(gids) < min_support:
+            # canonical dedup is baseline-only (rs children are unique
+            # by the membership test); skip their embedding rebuilds too
+            want = (
+                None if rs
+                else (lambda child: child not in res.patterns)
+            )
+            for child, gids, child_embs in self.expand_children(
+                pattern, embs, min_support, rs=rs, want_embs=want
+            ):
+                if not rs and child in res.patterns:
                     continue
-                if rs:
-                    if parent(child) != pattern:
-                        continue
-                else:
-                    if child in res.patterns:
-                        continue  # canonical dedup (baseline only)
-                key = signature_to_extkey(sig)
-                child_raw = apply_extension(pattern, key)
-                child_embs = self._rebuild_embeddings(
-                    pattern, embs, sig, et_rows, child_raw
-                )
                 res.patterns[child] = len(gids)
                 res.n_enumerated += 1
                 stack.append((child, child_embs))

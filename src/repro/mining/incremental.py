@@ -1,0 +1,169 @@
+"""Incremental frontier re-mining over a sliding window (streaming).
+
+The serving layer (repro.serving.streaming) maintains exact supports
+for its *active* bank patterns under a sliding window of sequences, and
+records which active patterns the *arriving* sequences touched - i.e.
+the arrival contained them.  That dirtiness signal makes re-mining
+incremental, because containment is monotone along the reverse-search
+``parent()`` chain (a sequence containing a pattern contains every
+ancestor):
+
+    If no arrival since the last reconcile contained pattern ``p``,
+    then no pattern below ``p`` *gained* any support (a sequence
+    containing a descendant contains ``p``).  Every non-active
+    descendant was below ``minsup`` at the last reconcile and its
+    support has only decreased since, so it is still infrequent; every
+    active descendant's support is maintained exactly by the streaming
+    layer regardless (arrivals counted by the join, expiries
+    decremented from stored bitmaps).  ``p``'s subtree is *clean*: its
+    active frequent descendants are retained at their maintained
+    supports, and no scan below ``p`` can discover anything new.
+    Expiries never dirty anything - they only shrink supports, which
+    maintenance already accounts for.
+
+``refresh_frontier`` therefore walks the reverse-search tree from the
+root exactly like ``AcceleratedMiner.mine_rs`` (same scans, same
+membership test, bit-equal supports) but prunes every clean subtree: a
+clean active child is retained together with its active frequent
+descendants (looked up by walking ``parent()`` chains) without a single
+DB scan.  Dirty or unknown (new / previously tombstoned) children are
+scanned and descended normally - the *boundary frontier* of the ISSUE:
+children of still-frequent patterns re-expanded via reverse search.
+The result is exactly what a full re-mine of the window would produce
+(property-tested in tests/test_streaming.py); a periodic full re-mine
+(``StreamingBank.refresh(full=True)``) stays available as the
+belt-and-braces exactness escape hatch and as bank compaction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set
+
+from ..core.graphseq import Pattern, TRSeq, pattern_length
+from ..core.reverse_search import parent
+from .driver import AcceleratedMiner
+
+
+@dataclasses.dataclass
+class FrontierResult:
+    """Outcome of one frontier refresh: the exact frequent-pattern map
+    over the window plus the work accounting that makes the incremental
+    claim measurable (``scans`` vs ``scans_skipped``)."""
+
+    patterns: Dict[Pattern, int]
+    # exact containing-sequence sets (window gid -> bool) for every
+    # *scanned* pattern - the streaming layer backfills recovered/new
+    # rows' window bitmaps from these, no separate containment join.
+    # Retained (clean) patterns are absent: their ring bitmaps are
+    # already exact.
+    gids: Dict[Pattern, Set[int]] = dataclasses.field(
+        default_factory=dict)
+    scans: int = 0            # extension scans actually run
+    scans_skipped: int = 0    # clean frequent subtree roots pruned
+    retained: int = 0         # patterns kept from maintained supports
+    discovered: int = 0       # patterns found by scanning (new or dirty)
+
+
+def _ancestor_chains(
+    patterns: Sequence[Pattern],
+) -> Dict[Pattern, List[Pattern]]:
+    """Each pattern's reverse-search ancestor chain (excluding the
+    root), memoized across the batch - used to retain a clean pattern's
+    known frequent descendants without scanning."""
+    chains: Dict[Pattern, List[Pattern]] = {}
+
+    def chain(p: Pattern) -> List[Pattern]:
+        got = chains.get(p)
+        if got is not None:
+            return got
+        q = parent(p)
+        out: List[Pattern] = [] if q is None or not q else chain(q) + [q]
+        chains[p] = out
+        return out
+
+    for p in patterns:
+        chain(p)
+    return chains
+
+
+def refresh_frontier(
+    db: Sequence[TRSeq],
+    min_support: int,
+    *,
+    active: Dict[Pattern, int],
+    dirty: Set[Pattern],
+    any_change: bool = True,
+    max_len: Optional[int] = None,
+    miner: Optional[AcceleratedMiner] = None,
+    **miner_kw,
+) -> FrontierResult:
+    """Re-mine the window ``db`` incrementally.
+
+    ``active`` maps the maintained (exactly counted) frequent patterns
+    to their current window supports; ``dirty`` is the subset contained
+    in at least one *arrival* since the supports were last reconciled
+    (the only events that can add support anywhere below a pattern).
+    Patterns outside ``active`` (new or tombstoned) have unknown
+    supports and are always treated as dirty.  ``any_change=False``
+    asserts no window change at all happened, making the whole walk a
+    no-op retention.
+
+    Returns the exact ``{pattern: support}`` map a full
+    ``mine_rs(min_support, max_len)`` over ``db`` would produce.  The
+    miner's capacity guards (``max_itemsets``/``max_vertices``) apply
+    identically - pass ``miner`` or ``miner_kw`` to match the miner that
+    built the bank."""
+    res = FrontierResult(patterns={})
+    frequent_active = {
+        p: s for p, s in active.items() if s >= min_support
+    }
+    if not any_change:
+        res.patterns.update(frequent_active)
+        res.retained = len(frequent_active)
+        return res
+    if miner is None:
+        miner = AcceleratedMiner(db, **miner_kw)
+    assert len(miner.db) == len(db), "miner must be bound to the window"
+    chains = _ancestor_chains(list(frequent_active))
+    # descendants[c] = active frequent patterns strictly below c
+    descendants: Dict[Pattern, List[Pattern]] = {}
+    for p in frequent_active:
+        for anc in chains[p]:
+            descendants.setdefault(anc, []).append(p)
+
+    def is_clean(p: Pattern) -> bool:
+        return p in active and p not in dirty
+
+    root: Pattern = ()
+    stack = [(root, [(g, (), ()) for g in range(len(db))])]
+    while stack:
+        pattern, embs = stack.pop()
+        if max_len is not None and pattern_length(pattern) >= max_len:
+            continue
+        if len(pattern) >= miner.ni:
+            continue  # capacity guard, mirrors AcceleratedMiner._mine
+        res.scans += 1
+
+        def want_embs(child: Pattern) -> bool:
+            # clean children are retained, never descended - skip the
+            # embedding rebuild (the expensive host part of a scan)
+            return not is_clean(child)
+
+        for child, gids, child_embs in miner.expand_children(
+            pattern, embs, min_support, rs=True, want_embs=want_embs
+        ):
+            res.patterns[child] = len(gids)
+            if is_clean(child):
+                # clean subtree: no window change touched child, so no
+                # descendant's support changed - retain the known
+                # frequent ones, prune the scan
+                res.scans_skipped += 1
+                res.retained += 1
+                for q in descendants.get(child, ()):
+                    res.patterns[q] = active[q]
+                    res.retained += 1
+            else:
+                res.gids[child] = gids
+                res.discovered += 1
+                stack.append((child, child_embs))
+    return res

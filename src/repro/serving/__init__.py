@@ -39,16 +39,34 @@ Module map:
                    ``"trie"``), fingerprint-keyed LRU cache,
                    support-weighted top-k scoring, device escalation +
                    host-oracle fallback for overflow cells (results
-                   always exactly match ``core.containment``).
+                   always exactly match ``core.containment``); plus the
+                   streaming layer's hooks - ``exact_rows`` (chunked,
+                   cache-bypassing rows) and ``set_row_mask`` (tombstone
+                   masking via ``REQ_MASKED`` prescreen rows).
+* ``streaming.py`` - ``StreamingBank``: incremental support maintenance
+                   over a sliding window.  Arrivals are counted by the
+                   device containment join, expiries decremented from a
+                   ring buffer of per-sequence containment bitmaps (no
+                   re-join on eviction); sub-``minsup`` patterns are
+                   tombstoned (prescreen-masked, trie subtrees pruned);
+                   ``refresh()`` reconciles incrementally via the
+                   frontier re-mine (``mining.incremental``), extending
+                   the bank/trie in place, with ``refresh(full=True)``
+                   as the re-mine-everything escape hatch.  After a
+                   refresh the frequent map is bit-equal to a batch
+                   re-mine of the window.
 * ``sharded.py`` - shard-by-pattern (flat) / shard-by-subtree (trie)
                    serving steps for device meshes (zero-collective
                    shard_map).
 """
 from .bank import (  # noqa: F401
+    BankCapacityError,
     PatternBank,
     canonical_sequence_map,
     compile_bank,
+    extend_bank,
     sequence_fingerprint,
+    slice_bank,
 )
 from .batch import (  # noqa: F401
     batch_contains,
@@ -67,9 +85,12 @@ from .sharded import (  # noqa: F401
     make_trie_serving_step,
     stack_trie_shards,
 )
+from .streaming import ObserveResult, StreamingBank  # noqa: F401
 from .trie import (  # noqa: F401
     TrieBank,
     build_trie,
     compile_trie_bank,
+    extend_trie,
+    masked_node_req,
     parent_prefix_hits,
 )

@@ -170,6 +170,102 @@ def compile_bank(
                        req=req, n_label_keys=n_label_keys, **arrays)
 
 
+class BankCapacityError(ValueError):
+    """An incremental bank extension does not fit the compiled capacity
+    (label space / vertex width).  Callers fall back to a full
+    ``compile_bank`` recompile - the streaming layer's exactness escape
+    hatch."""
+
+
+def slice_bank(bank: PatternBank, rows: Sequence[int]) -> PatternBank:
+    """A flat sub-bank over the given pattern rows (no padding rows;
+    global ``nv``/``n_label_keys`` preserved so token keys and psi
+    widths stay consistent with the parent bank)."""
+    idx = np.asarray(list(rows), np.int64)
+    if len(idx) == 0:
+        empty = compile_bank({})
+        return PatternBank(
+            steps=np.zeros((1, bank.max_steps, STEP_FIELDS), np.int32),
+            support=empty.support, n_steps=empty.n_steps,
+            n_itemsets=empty.n_itemsets, n_vertices=empty.n_vertices,
+            pattern_valid=empty.pattern_valid,
+            req=np.zeros((1, bank.req.shape[1]), np.int32),
+            patterns=[], nv=bank.nv, n_label_keys=bank.n_label_keys,
+        )
+    return PatternBank(
+        steps=bank.steps[idx],
+        support=bank.support[idx],
+        n_steps=bank.n_steps[idx],
+        n_itemsets=bank.n_itemsets[idx],
+        n_vertices=bank.n_vertices[idx],
+        pattern_valid=bank.pattern_valid[idx],
+        req=bank.req[idx],
+        patterns=[bank.patterns[i] for i in idx],
+        nv=bank.nv,
+        n_label_keys=bank.n_label_keys,
+    )
+
+
+def extend_bank(
+    bank: PatternBank, new: Mapping[Pattern, int]
+) -> PatternBank:
+    """Append new patterns (canonicalized, ordered by (-support, code)
+    for determinism) to a compiled bank without recompiling the existing
+    rows: old row indices - and therefore window bitmaps, support
+    arrays, and trie terminals over them - stay valid.
+
+    The bank-wide support ordering invariant is *not* maintained across
+    the append (streamed supports drift anyway); streaming callers score
+    from their live support array.  Raises ``BankCapacityError`` when a
+    new pattern needs a label outside the compiled ``n_label_keys``
+    space (token keys would change for every existing row - that is a
+    full recompile).  ``max_steps`` and ``nv`` grow as needed (padding
+    columns only; existing rows are unchanged)."""
+    items = [(canonical_form(p), int(s)) for p, s in new.items()]
+    items.sort(key=lambda ps: (-ps[1], canonical_code(ps[0])))
+    if not items:
+        return bank
+    max_label = max(
+        (tr.label for p, _ in items for s in p for tr in s), default=-1
+    )
+    if max_label + 2 > bank.n_label_keys:
+        raise BankCapacityError(
+            f"label {max_label} outside compiled key space "
+            f"(n_label_keys={bank.n_label_keys})"
+        )
+    progs = [pattern_steps(p, bank.n_label_keys) for p, _ in items]
+    L = max(bank.max_steps, max(len(r) for r in progs))
+    P_old, P_new = bank.n_rows, len(items)
+    assert P_old == bank.n_patterns, \
+        "extend_bank requires an unpadded bank"
+    steps = np.zeros((P_old + P_new, L, STEP_FIELDS), np.int32)
+    steps[:P_old, : bank.max_steps] = bank.steps
+    for pi, prog in enumerate(progs):
+        for si, row in enumerate(prog):
+            steps[P_old + pi, si] = row
+    req = np.zeros((P_old + P_new, bank.req.shape[1]), np.int32)
+    req[:P_old] = bank.req
+    for pi, prog in enumerate(progs):
+        for row in prog:
+            req[P_old + pi, row[7]] += 1
+    cat = lambda old, vals: np.concatenate(  # noqa: E731
+        [old, np.asarray(vals, np.int32)]
+    )
+    n_vertices = [len(pattern_vertices(p)) for p, _ in items]
+    return PatternBank(
+        steps=steps,
+        support=cat(bank.support, [s for _, s in items]),
+        n_steps=cat(bank.n_steps, [len(r) for r in progs]),
+        n_itemsets=cat(bank.n_itemsets, [len(p) for p, _ in items]),
+        n_vertices=cat(bank.n_vertices, n_vertices),
+        pattern_valid=cat(bank.pattern_valid, [1] * P_new),
+        req=req,
+        patterns=bank.patterns + [p for p, _ in items],
+        nv=max(bank.nv, max(n_vertices, default=1)),
+        n_label_keys=bank.n_label_keys,
+    )
+
+
 def _relabeled_bytes(s: TRSeq, m: Dict[int, int]) -> bytes:
     """The canonical byte encoding of ``s`` under vertex relabeling
     ``m``: TRs sorted within each itemset after relabeling (edge

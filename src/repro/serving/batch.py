@@ -19,7 +19,11 @@ Three query-time reductions keep the join off the B*P*T dense wall:
   strictly increasing phi force distinct pattern TRs onto distinct data
   tokens, so ``counts[b] >= bank.req[p]`` (per key) is a sound
   necessary condition; the server joins only surviving pairs
-  (``pair_contains``), typically a small fraction,
+  (``pair_contains``), typically a small fraction.  The streaming
+  layer's tombstone mask rides on this: a masked pattern's ``req`` row
+  (or a dead trie subtree's ``node_req``) is set to ``trie.REQ_MASKED``,
+  which no count vector satisfies, so tombstoned rows are pruned here
+  at zero join cost,
 * **sort compaction** - frontier selection is "first emax accepted
   candidates", computed with one small sort per cell (top_k is an order
   of magnitude slower on CPU backends).

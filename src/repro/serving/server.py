@@ -51,7 +51,7 @@ from .batch import (
     trie_level_advance_gather,
     trie_root_advance,
 )
-from .trie import TrieBank, build_trie
+from .trie import REQ_MASKED, TrieBank, build_trie, masked_node_req
 
 
 def _pow2(n: int) -> int:
@@ -151,6 +151,10 @@ class PatternServer:
                     "term_rows_leaf": rows[term_leaf],
                     "term_pos_leaf": term_pos[term_leaf],
                 })
+        # tombstone mask (serving.streaming): inactive rows get their
+        # prescreen requirements replaced by REQ_MASKED, so they are
+        # never joined and always answer not-contained
+        self._row_mask: Optional[np.ndarray] = None
         self._cache: "OrderedDict[str, np.ndarray]" = OrderedDict()
         # pairs_* count (sequence, pattern) prescreen pairs (flat
         # layout); cells_* count (sequence, trie node) prescreen cells
@@ -163,7 +167,57 @@ class PatternServer:
             "escalated_cells": 0, "host_fallback_cells": 0,
         }
 
+    # ------------------------------------------------------------- masking
+    def set_row_mask(self, active: Optional[np.ndarray]) -> None:
+        """Install (or with ``None`` clear) a tombstone mask: rows where
+        ``active`` is False get their prescreen requirement rows
+        replaced by ``REQ_MASKED``, so the join never visits them - in
+        the trie layout a subtree whose terminals are all masked is
+        pruned at its highest all-masked ancestor - and their containment
+        answers are always False.  Masking is prescreen-only: active
+        rows keep bit-identical answers (the prescreen is sound, so
+        removing candidates it would have kept cannot change survivors'
+        join results).  Clears the row cache - cached rows predate the
+        mask."""
+        bank = self.bank
+        self._cache.clear()
+        if active is None:
+            self._row_mask = None
+            self._req = jnp.asarray(bank.req)
+            if self.bank_layout == "trie":
+                self._node_req = jnp.asarray(self.trie.node_req.reshape(
+                    self.trie.n_nodes, bank.req.shape[1]))
+            return
+        active = np.asarray(active, bool)
+        assert active.shape == (bank.n_patterns,)
+        self._row_mask = active
+        req = bank.req[: bank.n_patterns].copy()
+        req[~active] = REQ_MASKED
+        if bank.n_rows > bank.n_patterns:  # padding rows stay masked
+            pad = np.full(
+                (bank.n_rows - bank.n_patterns, req.shape[1]),
+                REQ_MASKED, np.int32,
+            )
+            req = np.concatenate([req, pad])
+        self._req = jnp.asarray(req)
+        if self.bank_layout == "trie":
+            self._node_req = jnp.asarray(
+                masked_node_req(self.trie, active)
+            )
+
     # ------------------------------------------------------------- device
+    def exact_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
+        """Exact containment rows [len(seqs), n_patterns] computed
+        directly on device (chunked by ``max_batch``), bypassing the
+        fingerprint cache - the streaming layer's entry point (it
+        maintains per-sequence window bitmaps, so every arrival must be
+        answered fresh and row-aligned)."""
+        out = np.zeros((len(seqs), self.bank.n_patterns), bool)
+        for start in range(0, len(seqs), self.max_batch):
+            chunk = list(seqs[start : start + self.max_batch])
+            out[start : start + len(chunk)] = self._run_batch(chunk)
+        return out
+
     def _run_batch(self, seqs: List[TRSeq]) -> np.ndarray:
         """Exact containment rows [len(seqs), n_patterns] for one chunk."""
         assert len(seqs) <= self.max_batch
@@ -227,6 +281,13 @@ class PatternServer:
         frontier (uniform-length replay per program-length group), then
         the per-cell host oracle.  Shared by both bank layouts: this is
         the whole exactness contract."""
+        if self._row_mask is not None:
+            # tombstoned rows answer False, never escalate.  The flat
+            # prescreen already excludes them, but a masked *terminal*
+            # on a shared trie node with active descendants is still
+            # joined (the node mask prunes all-masked subtrees only)
+            contained[:, ~self._row_mask] = False
+            ovf[:, ~self._row_mask] = False
         bank = self.bank
         und_b, und_p = np.nonzero(ovf & ~contained)
         if len(und_b) and self.emax_retry > self.emax:

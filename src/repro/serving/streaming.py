@@ -1,0 +1,411 @@
+"""StreamingBank: incremental support maintenance over a sliding window.
+
+The batch system mines a bank once and serves it; production traffic is
+a *stream* - sequences arrive continuously and old ones age out of
+relevance.  ``StreamingBank`` wraps a compiled ``PatternBank`` (flat or
+trie layout) and keeps per-pattern supports exact under a sliding
+window of the ``window`` most recent sequences, without re-mining per
+update:
+
+* ``observe(batch)`` answers each arrival with the existing device-side
+  containment join (``PatternServer.exact_rows`` - prescreen, flat or
+  trie-layout join, escalation, host-oracle fallback: the served bits
+  are exact) and *increments* supports by the resulting row.  The row is
+  also stored in a window ring buffer of per-sequence containment
+  bitmaps, so when the sequence later expires its support contribution
+  is *decremented* from the stored bits - eviction never re-joins
+  anything.
+* Patterns whose support falls below ``minsup`` are **tombstoned**: the
+  server's prescreen requirement rows are masked (``REQ_MASKED``), so
+  the join stops visiting them - in the trie layout a subtree whose
+  terminals are all tombstoned is pruned at its highest dead ancestor.
+  A tombstoned pattern's maintained support becomes a stale lower bound
+  (arrivals no longer count it); it stays in the bank as a tombstone
+  until a refresh recounts or a full refresh compacts it away.
+* ``refresh()`` reconciles the bank with the window *incrementally*
+  (``mining.incremental.refresh_frontier``): the reverse-search walk
+  from the root prunes every *clean* subtree - one no arrival touched
+  since the last reconcile, per the arrival containment bitmaps
+  (expiries only shrink supports, which maintenance already accounts
+  for, so they dirty nothing) - and re-scans only the dirty boundary,
+  discovering newly frequent patterns and recovering tombstoned ones.  New patterns are appended to the bank
+  (``extend_bank``) and LCP-merged into the trie (``extend_trie``)
+  without recompiling existing rows; recovered/new rows get their
+  window bitmaps recounted by a device join over just those rows.
+  After ``refresh()`` the active frequent map is *bit-equal* to a batch
+  re-mine of the window (property-tested, both layouts).
+* ``refresh(full=True)`` is the exactness escape hatch and compaction
+  step: re-mine the window from scratch, recompile bank + trie, recount
+  all bitmaps.  It is also the automatic fallback when an incremental
+  extension cannot fit the compiled capacity (``BankCapacityError``:
+  e.g. a new pattern uses a label the bank's key space never saw).
+
+With ``tombstones=False`` nothing is ever masked, so maintained
+supports stay exact for *every* bank pattern continuously (not just at
+refresh points) - the differential-testing mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.graphseq import Pattern, TRSeq
+from ..mining.driver import AcceleratedMiner
+from ..mining.incremental import refresh_frontier
+from .bank import BankCapacityError, PatternBank, compile_bank, \
+    extend_bank
+from .server import PatternServer, QueryResult
+from .trie import TrieBank, build_trie, extend_trie
+
+
+@dataclasses.dataclass
+class ObserveResult:
+    arrived: int
+    evicted: int
+    tombstoned: int  # patterns newly masked by this batch
+    refreshed: bool  # True when refresh_every triggered a refresh
+
+
+class StreamingBank:
+    def __init__(
+        self,
+        bank: PatternBank,
+        *,
+        window: int,
+        minsup: int,
+        bank_layout: str = "flat",
+        trie: Optional[TrieBank] = None,
+        max_len: Optional[int] = None,
+        tombstones: bool = True,
+        refresh_every: int = 0,
+        miner_kw: Optional[dict] = None,
+        **server_kw,
+    ):
+        assert window > 0 and minsup > 0
+        # an empty compile_bank({}) legitimately carries one padding row
+        assert bank.n_rows == max(bank.n_patterns, 1), \
+            "streaming requires an unpadded bank"
+        self.window = window
+        self.minsup = minsup
+        self.max_len = max_len
+        self.bank_layout = bank_layout
+        self.tombstones = tombstones
+        self.refresh_every = refresh_every
+        self.miner_kw = dict(miner_kw or {})
+        self.server_kw = dict(server_kw)
+        self.bank = bank
+        self.trie = trie
+        self.server = self._make_server()
+        P = bank.n_patterns
+        self.support = np.zeros(P, np.int64)
+        self.active = np.ones(P, bool)
+        self._bits = np.zeros((window, P), bool)
+        self._seqs: List[Optional[TRSeq]] = [None] * window
+        self._head = 0   # next ring slot to write (oldest when full)
+        self._count = 0
+        self._dirty = np.zeros(P, bool)
+        self._any_change = False
+        self._batches_since_refresh = 0
+        self.stats: Dict[str, int] = {
+            "arrivals": 0, "evictions": 0, "observe_batches": 0,
+            "tombstoned": 0, "recovered": 0, "added": 0,
+            "refreshes": 0, "full_refreshes": 0,
+            "frontier_scans": 0, "frontier_scans_skipped": 0,
+            "frontier_retained": 0,
+        }
+
+    # ------------------------------------------------------------ wiring
+    def _make_server(self) -> PatternServer:
+        if self.bank_layout == "trie" and self.trie is None:
+            self.trie = build_trie(self.bank)
+        return PatternServer(
+            self.bank, bank_layout=self.bank_layout, trie=self.trie,
+            **self.server_kw,
+        )
+
+    def _apply_mask(self) -> None:
+        if not self.tombstones:
+            return
+        mask = None if self.active.all() else self.active
+        self.server.set_row_mask(mask)
+
+    @classmethod
+    def from_db(
+        cls,
+        db: Sequence[TRSeq],
+        *,
+        minsup: int,
+        window: Optional[int] = None,
+        max_len: Optional[int] = None,
+        miner_kw: Optional[dict] = None,
+        **kw,
+    ) -> "StreamingBank":
+        """Mine ``db`` into a bank and seed the window with it (at most
+        the last ``window`` sequences are retained).  The seed observe
+        runs unmasked, so it leaves the bank fully reconciled: active ==
+        the exact frequent set over the seeded window."""
+        miner = AcceleratedMiner(db, **(miner_kw or {}))
+        result = miner.mine_rs(minsup, max_len=max_len)
+        bank = compile_bank(result)
+        sb = cls(bank, window=window or max(len(db), 1), minsup=minsup,
+                 max_len=max_len, miner_kw=miner_kw, **kw)
+        sb.observe(db)
+        # a single unmasked observe counts every bank pattern exactly
+        # over the final window, so the tombstone cut it applied *is*
+        # the exact frequent set: reconciled without a refresh
+        sb._dirty[:] = False
+        sb._any_change = False
+        sb._batches_since_refresh = 0
+        return sb
+
+    # ----------------------------------------------------------- streams
+    @property
+    def n_patterns(self) -> int:
+        return self.bank.n_patterns
+
+    @property
+    def window_seqs(self) -> List[TRSeq]:
+        """Current window contents, oldest first."""
+        if self._count < self.window:
+            return [s for s in self._seqs[: self._count]]
+        return (self._seqs[self._head:] + self._seqs[: self._head])
+
+    def frequent(self) -> Dict[Pattern, int]:
+        """The active frequent patterns with their window supports.
+        Right after ``refresh()`` this is bit-equal to a batch re-mine
+        of the window; between refreshes tombstoned-then-recovering
+        patterns wait for the next refresh to reappear."""
+        out = {}
+        for i in np.nonzero(self.active & (self.support >= self.minsup))[0]:
+            out[self.bank.patterns[i]] = int(self.support[i])
+        return out
+
+    def observe(self, batch: Sequence[TRSeq]) -> ObserveResult:
+        """Slide ``batch`` into the window: device-join each arrival
+        against the active bank (one containment row per sequence),
+        increment supports, store the row in the ring, and decrement
+        the expiring sequences' stored rows - no re-join on eviction.
+        Tombstones are re-evaluated once per call, so the mask is fixed
+        while the batch joins."""
+        batch = list(batch)
+        if not batch:
+            return ObserveResult(0, 0, 0, False)
+        rows = self.server.exact_rows(batch)
+        evicted = 0
+        for seq, row in zip(batch, rows):
+            if self._count == self.window:
+                old = self._bits[self._head]
+                self.support -= old
+                # evictions do NOT set dirty bits: supports only
+                # decrease below an evicted-from pattern, so no new
+                # frequent descendant can appear and active
+                # descendants' supports stay maintained-exact - only
+                # arrivals can create re-scan work (incremental.py)
+                evicted += 1
+            self._seqs[self._head] = seq
+            self._bits[self._head] = row
+            self.support += row
+            self._dirty |= row
+            self._head = (self._head + 1) % self.window
+            self._count = min(self._count + 1, self.window)
+        self._any_change = True
+        n_tomb = 0
+        if self.tombstones:
+            newly = self.active & (self.support < self.minsup)
+            n_tomb = int(newly.sum())
+            if n_tomb:
+                self.active &= ~newly
+                self._apply_mask()
+        self.stats["arrivals"] += len(batch)
+        self.stats["evictions"] += evicted
+        self.stats["observe_batches"] += 1
+        self.stats["tombstoned"] += n_tomb
+        self._batches_since_refresh += 1
+        refreshed = False
+        if (self.refresh_every
+                and self._batches_since_refresh >= self.refresh_every):
+            self.refresh()
+            refreshed = True
+        return ObserveResult(len(batch), evicted, n_tomb, refreshed)
+
+    # ----------------------------------------------------------- refresh
+    def _ring_slots(self) -> List[int]:
+        """Ring slots in window (oldest-first) order."""
+        if self._count < self.window:
+            return list(range(self._count))
+        return [(self._head + i) % self.window
+                for i in range(self.window)]
+
+    def refresh(self, full: bool = False) -> Dict[Pattern, int]:
+        """Reconcile the bank with the window; returns the exact
+        frequent map (== batch re-mine of the window).  Incremental by
+        default (frontier re-mine + bank/trie extension + recount of
+        only the recovered/new rows); ``full=True`` re-mines and
+        recompiles everything (the escape hatch, also compacts
+        tombstones away)."""
+        self._batches_since_refresh = 0
+        seqs = self.window_seqs
+        if full:
+            return self._refresh_full(seqs)
+        if not self._any_change:
+            return self.frequent()
+        if self.tombstones:
+            active_map = {
+                self.bank.patterns[i]: int(self.support[i])
+                for i in np.nonzero(self.active)[0]
+            }
+        else:
+            # every support is exact when nothing is ever masked
+            active_map = {
+                p: int(self.support[i])
+                for i, p in enumerate(self.bank.patterns)
+            }
+        # dirtiness only means something for rows whose supports are
+        # being maintained: every row when tombstones are off, active
+        # rows when on (a tombstoned row re-enters via a scan, not via
+        # retention, so its dirty bit is moot)
+        maintained = self.active if self.tombstones else \
+            np.ones_like(self.active)
+        dirty_set = {
+            self.bank.patterns[i]
+            for i in np.nonzero(self._dirty & maintained)[0]
+        }
+        fr = refresh_frontier(
+            seqs, self.minsup, active=active_map, dirty=dirty_set,
+            any_change=True, max_len=self.max_len, **self.miner_kw,
+        )
+        self.stats["refreshes"] += 1
+        self.stats["frontier_scans"] += fr.scans
+        self.stats["frontier_scans_skipped"] += fr.scans_skipped
+        self.stats["frontier_retained"] += fr.retained
+        return self._reconcile(seqs, fr.patterns, fr.gids)
+
+    def _reconcile(
+        self,
+        seqs: List[TRSeq],
+        mined: Dict[Pattern, int],
+        gids: Dict[Pattern, set],
+    ) -> Dict[Pattern, int]:
+        known = {p: i for i, p in enumerate(self.bank.patterns)}
+        new = {p: s for p, s in mined.items() if p not in known}
+        n_new = len(new)
+        bank_grew = False
+        if new and not self.bank.n_patterns:
+            # growing out of an empty bank is a plain recompile (the
+            # empty bank's padding row and 1-wide key space cannot be
+            # extended in place)
+            return self._refresh_full(seqs, mined=mined)
+        if new:
+            try:
+                bank2 = extend_bank(self.bank, new)
+            except BankCapacityError:
+                # a new pattern does not fit the compiled key space:
+                # full recompile is the only exact option
+                return self._refresh_full(seqs, mined=mined)
+            grow = bank2.n_patterns - self.bank.n_patterns
+            self.support = np.concatenate(
+                [self.support, np.zeros(grow, np.int64)])
+            self.active = np.concatenate(
+                [self.active, np.zeros(grow, bool)])
+            self._dirty = np.concatenate(
+                [self._dirty, np.zeros(grow, bool)])
+            self._bits = np.pad(self._bits, ((0, 0), (0, grow)))
+            if self.trie is not None:
+                self.trie = extend_trie(self.trie, bank2)
+            self.bank = bank2
+            bank_grew = True
+            known = {p: i for i, p in enumerate(bank2.patterns)}
+            self.stats["added"] += grow
+        # rows whose maintained bitmaps are stale: new rows (never
+        # counted) and recovered tombstones (masked while inactive)
+        mined_rows = np.zeros(self.bank.n_patterns, bool)
+        for p in mined:
+            mined_rows[known[p]] = True
+        recount = np.nonzero(mined_rows & ~self.active)[0]
+        if len(recount):
+            # recovered/new rows backfill their window bitmaps from the
+            # frontier miner's exact containing-gid sets - no extra
+            # containment join.  gid g indexes ``seqs`` (oldest-first),
+            # i.e. position g of the ring-slot order; never-written
+            # slots hold all-zero bits already.
+            slots = np.asarray(self._ring_slots(), np.int64)
+            cols = np.zeros((len(seqs), len(recount)), bool)
+            for j, r in enumerate(recount):
+                gset = gids[self.bank.patterns[r]]
+                cols[sorted(gset), j] = True
+            self._bits[slots[:, None], recount[None, :]] = cols
+            self.support[recount] = cols.sum(0)
+            self.stats["recovered"] += len(recount) - n_new
+        # maintained supports of still-active mined rows and recounted
+        # supports of recovered/new rows must both equal the mined
+        # (re-mine-exact) supports - the maintenance invariant
+        for p, s in mined.items():
+            assert int(self.support[known[p]]) == s, (
+                "support drift on", p, int(self.support[known[p]]), s)
+        self.active = mined_rows if self.tombstones else \
+            np.ones(self.bank.n_patterns, bool)
+        if bank_grew:
+            # only an extended bank needs new server tables; otherwise
+            # the mask refresh below is the whole serving-state change
+            # (set_row_mask drops the row cache itself)
+            self.server = self._make_server()
+        self._apply_mask()
+        self._dirty[:] = False
+        self._any_change = False
+        return self.frequent()
+
+    def _refresh_full(
+        self, seqs: List[TRSeq], mined: Optional[Dict[Pattern, int]] = None
+    ) -> Dict[Pattern, int]:
+        """Re-mine + recompile + recount everything (escape hatch /
+        tombstone compaction)."""
+        self.stats["full_refreshes"] += 1
+        if mined is None:
+            if seqs:
+                miner = AcceleratedMiner(seqs, **self.miner_kw)
+                mined = miner.mine_rs(
+                    self.minsup, max_len=self.max_len).patterns
+            else:
+                mined = {}
+        self.bank = compile_bank(mined)
+        self.trie = None  # rebuilt by _make_server for the trie layout
+        self.server = self._make_server()
+        P = self.bank.n_patterns
+        self.support = np.zeros(P, np.int64)
+        self.active = np.ones(P, bool)
+        self._dirty = np.zeros(P, bool)
+        self._bits = np.zeros((self.window, P), bool)
+        if seqs and P:
+            rows = self.server.exact_rows(seqs)
+            for j, slot in enumerate(self._ring_slots()):
+                self._bits[slot] = rows[j]
+            self.support = rows.sum(0).astype(np.int64)
+        # full recount over a freshly mined bank must reproduce the
+        # mined supports exactly (containment join == mining counts)
+        assert np.array_equal(
+            self.support, self.bank.support[:P].astype(np.int64)
+        ), "full-refresh recount disagrees with mined supports"
+        self._any_change = False
+        return self.frequent()
+
+    # ----------------------------------------------------------- serving
+    def query(
+        self, seqs: Sequence[TRSeq], k: int = 10
+    ) -> List[QueryResult]:
+        """Serve containment rows over the active bank (tombstoned rows
+        answer False) with top-k scored by *live* window supports -
+        compiled-time bank order goes stale as supports drift, so the
+        server's order-based scoring shortcut does not apply here."""
+        results = self.server.query(seqs, k=0)
+        out = []
+        for r in results:
+            ids = np.nonzero(r.contained)[0]
+            ranked = sorted(
+                ids, key=lambda i: (-int(self.support[i]), int(i))
+            )[:k]
+            out.append(dataclasses.replace(r, topk=[
+                (int(i), int(self.support[i])) for i in ranked
+            ]))
+        return out

@@ -51,7 +51,13 @@ from typing import Dict, List, Mapping, Tuple, Union
 import numpy as np
 
 from ..core.gtrace import MiningResult
-from .bank import STEP_FIELDS, PatternBank, compile_bank, pattern_steps
+from .bank import (
+    STEP_FIELDS,
+    PatternBank,
+    compile_bank,
+    pattern_steps,
+    slice_bank,
+)
 
 
 @dataclasses.dataclass
@@ -171,7 +177,7 @@ class TrieBank:
         out = []
         for rows in bins:
             rows = sorted(rows)  # keep bank (support-desc) order
-            sub = _slice_bank(bank, rows)
+            sub = slice_bank(bank, rows)
             out.append(build_trie(sub))
         return out
 
@@ -195,46 +201,18 @@ class TrieBank:
         return path[::-1]
 
 
-def _slice_bank(bank: PatternBank, rows: List[int]) -> PatternBank:
-    """A flat sub-bank over the given pattern rows (no padding rows;
-    global ``nv``/``n_label_keys`` preserved)."""
-    idx = np.asarray(rows, np.int64)
-    if len(idx) == 0:
-        empty = compile_bank({})
-        return PatternBank(
-            steps=np.zeros((1, bank.max_steps, STEP_FIELDS), np.int32),
-            support=empty.support, n_steps=empty.n_steps,
-            n_itemsets=empty.n_itemsets, n_vertices=empty.n_vertices,
-            pattern_valid=empty.pattern_valid,
-            req=np.zeros((1, bank.req.shape[1]), np.int32),
-            patterns=[], nv=bank.nv, n_label_keys=bank.n_label_keys,
-        )
-    return PatternBank(
-        steps=bank.steps[idx],
-        support=bank.support[idx],
-        n_steps=bank.n_steps[idx],
-        n_itemsets=bank.n_itemsets[idx],
-        n_vertices=bank.n_vertices[idx],
-        pattern_valid=bank.pattern_valid[idx],
-        req=bank.req[idx],
-        patterns=[bank.patterns[i] for i in rows],
-        nv=bank.nv,
-        n_label_keys=bank.n_label_keys,
-    )
-
-
-def build_trie(bank: PatternBank) -> TrieBank:
-    """LCP-merge the bank's step programs into a ``TrieBank``.
-
-    Node ids are assigned in first-visit order walking each program
-    root-to-leaf, so every parent id is smaller than its children's and
-    one reversed pass computes all subtree reductions (``node_req``)."""
-    children: Dict[Tuple[int, Tuple[int, ...]], int] = {}
-    steps: List[Tuple[int, ...]] = []
-    parents: List[int] = []
-    depths: List[int] = []
-    terminal = np.full(max(bank.n_rows, 1), -1, np.int32)
-    for row in range(bank.n_patterns):
+def _insert_programs(
+    bank: PatternBank,
+    rows,
+    children: Dict[Tuple[int, Tuple[int, ...]], int],
+    steps: List[Tuple[int, ...]],
+    parents: List[int],
+    depths: List[int],
+    terminal: np.ndarray,
+) -> None:
+    """LCP-insert the given bank rows' step programs into the node
+    lists (the shared core of ``build_trie`` and ``extend_trie``)."""
+    for row in rows:
         cur = -1
         for k in range(int(bank.n_steps[row])):
             srow = tuple(int(x) for x in bank.steps[row, k])
@@ -248,6 +226,18 @@ def build_trie(bank: PatternBank) -> TrieBank:
                 depths.append(1 if cur < 0 else depths[cur] + 1)
             cur = nid
         terminal[row] = cur
+
+
+def _finalize_trie(
+    bank: PatternBank,
+    steps: List[Tuple[int, ...]],
+    parents: List[int],
+    depths: List[int],
+    terminal: np.ndarray,
+) -> TrieBank:
+    """Node tables -> ``TrieBank``: subtree ``node_req`` reductions (one
+    reversed pass - parent ids are always smaller than their
+    children's), level index, per-level positions."""
     M = len(steps)
     node_step = np.asarray(steps, np.int32).reshape(M, STEP_FIELDS)
     node_parent = np.asarray(parents, np.int32).reshape(M)
@@ -277,6 +267,80 @@ def build_trie(bank: PatternBank) -> TrieBank:
                     node_depth=node_depth, node_req=node_req,
                     terminal_node=terminal, bank=bank, levels=levels,
                     node_pos=node_pos[:max(M, 1)])
+
+
+def build_trie(bank: PatternBank) -> TrieBank:
+    """LCP-merge the bank's step programs into a ``TrieBank``.
+
+    Node ids are assigned in first-visit order walking each program
+    root-to-leaf, so every parent id is smaller than its children's and
+    one reversed pass computes all subtree reductions (``node_req``)."""
+    children: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+    steps: List[Tuple[int, ...]] = []
+    parents: List[int] = []
+    depths: List[int] = []
+    terminal = np.full(max(bank.n_rows, 1), -1, np.int32)
+    _insert_programs(bank, range(bank.n_patterns), children, steps,
+                     parents, depths, terminal)
+    return _finalize_trie(bank, steps, parents, depths, terminal)
+
+
+def extend_trie(trie: TrieBank, bank: PatternBank) -> TrieBank:
+    """LCP-merge the appended rows of an extended bank (see
+    ``bank.extend_bank``) into an existing trie without re-walking the
+    old rows: ``bank`` must share rows ``[0, trie.bank.n_patterns)``
+    with ``trie.bank`` (same patterns, same order).  New nodes are
+    appended, so existing node ids - and every host table derived from
+    them - stay valid, and the result is *identical* to
+    ``build_trie(bank)`` (node ids are first-visit order over rows, and
+    the shared rows visit first either way; differentially tested)."""
+    old_n = trie.bank.n_patterns
+    assert bank.patterns[:old_n] == trie.bank.patterns, \
+        "extended bank must share its leading rows with the trie"
+    children: Dict[Tuple[int, Tuple[int, ...]], int] = {
+        (int(trie.node_parent[n]),
+         tuple(int(x) for x in trie.node_step[n])): n
+        for n in range(trie.n_nodes)
+    }
+    steps = [tuple(int(x) for x in trie.node_step[n])
+             for n in range(trie.n_nodes)]
+    parents = [int(p) for p in trie.node_parent[: trie.n_nodes]]
+    depths = [int(d) for d in trie.node_depth[: trie.n_nodes]]
+    terminal = np.full(max(bank.n_rows, 1), -1, np.int32)
+    terminal[:old_n] = trie.terminal_node[:old_n]
+    _insert_programs(bank, range(old_n, bank.n_patterns), children,
+                     steps, parents, depths, terminal)
+    return _finalize_trie(bank, steps, parents, depths, terminal)
+
+
+#: prescreen row value that no token-count vector ever satisfies - a
+#: masked (tombstoned) pattern or subtree is never joined
+REQ_MASKED = np.iinfo(np.int32).max
+
+
+def masked_node_req(trie: TrieBank, active: np.ndarray) -> np.ndarray:
+    """Residual ``node_req`` rows over the *active* terminals only:
+    ``min over active terminals t below n of bank.req[t]``, with
+    ``REQ_MASKED`` where a subtree has no active terminal - so the
+    level-synchronous scan stops joining tombstoned subtrees at their
+    highest all-tombstoned ancestor (the streaming layer's tombstone
+    mask; see serving.streaming).  ``active`` is a [n_patterns] bool
+    mask.  With all patterns active this equals ``trie.node_req``."""
+    bank = trie.bank
+    M = trie.n_nodes
+    node_req = np.full((max(M, 1), bank.req.shape[1]), REQ_MASKED,
+                       np.int32)
+    for row in range(bank.n_patterns):
+        if not active[row]:
+            continue
+        t = int(trie.terminal_node[row])
+        if t >= 0:
+            np.minimum(node_req[t], bank.req[row], out=node_req[t])
+    for n in range(M - 1, -1, -1):
+        p = int(trie.node_parent[n])
+        if p >= 0:
+            np.minimum(node_req[p], node_req[n], out=node_req[p])
+    return node_req[:M] if M else node_req[:0]
 
 
 def parent_prefix_hits(bank: PatternBank) -> int:

@@ -53,6 +53,7 @@ print("DISTRIBUTED-OK", len(dev))
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_mining_step_8dev():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

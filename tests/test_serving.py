@@ -50,6 +50,7 @@ def _device_rows(db, bank, **kw):
 
 
 # ---------------------------------------------------- oracle equivalence
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_batch_contains_equals_oracle_rs_patterns(seed):
@@ -67,6 +68,7 @@ def test_batch_contains_equals_oracle_rs_patterns(seed):
         assert cont[:, j].sum() == support(p, list(db))
 
 
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_batch_contains_equals_oracle_gtrace_patterns(seed):
@@ -452,6 +454,7 @@ print("SHARDED-SERVING-OK", int(np.asarray(sh_c).sum()))
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_serving_step_8dev():
     import os
     import subprocess

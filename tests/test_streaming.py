@@ -1,0 +1,312 @@
+"""StreamingBank: sliding-window support maintenance must be bit-equal
+to a batch re-mine of the window (both bank layouts), and the
+incremental machinery (extend_bank / extend_trie / tombstone masking /
+frontier refresh) must agree with its from-scratch counterparts."""
+import random
+
+import numpy as np
+import pytest
+from conftest import random_db
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI shim (see hypothesis_compat)
+    from hypothesis_compat import given, settings, strategies as st
+
+from repro.core.containment import contains
+from repro.core.reverse_search import mine_gtrace_rs
+from repro.mining.driver import AcceleratedMiner
+from repro.mining.incremental import refresh_frontier
+from repro.serving.bank import (
+    BankCapacityError,
+    compile_bank,
+    extend_bank,
+    slice_bank,
+)
+from repro.serving.server import PatternServer
+from repro.serving.streaming import StreamingBank
+from repro.serving.trie import build_trie, extend_trie, masked_node_req
+
+MINSUP, MAX_LEN, W = 3, 3, 8
+
+
+def _mk(seed, layout="flat", window=W, tombstones=True, **kw):
+    db = random_db(seed, n_seq=window)
+    return StreamingBank.from_db(
+        db, minsup=MINSUP, window=window, max_len=MAX_LEN,
+        bank_layout=layout, tombstones=tombstones, **kw,
+    )
+
+
+def _oracle(seqs):
+    return dict(mine_gtrace_rs(seqs, MINSUP, max_len=MAX_LEN).patterns)
+
+
+# ------------------------------------------------------------ property
+@pytest.mark.slow
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_streamed_supports_equal_batch_remine(seed):
+    """The tentpole contract: after every refresh - incremental or full,
+    flat or trie - the active frequent map is bit-equal (patterns AND
+    supports) to re-mining the current window from scratch."""
+    rng = random.Random(seed)
+    layout = rng.choice(["flat", "trie"])
+    sb = _mk(seed % 40, layout)
+    assert sb.frequent() == _oracle(sb.window_seqs)
+    for step in range(4):
+        n = rng.randint(1, 4)
+        sb.observe(random_db(1000 * seed + step, n_seq=n))
+        if rng.random() < 0.5:
+            got = sb.refresh(full=rng.random() < 0.25)
+            assert got == _oracle(sb.window_seqs)
+    got = sb.refresh()
+    assert got == _oracle(sb.window_seqs)
+
+
+@given(st.integers(0, 20))
+@settings(max_examples=4, deadline=None)
+def test_no_tombstone_mode_is_continuously_exact(seed):
+    """With tombstones off nothing is masked, so every bank pattern's
+    maintained support equals its true window support after every
+    observe - not just at refresh points."""
+    sb = _mk(seed, tombstones=False)
+    for step in range(4):
+        sb.observe(random_db(7000 + 10 * seed + step, n_seq=3))
+        win = sb.window_seqs
+        for i, p in enumerate(sb.bank.patterns):
+            assert sb.support[i] == sum(contains(p, s) for s in win)
+        # ring-buffer invariant: supports are exactly the column sums
+        # of the stored per-sequence bitmaps
+        assert np.array_equal(
+            sb.support, sb._bits.sum(0).astype(np.int64))
+
+
+# ----------------------------------------------------------- edge cases
+def test_empty_window_refresh_and_query():
+    db = random_db(3, n_seq=W)
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(MINSUP, max_len=MAX_LEN))
+    sb = StreamingBank(bank, window=W, minsup=MINSUP, max_len=MAX_LEN)
+    assert sb.window_seqs == []
+    assert sb.refresh() == {}
+    assert sb.refresh(full=True) == {}
+    sb.observe([])  # empty batch is a no-op
+    assert sb.stats["arrivals"] == 0
+
+
+def test_empty_bank_grows_on_refresh():
+    """A bank mined empty (minsup unreachable) must stream fine and
+    grow into a real bank once churn makes patterns frequent - the
+    empty bank's padding row and 1-wide key space force the recompile
+    path rather than an in-place extension."""
+    sb = StreamingBank.from_db(random_db(1, n_seq=2), minsup=MINSUP,
+                               window=W, max_len=MAX_LEN)
+    assert sb.bank.n_patterns == 0 and sb.frequent() == {}
+    sb.observe(random_db(7, n_seq=6))
+    got = sb.refresh()
+    assert got == _oracle(sb.window_seqs) and got
+    assert sb.stats["full_refreshes"] == 1  # recompile, not extend
+
+
+def test_window_smaller_than_batch():
+    """A batch larger than the window slides straight through: only the
+    trailing ``window`` sequences remain, supports exact."""
+    sb = _mk(11, window=4)
+    batch = random_db(500, n_seq=10)
+    r = sb.observe(batch)
+    assert r.arrived == 10 and r.evicted == 10
+    assert sb.window_seqs == batch[-4:]
+    assert sb.refresh() == _oracle(batch[-4:])
+
+
+def test_tombstone_then_recover_inside_one_window():
+    """A pattern dropping below minsup is masked (not served, not
+    joined); when churn brings it back above minsup, the next refresh
+    recovers it with an exact recounted support and re-serves it."""
+    base = random_db(2, n_seq=W)
+    sb = StreamingBank.from_db(
+        base, minsup=MINSUP, window=W, max_len=MAX_LEN)
+    assert sb.frequent(), "need a non-trivial seed bank"
+    # flood the window with sequences that cannot contain any bank
+    # pattern: their only TR carries a label outside the bank's space
+    from repro.core.graphseq import TR, TRType, NO_VERTEX
+    killer = [((TR(TRType.VI, 0, NO_VERTEX, 90 + i),),)
+              for i in range(W - MINSUP + 1)]
+    sb.observe(killer)
+    assert not sb.frequent(), "every pattern must drop below minsup"
+    assert not sb.active.any()
+    # tombstoned rows answer False even for containing sequences
+    assert not sb.server.exact_rows(base[:2]).any()
+    # churn the original sequences back in: same window, recovered
+    sb.observe(base)
+    got = sb.refresh()
+    assert got == _oracle(sb.window_seqs)
+    assert got, "patterns must recover once their support returns"
+    assert sb.stats["recovered"] > 0
+    # recovered rows serve again, with recounted (exact) bitmaps
+    rows = sb.server.exact_rows(base[:2])
+    for j, s in enumerate(base[:2]):
+        for i in np.nonzero(sb.active)[0]:
+            assert rows[j, i] == contains(sb.bank.patterns[i], s)
+
+
+@pytest.mark.parametrize("layout", ["flat", "trie"])
+def test_trie_and_flat_streaming_parity(layout):
+    """Both layouts run the same maintenance; drive one stream through
+    each and require identical supports, tombstones, and frequent maps
+    at every step (the layouts' joins are bit-identical, so the
+    streaming layer on top must be too)."""
+    sb = _mk(17, layout)
+    ref = _mk(17, "flat")
+    for step in range(3):
+        batch = random_db(300 + step, n_seq=3)
+        sb.observe(batch)
+        ref.observe(batch)
+        assert np.array_equal(sb.support, ref.support)
+        assert np.array_equal(sb.active, ref.active)
+    assert sb.refresh() == ref.refresh()
+    assert np.array_equal(sb.support, ref.support)
+
+
+def test_refresh_every_autorefresh():
+    sb = _mk(5, refresh_every=2)
+    r1 = sb.observe(random_db(600, n_seq=2))
+    assert not r1.refreshed
+    r2 = sb.observe(random_db(601, n_seq=2))
+    assert r2.refreshed
+    assert sb.stats["refreshes"] == 1
+    assert sb.frequent() == _oracle(sb.window_seqs)
+
+
+def test_streaming_query_topk_uses_live_supports():
+    sb = _mk(7)
+    sb.observe(random_db(700, n_seq=3))
+    seqs = sb.window_seqs[:3]
+    for r, s in zip(sb.query(seqs, k=5), seqs):
+        for i in np.nonzero(sb.active)[0]:
+            assert r.contained[i] == contains(sb.bank.patterns[i], s)
+        sups = [sup for _, sup in r.topk]
+        assert sups == sorted(sups, reverse=True)
+        assert all(int(sb.support[i]) == sup for i, sup in r.topk)
+
+
+# ------------------------------------------------- incremental plumbing
+def test_extend_bank_and_trie_match_from_scratch():
+    """extend_bank on a prefix of the mined patterns followed by
+    extend_trie must reproduce compile_bank + build_trie over the whole
+    set, field for field (modulo the support-order invariant, which the
+    extension deliberately gives up)."""
+    db = random_db(23, n_seq=10)
+    mined = AcceleratedMiner(db).mine_rs(2, max_len=MAX_LEN).patterns
+    assert len(mined) >= 4
+    items = sorted(mined.items(),
+                   key=lambda ps: -ps[1])  # bank-order prefix
+    head = dict(items[: len(items) // 2])
+    tail = dict(items[len(items) // 2:])
+    bank_h = compile_bank(head)
+    bank_e = extend_bank(bank_h, tail)
+    full = compile_bank(mined)
+    assert set(bank_e.patterns) == set(full.patterns)
+    # per-pattern rows agree with the from-scratch compile
+    row_of = {p: i for i, p in enumerate(full.patterns)}
+    for i, p in enumerate(bank_e.patterns):
+        j = row_of[p]
+        L = int(full.n_steps[j])
+        assert int(bank_e.n_steps[i]) == L
+        assert np.array_equal(bank_e.steps[i, :L], full.steps[j, :L])
+        assert np.array_equal(bank_e.req[i], full.req[j])
+        assert int(bank_e.support[i]) == int(full.support[j])
+    trie_e = extend_trie(build_trie(bank_h), bank_e)
+    trie_f = build_trie(bank_e)
+    for f in ("node_step", "node_parent", "node_depth", "node_req",
+              "terminal_node", "node_pos"):
+        assert np.array_equal(getattr(trie_e, f), getattr(trie_f, f)), f
+    assert all(np.array_equal(a, b) for a, b in
+               zip(trie_e.levels, trie_f.levels))
+
+
+def test_extend_bank_label_overflow_raises():
+    db = random_db(23, n_seq=10)
+    bank = compile_bank(AcceleratedMiner(db).mine_rs(3, max_len=2))
+    big_label_db = random_db(24, n_seq=6, n_vl=9, n_el=9)
+    mined = AcceleratedMiner(big_label_db).mine_rs(2, max_len=2).patterns
+    assert any(
+        tr.label + 2 > bank.n_label_keys
+        for p in mined for s in p for tr in s
+    ), "fixture must include an out-of-key-space label"
+    with pytest.raises(BankCapacityError):
+        extend_bank(bank, mined)
+
+
+def test_masked_node_req_prunes_masked_subtrees_only():
+    db = random_db(29, n_seq=10)
+    bank = compile_bank(AcceleratedMiner(db).mine_rs(2, max_len=MAX_LEN))
+    trie = build_trie(bank)
+    all_on = np.ones(bank.n_patterns, bool)
+    assert np.array_equal(masked_node_req(trie, all_on), trie.node_req)
+    # masking everything kills every node; masking one pattern keeps
+    # every other terminal reachable (node_req still satisfiable along
+    # their root paths)
+    none_on = masked_node_req(trie, ~all_on)
+    assert (none_on == np.iinfo(np.int32).max).all()
+    mask = all_on.copy()
+    mask[0] = False
+    nr = masked_node_req(trie, mask)
+    for row in range(1, bank.n_patterns):
+        n = int(trie.terminal_node[row])
+        while n >= 0:
+            assert (nr[n] <= bank.req[row]).all()
+            n = int(trie.node_parent[n])
+
+
+def test_masked_server_rows_match_unmasked_on_active():
+    """Masking is prescreen-only: active rows keep bit-identical
+    answers, masked rows answer False - both layouts."""
+    db = random_db(31, n_seq=10)
+    bank = compile_bank(AcceleratedMiner(db).mine_rs(2, max_len=MAX_LEN))
+    queries = random_db(32, n_seq=6)
+    rng_mask = np.arange(bank.n_patterns) % 3 != 0
+    for layout in ("flat", "trie"):
+        srv = PatternServer(bank, bank_layout=layout)
+        ref = srv.exact_rows(queries)
+        srv.set_row_mask(rng_mask)
+        got = srv.exact_rows(queries)
+        assert np.array_equal(got[:, rng_mask], ref[:, rng_mask])
+        assert not got[:, ~rng_mask].any()
+        srv.set_row_mask(None)
+        assert np.array_equal(srv.exact_rows(queries), ref)
+
+
+def test_refresh_frontier_equals_full_mine():
+    """Direct check of the incremental miner: with everything dirty it
+    must equal mine_rs; with a clean active map and no change it is a
+    pure retention."""
+    db = random_db(41, n_seq=10)
+    full = AcceleratedMiner(db).mine_rs(2, max_len=MAX_LEN).patterns
+    fr = refresh_frontier(db, 2, active={}, dirty=set(),
+                          max_len=MAX_LEN)
+    assert fr.patterns == dict(full)
+    assert fr.discovered == len(full)
+    # clean retention: supports known and untouched -> zero scans below
+    # the retained roots, same result
+    fr2 = refresh_frontier(db, 2, active=dict(full), dirty=set(),
+                           max_len=MAX_LEN)
+    assert fr2.patterns == dict(full)
+    assert fr2.scans == 1  # only the root scan
+    assert fr2.scans_skipped > 0
+    fr3 = refresh_frontier(db, 2, active=dict(full), dirty=set(),
+                           any_change=False, max_len=MAX_LEN)
+    assert fr3.patterns == dict(full) and fr3.scans == 0
+
+
+def test_slice_bank_rows_roundtrip():
+    db = random_db(43, n_seq=10)
+    bank = compile_bank(AcceleratedMiner(db).mine_rs(2, max_len=MAX_LEN))
+    rows = list(range(0, bank.n_patterns, 2))
+    sub = slice_bank(bank, rows)
+    assert sub.patterns == [bank.patterns[i] for i in rows]
+    assert sub.nv == bank.nv and sub.n_label_keys == bank.n_label_keys
+    empty = slice_bank(bank, [])
+    assert empty.n_patterns == 0 and empty.req.shape[1] == \
+        bank.req.shape[1]

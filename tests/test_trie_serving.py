@@ -65,6 +65,7 @@ def _trie_rows(db, trie: TrieBank, **kw):
 
 
 # ----------------------------------------------- join-level differential
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000), emax=st.integers(1, 6))
 def test_trie_join_bitwise_equals_flat_join(seed, emax):
@@ -83,6 +84,7 @@ def test_trie_join_bitwise_equals_flat_join(seed, emax):
         np.testing.assert_array_equal(fo, to)
 
 
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_trie_join_equals_oracle(seed):
@@ -118,6 +120,7 @@ def test_trie_join_forced_tmax_window_overflow_is_conservative():
 
 
 # -------------------------------------------- server-level differential
+@pytest.mark.slow
 @settings(max_examples=4, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_trie_server_equals_flat_server_and_oracle(seed):
@@ -321,6 +324,7 @@ print("SHARDED-TRIE-OK", int(c.sum()))
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_trie_serving_step_8dev():
     import os
     import subprocess
