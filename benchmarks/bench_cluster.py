@@ -1,0 +1,236 @@
+"""Cluster benchmark: multi-host routed serving vs the single-host
+``PatternServer``, and the sharded-window streaming protocol vs the
+single-host ``StreamingBank``, on the Table3 synthetic workload.
+
+Emits ``BENCH_cluster.json``: routed queries/sec per (bank layout,
+host count) with the single-host server as baseline, the per-drain
+cross-host batching stats, and sharded-window streamed updates/sec vs
+the single-host streaming bank.
+
+Exactness is asserted, not sampled - and this is the artifact's real
+gate: every routed containment row and top-k must be *bit-equal* to the
+single-host server on the same queries, and the sharded-window
+post-refresh frequent map must be bit-equal to the single-host
+``StreamingBank`` (itself property-tested == batch re-mine).  Any
+divergence raises before the artifact is written; the committed
+``divergences`` field is checked == 0 by scripts/check_bench.py.
+
+The hosts are in-process simulations sharing one CPU device, so
+multi-host qps measures *protocol overhead*, not parallel speedup -
+the point of the scaling table is that per-shard work shrinks with
+host count (each shard joins ~1/H of the bank) while the merged
+answers stay identical; real scaling needs one device per host (the
+subprocess test pins hosts to 8 virtual devices).
+
+``--smoke`` is the CI tier-4 gate: a tiny config, both layouts, >= 2
+hosts, hard-failing on any divergence, written atomically to
+``BENCH_cluster_smoke.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+try:
+    from .bench_streaming import atomic_write_json, machine_id
+except ImportError:  # pragma: no cover - run as a script
+    from bench_streaming import atomic_write_json, machine_id
+
+from repro.data.synthetic import Table3Params, generate_table3_db
+from repro.mining.driver import AcceleratedMiner
+from repro.serving.bank import compile_bank
+from repro.serving.cluster import ServingCluster, ShardedStreamingBank
+from repro.serving.server import PatternServer
+from repro.serving.streaming import StreamingBank
+
+HERE = os.path.dirname(__file__)
+OUT = os.path.join(HERE, "..", "BENCH_cluster.json")
+OUT_SMOKE = os.path.join(HERE, "..", "BENCH_cluster_smoke.json")
+
+
+def _spread(queries, n_hosts):
+    reqs = {h: [] for h in range(n_hosts)}
+    for i, s in enumerate(queries):
+        reqs[i % n_hosts].append(s)
+    return reqs
+
+
+def _routed_pass(cl, reqs):
+    """Route one full drain; returns results flattened back to query
+    order."""
+    got = cl.query_multi(reqs)
+    flat = {}
+    for h, rs in got.items():
+        for j, r in enumerate(rs):
+            flat[j * len(reqs) + h] = r
+    return [flat[i] for i in sorted(flat)]
+
+
+def bench_serving_cluster(db, queries, sigma, max_len, host_counts,
+                          layouts):
+    """Routed cluster vs single-host server; returns (payload section,
+    divergence count - always 0 or the bench has already raised)."""
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(sigma, max_len=max_len))
+    single_qps = {}
+    cluster_qps = {}
+    divergences = 0
+    stats = {}
+    for layout in layouts:
+        srv = PatternServer(bank, bank_layout=layout)
+        want = srv.query(queries)  # warm the batch shapes + reference
+        srv._cache.clear()
+        t0 = time.perf_counter()
+        srv.query(queries)
+        single_qps[layout] = len(queries) / (time.perf_counter() - t0)
+        cluster_qps[layout] = {}
+        for H in host_counts:
+            cl = ServingCluster(bank, H, bank_layout=layout)
+            reqs = _spread(queries, H)
+            _routed_pass(cl, reqs)  # warm every shard's jit buckets
+            cl.router.clear_caches()
+            t0 = time.perf_counter()
+            got = _routed_pass(cl, reqs)
+            dt = time.perf_counter() - t0
+            cluster_qps[layout][str(H)] = len(queries) / dt
+            for r, w in zip(got, want):
+                if not (np.array_equal(r.contained, w.contained)
+                        and r.topk == w.topk):
+                    divergences += 1
+            if divergences:
+                raise AssertionError(
+                    f"[{layout} H={H}] routed cluster diverged from the "
+                    f"single-host server on {divergences} queries - "
+                    "exactness contract broken"
+                )
+            stats[f"{layout}_H{H}"] = dict(cl.router.stats)
+    return {
+        "bank_patterns": bank.n_patterns,
+        "single_qps": single_qps,
+        "cluster_qps": cluster_qps,
+        "router_stats": stats,
+    }, divergences
+
+
+def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
+                         batch_size, refresh_every):
+    """Sharded-window protocol vs the single-host StreamingBank on one
+    arrival stream; hard-fails unless every post-refresh frequent map
+    is bit-equal."""
+    batches = [stream[i: i + batch_size]
+               for i in range(0, len(stream), batch_size)]
+
+    def run(make, observe, refresh):
+        sb = make()
+        t0 = time.perf_counter()
+        maps = []
+        for i, b in enumerate(batches):
+            observe(sb, b)
+            if (i + 1) % refresh_every == 0:
+                maps.append(refresh(sb))
+        maps.append(refresh(sb))
+        return time.perf_counter() - t0, maps, sb
+
+    def mk_single():
+        return StreamingBank.from_db(
+            db, minsup=sigma, window=window, max_len=max_len)
+
+    def mk_sharded():
+        return ShardedStreamingBank.from_db(
+            db, minsup=sigma, n_hosts=n_hosts, window=window,
+            max_len=max_len)
+
+    run(mk_single, StreamingBank.observe, StreamingBank.refresh)  # warm
+    t_single, maps_single, _ = run(
+        mk_single, StreamingBank.observe, StreamingBank.refresh)
+    run(mk_sharded, ShardedStreamingBank.observe,
+        ShardedStreamingBank.refresh)  # warm
+    t_sharded, maps_sharded, sh = run(
+        mk_sharded, ShardedStreamingBank.observe,
+        ShardedStreamingBank.refresh)
+    for i, (a, b) in enumerate(zip(maps_single, maps_sharded)):
+        if a != b:
+            raise AssertionError(
+                f"sharded-window frequent map diverged from the "
+                f"single-host streaming bank at refresh {i}: "
+                f"{len(a)} vs {len(b)} patterns"
+            )
+    n = len(stream)
+    return {
+        "stream_window": window,
+        "stream_hosts": n_hosts,
+        "n_stream_updates": n,
+        "single_stream_updates_per_sec": n / t_single,
+        "sharded_stream_updates_per_sec": n / t_sharded,
+        "stream_refresh_checks": len(maps_sharded),
+        "allreduces": sh.stats["allreduces"],
+        "dirty_subtrees": sh.stats["dirty_subtrees"],
+    }
+
+
+def main(csv=print, smoke: bool = False):
+    if smoke:
+        db_size, n_queries, max_len = 40, 48, 3
+        host_counts, out_path = (1, 2, 3), OUT_SMOKE
+        window, stream_n, batch_size, refresh_every = 24, 24, 8, 2
+    else:
+        db_size, n_queries, max_len = 120, 256, 4
+        host_counts, out_path = (1, 2, 4), OUT
+        window, stream_n, batch_size, refresh_every = 60, 60, 10, 3
+    params = Table3Params(db_size=db_size + window + stream_n, v_avg=5,
+                          n_interstates=3)
+    all_seqs = generate_table3_db(params, seed=0)
+    db = all_seqs[:db_size]
+    stream_db = all_seqs[db_size: db_size + window]
+    stream = all_seqs[db_size + window:]
+    sigma = max(2, db_size // 15)
+    qparams = Table3Params(db_size=n_queries, v_avg=5, n_interstates=3)
+    queries = generate_table3_db(qparams, seed=1)
+
+    serving, divergences = bench_serving_cluster(
+        db, queries, sigma, max_len, host_counts, ("flat", "trie"))
+    streaming = bench_sharded_stream(
+        stream_db, stream, max(2, window // 15), max_len, window,
+        2, batch_size, refresh_every)
+
+    payload = {
+        "machine": machine_id(),
+        "n_queries": n_queries,
+        "host_counts": list(host_counts),
+        "divergences": divergences,
+        **serving,
+        **streaming,
+    }
+    atomic_write_json(out_path, payload)
+    for layout in ("flat", "trie"):
+        base = serving["single_qps"][layout]
+        for H in host_counts:
+            qps = serving["cluster_qps"][layout][str(H)]
+            csv(f"cluster/{layout}_H{H},{1e6 / qps:.0f},"
+                f"qps={qps:.0f},x{qps / base:.2f}_vs_single")
+    csv(f"cluster/stream_sharded,"
+        f"{1e6 / streaming['sharded_stream_updates_per_sec']:.0f},"
+        f"ups={streaming['sharded_stream_updates_per_sec']:.0f}")
+    csv(f"cluster/stream_single,"
+        f"{1e6 / streaming['single_stream_updates_per_sec']:.0f},"
+        f"ups={streaming['single_stream_updates_per_sec']:.0f}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, >=2 hosts, hard-fail on any "
+                         "divergence from single-host results (the CI "
+                         "tier-4 gate)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    print(f"# cluster routed serving bit-equal to single-host "
+          f"({out['divergences']} divergences) across hosts "
+          f"{out['host_counts']}; sharded window "
+          f"{out['sharded_stream_updates_per_sec']:.0f} ups vs single "
+          f"{out['single_stream_updates_per_sec']:.0f} ups over "
+          f"{out['stream_hosts']} hosts")

@@ -74,6 +74,25 @@ SCHEMAS = {
         "remine_updates_per_sec": _NUM,
         "speedup_streaming": _NUM,
     },
+    "BENCH_cluster.json": {
+        "bank_patterns": int,
+        "n_queries": int,
+        "host_counts": list,
+        "divergences": int,
+        "single_qps": dict,
+        "cluster_qps": dict,
+        "stream_window": int,
+        "stream_hosts": int,
+        "single_stream_updates_per_sec": _NUM,
+        "sharded_stream_updates_per_sec": _NUM,
+    },
+    "BENCH_cluster_smoke.json": {
+        "bank_patterns": int,
+        "host_counts": list,
+        "divergences": int,
+        "cluster_qps": dict,
+        "sharded_stream_updates_per_sec": _NUM,
+    },
 }
 
 SMOKE_REGRESSION_FACTOR = 3.0
@@ -123,6 +142,21 @@ def check_invariants(name: str, payload: dict) -> None:
             raise GateError(
                 f"{name}: streamed maintenance speedup {sp:.2f} < 5.0 "
                 "over re-mine-per-window"
+            )
+    if name in ("BENCH_cluster.json", "BENCH_cluster_smoke.json"):
+        # the cluster's contract is exactness, not in-process speed:
+        # the bench raises before writing on any divergence, so a
+        # nonzero committed count means the artifact was hand-edited
+        # or the bench was bypassed
+        if payload["divergences"] != 0:
+            raise GateError(
+                f"{name}: {payload['divergences']} routed queries "
+                "diverged from the single-host server"
+            )
+        if max(payload["host_counts"], default=0) < 2:
+            raise GateError(
+                f"{name}: host_counts {payload['host_counts']} never "
+                "exercises a real multi-host split"
             )
 
 

@@ -19,13 +19,19 @@
 #           (both layouts) and hard-fails if the streamed supports
 #           differ from a batch re-mine of the same window at ANY
 #           refresh point - the incremental-maintenance exactness gate.
-#   gates   run with tier-2, but AFTER tier-3 so the freshly written
-#           smoke artifacts are the ones validated:
+#   tier-4  CI_TIER4=0 skips   cluster smoke: bench_cluster.py --smoke
+#           routes queries through the multi-host cluster (simulated
+#           hosts, both layouts, >= 2 hosts) and streams through the
+#           sharded-window protocol, hard-failing on ANY divergence
+#           from the single-host server / streaming bank - the
+#           multi-host exactness gate.
+#   gates   run with tier-2, but AFTER tiers 3-4 so the freshly
+#           written smoke artifacts are the ones validated:
 #           scripts/check_bench.py checks every BENCH_*.json schema,
-#           gates on the committed trie/flat median speedup (>= 1.0)
-#           and streaming speedup (>= 5x), and fails if smoke
-#           throughput dropped >3x below the committed same-machine
-#           baseline.
+#           gates on the committed trie/flat median speedup (>= 1.0),
+#           streaming speedup (>= 5x), and cluster divergences == 0,
+#           and fails if smoke throughput dropped >3x below the
+#           committed same-machine baseline.
 #
 # No timing assertions inside the smokes - perf numbers come from the
 # full benchmark runs; regressions are caught by check_bench.py against
@@ -52,6 +58,11 @@ fi
 if [[ "${CI_TIER3:-1}" != "0" ]]; then
     echo "[ci] tier-3: streaming smoke (streamed == batch re-mine)"
     python benchmarks/bench_streaming.py --smoke
+fi
+
+if [[ "${CI_TIER4:-1}" != "0" ]]; then
+    echo "[ci] tier-4: cluster smoke (routed == single-host, sharded window == streaming bank)"
+    python benchmarks/bench_cluster.py --smoke
 fi
 
 if [[ "${CI_TIER2:-1}" != "0" ]]; then

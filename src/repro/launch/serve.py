@@ -11,6 +11,17 @@ every R batches via the frontier re-mine.
 
     PYTHONPATH=src python -m repro.launch.serve --db-size 100 \
         --queries 200 --window 100 --refresh-every 4 --bank-layout trie
+
+``--hosts N`` (N > 1) stands the bank up as a multi-host cluster
+(serving.cluster): queries arrive round-robin across hosts and are
+routed through per-shard device batches; with ``--window`` the cluster
+runs the sharded-window streaming protocol instead (per-host ring
+slices, supports all-reduced at refresh).  ``--replicas R`` (streaming
+mode) adds R read replicas behind a single writer and serves the query
+sample from a replica after shipping the writer's deltas.
+
+    PYTHONPATH=src python -m repro.launch.serve --db-size 100 \
+        --queries 200 --hosts 4 --bank-layout trie
 """
 from __future__ import annotations
 
@@ -52,6 +63,13 @@ def main():
                          "every N observed batches")
     ap.add_argument("--stream-batch", type=int, default=25,
                     help="streaming mode: arrivals per observed batch")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="multi-host cluster: shard the bank across "
+                         "this many simulated hosts (with --window, "
+                         "run the sharded-window streaming protocol)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="streaming mode: read replicas behind the "
+                         "single writer (deltas shipped per refresh)")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -61,8 +79,12 @@ def main():
                           n_interstates=args.interstates)
     db = generate_table3_db(params, seed=args.seed)
     sigma = max(2, int(args.min_support_frac * len(db)))
+    if args.window is not None and args.hosts > 1:
+        return _sharded_stream_main(args, db, sigma)
     if args.window is not None:
         return _stream_main(args, db, sigma)
+    if args.hosts > 1:
+        return _cluster_main(args, db, sigma)
     print(f"[serve] mining |DB|={len(db)} sigma={sigma} "
           f"max_len={args.max_len}")
     miner = AcceleratedMiner(db)
@@ -107,6 +129,86 @@ def main():
           f"cache_hits={srv.stats['cache_hits']}")
 
 
+def _cluster_main(args, db, sigma):
+    """Multi-host serving demo: shard the mined bank across simulated
+    hosts, spread the query stream round-robin over arrival hosts, and
+    route it through shared per-shard device batches."""
+    from ..serving.cluster import ServingCluster
+
+    print(f"[serve] cluster: mining |DB|={len(db)} sigma={sigma} "
+          f"max_len={args.max_len}, {args.hosts} hosts")
+    miner = AcceleratedMiner(db)
+    res = miner.mine_rs(sigma, max_len=args.max_len)
+    bank = compile_bank(res, top=args.top_patterns)
+    cl = ServingCluster(
+        bank, args.hosts, bank_layout=args.bank_layout,
+        topk=args.topk, emax=args.emax, max_batch=args.max_batch,
+        use_kernel=args.use_kernel,
+    )
+    sizes = [len(h.rows) for h in cl.hosts]
+    print(f"[serve] bank: {bank.n_patterns} rFTSs sharded "
+          f"{sizes} across {args.hosts} hosts ({args.bank_layout})")
+    qparams = Table3Params(db_size=args.queries, v_avg=args.v_avg,
+                           n_interstates=args.interstates)
+    queries = generate_table3_db(qparams, seed=args.seed + 1)
+    reqs = {h: [] for h in range(args.hosts)}
+    for i, s in enumerate(queries):
+        reqs[i % args.hosts].append(s)
+    cl.query_multi(reqs)  # warm jit
+    cl.router.clear_caches()
+    t0 = time.time()
+    got = cl.query_multi(reqs)
+    dt = time.time() - t0
+    n_hits = sum(len(r.pattern_ids) for rs in got.values() for r in rs)
+    print(f"[serve] routed {len(queries)} queries in {dt:.3f}s "
+          f"({len(queries)/max(dt, 1e-9):.0f} qps), {n_hits} "
+          f"containments, stats={cl.router.stats}")
+    # replay from the *other* hosts: everything L2- or L1-served
+    reqs2 = {(h + 1) % args.hosts: v for h, v in reqs.items()}
+    t0 = time.time()
+    cl.query_multi(reqs2)
+    print(f"[serve] cross-host replay {time.time()-t0:.3f}s, "
+          f"l1={cl.router.stats['l1_hits']} "
+          f"l2={cl.router.stats['l2_hits']}")
+
+
+def _sharded_stream_main(args, db, sigma):
+    """Sharded-window streaming demo: per-host ring slices, routed
+    arrival joins, supports all-reduced at each refresh."""
+    from ..serving.cluster import ShardedStreamingBank
+
+    # ring slices must divide the window evenly; round up so a window
+    # smaller than the host count still yields one slot per host
+    window = max(1, -(-args.window // args.hosts)) * args.hosts
+    print(f"[serve] sharded window: |DB|={len(db)} sigma={sigma} "
+          f"window={window} over {args.hosts} hosts")
+    t0 = time.time()
+    sb = ShardedStreamingBank.from_db(
+        db, minsup=sigma, n_hosts=args.hosts, window=window,
+        max_len=args.max_len, bank_layout=args.bank_layout,
+        emax=args.emax, use_kernel=args.use_kernel,
+    )
+    print(f"[serve] seeded in {time.time()-t0:.2f}s: "
+          f"{sb.bank.n_patterns} rFTSs")
+    qparams = Table3Params(db_size=args.queries, v_avg=args.v_avg,
+                           n_interstates=args.interstates)
+    stream = generate_table3_db(qparams, seed=args.seed + 1)
+    t0 = time.time()
+    for i in range(0, len(stream), args.stream_batch):
+        sb.observe(stream[i: i + args.stream_batch])
+        if (i // args.stream_batch + 1) % args.refresh_every == 0:
+            sb.refresh()
+    freq = sb.refresh()
+    dt = time.time() - t0
+    print(f"[serve] streamed {len(stream)} arrivals in {dt:.3f}s "
+          f"({len(stream)/max(dt, 1e-9):.0f} updates/s), "
+          f"{len(freq)} frequent after final refresh; stats={sb.stats}")
+    top = sorted(freq.items(), key=lambda ps: -ps[1])[: args.topk]
+    print(f"[serve] top-{args.topk} by all-reduced window support:")
+    for p, sup in top:
+        print(f"    [{sup:3d}] {pattern_str(p)}")
+
+
 def _stream_main(args, db, sigma):
     """Streaming-mode demo: seed a window, observe the query stream,
     reconcile on a cadence, report support drift and frontier stats."""
@@ -118,6 +220,11 @@ def _stream_main(args, db, sigma):
         bank_layout=args.bank_layout, refresh_every=args.refresh_every,
         emax=args.emax, use_kernel=args.use_kernel,
     )
+    group = None
+    if args.replicas:
+        from ..serving.cluster import ReplicaGroup
+        group = ReplicaGroup(sb, args.replicas)
+        print(f"[serve] writer + {args.replicas} read replicas")
     print(f"[serve] seeded in {time.time()-t0:.2f}s: "
           f"{sb.bank.n_patterns} rFTSs, {len(sb.frequent())} frequent "
           f"over the {args.window}-seq window")
@@ -141,6 +248,15 @@ def _stream_main(args, db, sigma):
     print(f"[serve] top-{args.topk} by live window support:")
     for p, sup in top:
         print(f"    [{sup:3d}] {pattern_str(p)}")
+    if group is not None:
+        sample = stream[: min(len(stream), 8)]
+        print(f"[serve] replica lag before ship: "
+              f"{group.lag(0)} deltas")
+        group.sync()
+        got = group.query(sample, replica=0, k=args.topk)
+        n_hits = sum(len(r.pattern_ids) for r in got)
+        print(f"[serve] replica 0 serves {len(sample)} sample queries "
+              f"after ship: {n_hits} containments")
 
 
 if __name__ == "__main__":

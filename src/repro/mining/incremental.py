@@ -33,15 +33,67 @@ The result is exactly what a full re-mine of the window would produce
 (property-tested in tests/test_streaming.py); a periodic full re-mine
 (``StreamingBank.refresh(full=True)``) stays available as the
 belt-and-braces exactness escape hatch and as bank compaction.
+
+The per-child dirtiness index
+-----------------------------
+The dirtiness signal is *slot-granular* on the streaming side: the
+ring's per-sequence containment bitmaps double as the dirtiness record,
+and a per-slot ``fresh`` flag marks arrivals since the last reconcile.
+``dirty`` is then "patterns contained in a fresh arrival *still in the
+window*" - overwriting a ring slot drops its dirt, so under heavy churn
+an arrival that transits the window entirely between two reconciles
+dirties nothing, and ``refresh_frontier`` prunes subtrees an
+accumulated dirty-bit scheme would have rescanned.
+
+The same index coarsens to the per-child (depth-1 subtree) level:
+``depth1_root(p)`` maps any pattern to its depth-1 reverse-search
+ancestor, and ``subtree_dirty_rows`` widens a set of dirty depth-1
+roots back to a per-row mask.  The coarse form is what the multi-host
+sharded-window protocol (serving.cluster) all-reduces at ``refresh()``:
+O(#depth-1 subtrees) flags instead of a bank-width bit row per host.
+It is sound because containment is anti-monotone along the ``parent()``
+chain - an arrival touching any pattern touches its depth-1 root, so a
+clean root certifies a clean subtree - and refresh_frontier stays exact
+under any dirty *superset* (it only ever scans more).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
 
 from ..core.graphseq import Pattern, TRSeq, pattern_length
 from ..core.reverse_search import parent
 from .driver import AcceleratedMiner
+
+
+@functools.lru_cache(maxsize=1 << 16)
+def depth1_root(p: Pattern) -> Pattern:
+    """The depth-1 reverse-search ancestor of ``p`` (``p`` itself when
+    it is depth 1).  Containment is anti-monotone along the ``parent()``
+    chain, so any sequence containing ``p`` contains its depth-1 root -
+    the soundness of subtree-level dirtiness.  Memoized process-wide:
+    ``parent()`` re-canonicalizes at every chain link, and the sharded
+    refresh asks for every bank pattern's root on each reconcile (the
+    recursion memoizes every ancestor along the way)."""
+    up = parent(p)
+    if up is None or not up:
+        return p
+    return depth1_root(up)
+
+
+def subtree_dirty_rows(
+    patterns: Sequence[Pattern], dirty_roots: Set[Pattern]
+) -> np.ndarray:
+    """Widen a set of dirty depth-1 subtree roots to a per-bank-row
+    bool mask (True = the row's subtree was touched).  The coarse,
+    all-reducible form of the dirtiness index - see the module
+    docstring."""
+    return np.asarray(
+        [depth1_root(p) in dirty_roots for p in patterns], bool
+    )
 
 
 @dataclasses.dataclass
@@ -62,6 +114,10 @@ class FrontierResult:
     scans_skipped: int = 0    # clean frequent subtree roots pruned
     retained: int = 0         # patterns kept from maintained supports
     discovered: int = 0       # patterns found by scanning (new or dirty)
+    # per-child accounting: of the root's frequent children, how many
+    # whole depth-1 subtrees were pruned clean vs descended dirty
+    depth1_clean: int = 0
+    depth1_dirty: int = 0
 
 
 def _ancestor_chains(
@@ -153,6 +209,11 @@ def refresh_frontier(
             pattern, embs, min_support, rs=True, want_embs=want_embs
         ):
             res.patterns[child] = len(gids)
+            if pattern == root:
+                if is_clean(child):
+                    res.depth1_clean += 1
+                else:
+                    res.depth1_dirty += 1
             if is_clean(child):
                 # clean subtree: no window change touched child, so no
                 # descendant's support changed - retain the known

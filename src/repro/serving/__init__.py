@@ -58,6 +58,25 @@ Module map:
 * ``sharded.py`` - shard-by-pattern (flat) / shard-by-subtree (trie)
                    serving steps for device meshes (zero-collective
                    shard_map).
+* ``router.py``  - the cluster query plane: bank placement across hosts
+                   (intact depth-1 trie subtrees / flat pattern ranges)
+                   and ``ClusterRouter`` - queries arriving on any host
+                   are deduped by canonical fingerprint, resolved
+                   through the two-level cache (host-local L1,
+                   fingerprint-owner L2), and the misses batched into
+                   shared pow-2 device batches per shard; merged
+                   answers are bit-equal to a single-host server.
+* ``cluster.py`` - the multi-host topologies over router.py:
+                   ``ServingCluster`` (static sharded bank),
+                   ``ShardedStreamingBank`` (the sharded-window
+                   protocol: per-host ring slices + partial supports,
+                   all-reduced with a depth-1-subtree dirtiness index
+                   at ``refresh()``), and ``ReplicaGroup`` (single
+                   writer shipping ``extend_bank``/``extend_trie``
+                   deltas to read replicas).  Hosts are an abstraction
+                   (in-process simulated hosts, optionally device-
+                   pinned), so every protocol is property-tested
+                   bit-equal to its single-host counterpart.
 """
 from .bank import (  # noqa: F401
     BankCapacityError,
@@ -78,6 +97,18 @@ from .batch import (  # noqa: F401
     prescreen_counts,
     trie_contains,
     trie_level_advance,
+)
+from .cluster import (  # noqa: F401
+    BankReplica,
+    ClusterHost,
+    ReplicaGroup,
+    ServingCluster,
+    ShardedStreamingBank,
+)
+from .router import (  # noqa: F401
+    BankPlacement,
+    ClusterRouter,
+    plan_placement,
 )
 from .server import PatternServer, QueryResult  # noqa: F401
 from .sharded import (  # noqa: F401

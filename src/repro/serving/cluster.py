@@ -1,0 +1,707 @@
+"""Multi-host serving cluster: sharded bank, routed queries, and the
+sharded-window streaming protocol.
+
+GTRACE-RS decomposes the pattern space into independent reverse-search
+subtrees, so the mined bank shards with *zero cross-shard joins* -
+``sharded.py`` exploits that on a single-host device mesh; this module
+lifts it to a cluster of hosts.  Three topologies:
+
+* ``ServingCluster`` - a static bank split across hosts
+  (``router.plan_placement``: depth-1 trie subtrees stay intact per
+  host; flat banks split by pattern range).  Queries arrive on any
+  host; ``ClusterRouter`` drains them together, resolves the two-level
+  cache (host-local L1, fingerprint-owner L2 - both keyed by the
+  renaming-invariant ``sequence_fingerprint``), batches the misses into
+  shared pow-2 device batches per shard, and merges per-shard rows into
+  global bank order.  Routed answers (containment bits, top-k, resolved
+  overflow) are bit-equal to a single-host ``PatternServer``.
+
+* ``ShardedStreamingBank`` - the sharded-window protocol.  Each host
+  owns a *slice of the ring buffer* (arrival ``i`` lands on host ``i %
+  n_hosts``, so the union of slices is always the window's most recent
+  ``window`` sequences) plus its bank shard.  An arrival is joined once
+  against every bank shard *on the shard's owner* (the routed
+  containment batch), and the merged row is stored on the arrival's
+  ring owner, which maintains *partial* supports - increments on
+  arrival, decrements from the stored bitmap on eviction, no re-join.
+  ``refresh()`` is the only synchronisation point: partial supports are
+  **all-reduced** (summed across ring slices - exact because the slices
+  partition the window, the Campagna-Pagh stream decomposition), the
+  per-child dirtiness index is all-reduced at depth-1-subtree
+  granularity (O(#subtrees) flags per host instead of a bank-width bit
+  row; sound because dirt is anti-monotone up the parent chain), and
+  the incremental frontier re-mine + tombstone cut run against exact
+  global supports.  Between refreshes nothing is masked, so per-host
+  partial supports stay exact for every active row; post-refresh the
+  frequent map is bit-equal to a batch re-mine of the window (and hence
+  to the single-host ``StreamingBank`` on the same arrivals).
+
+* ``ReplicaGroup`` - single-writer / read-replica mode.  One writer
+  runs the ordinary ``StreamingBank`` (observe / tombstone / refresh);
+  replicas serve the masked bank and apply the writer's shipped deltas
+  (``StreamingBank.delta_sink``): support updates, tombstone masks, and
+  - after an incremental refresh - ``extend_bank``/``extend_trie``
+  appends instead of a recompile.  Until a replica syncs it keeps
+  serving its previous masked bank, so reads never block on a writer
+  refresh.
+
+Choosing between the streaming topologies: **read replicas** scale
+*query* throughput (every replica serves the whole bank; arrivals still
+funnel through the one writer) and replicas lag by the unshipped
+deltas.  The **sharded window** scales *arrival* throughput too (the
+per-arrival join fans out across shards, ring upkeep is per-host) and
+serves exact containment at every moment, but support freshness for
+tombstoning is per-refresh, and every query touches all shards.  Use
+replicas for read-heavy/low-churn traffic, the sharded window when the
+arrival stream itself is the load.
+
+Hosts are an abstraction: ``ClusterHost.call`` is the host boundary.
+The in-process ``ClusterHost`` (optionally pinned to one jax device -
+the subprocess smoke test runs 8 virtual CPU devices, one per host)
+just calls; a ``jax.distributed``-style process group implements the
+same interface with RPCs, following the subprocess pattern in
+tests/test_distributed.py.  Everything above the boundary is therefore
+property-testable on CPU: after any routed batch or sharded refresh,
+results and the frequent map must be bit-equal to the single-host
+``PatternServer``/``StreamingBank`` on the same inputs
+(tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+import jax
+
+from ..core.graphseq import Pattern, TRSeq
+from ..mining.driver import AcceleratedMiner
+from ..mining.incremental import depth1_root, refresh_frontier, \
+    subtree_dirty_rows
+from .bank import BankCapacityError, PatternBank, compile_bank, \
+    extend_bank, slice_bank
+from .router import BankPlacement, ClusterRouter, plan_placement
+from .server import PatternServer, QueryResult, score_topk
+from .streaming import StreamingBank
+from .trie import TrieBank, build_trie, extend_trie
+
+
+@dataclasses.dataclass
+class ClusterHost:
+    """One simulated host: its bank shard server, owned global rows,
+    and the two cache levels.  ``call`` is the host boundary - every
+    cross-host access in this module goes through it."""
+
+    hid: int
+    rows: np.ndarray               # owned global bank rows
+    server: PatternServer          # over slice_bank(bank, rows)
+    l1: "OrderedDict[str, np.ndarray]"
+    l2: "OrderedDict[str, np.ndarray]"
+    l1_size: int
+    l2_size: int
+    device: Optional[object] = None  # jax device pin (None = default)
+
+    def call(self, fn, *args, **kw):
+        if self.device is None:
+            return fn(*args, **kw)
+        with jax.default_device(self.device):
+            return fn(*args, **kw)
+
+
+def _make_hosts(
+    bank: PatternBank,
+    placement: BankPlacement,
+    *,
+    bank_layout: str,
+    l1_size: int,
+    l2_size: int,
+    devices: Optional[Sequence] = None,
+    server_kw: Optional[dict] = None,
+) -> List[ClusterHost]:
+    hosts = []
+    for hid, rows in enumerate(placement.rows):
+        shard = slice_bank(bank, rows)
+        srv = PatternServer(shard, bank_layout=bank_layout,
+                            **(server_kw or {}))
+        hosts.append(ClusterHost(
+            hid=hid, rows=rows, server=srv,
+            l1=OrderedDict(), l2=OrderedDict(),
+            l1_size=l1_size, l2_size=l2_size,
+            device=None if devices is None else
+            devices[hid % len(devices)],
+        ))
+    return hosts
+
+
+class ServingCluster:
+    """A static pattern bank served by ``n_hosts`` hosts - see the
+    module docstring for the placement/routing/caching protocol."""
+
+    def __init__(
+        self,
+        bank: PatternBank,
+        n_hosts: int,
+        *,
+        bank_layout: str = "flat",
+        trie: Optional[TrieBank] = None,
+        topk: int = 10,
+        l1_size: int = 4096,
+        l2_size: int = 8192,
+        devices: Optional[Sequence] = None,
+        **server_kw,
+    ):
+        self.bank = bank
+        self.n_hosts = n_hosts
+        self.bank_layout = bank_layout
+        self._mk = dict(l1_size=l1_size, l2_size=l2_size,
+                        devices=devices, server_kw=server_kw)
+        self.placement = plan_placement(
+            bank, n_hosts, layout=bank_layout, trie=trie
+        )
+        self.hosts = _make_hosts(bank, self.placement,
+                                 bank_layout=bank_layout, **self._mk)
+        self.router = ClusterRouter(
+            self.hosts, n_patterns=bank.n_patterns,
+            support=bank.support[: bank.n_patterns].astype(np.int64),
+            topk=topk,
+        )
+
+    # ------------------------------------------------------------ serving
+    def query(
+        self, seqs: Sequence[TRSeq], host: int = 0,
+        k: Optional[int] = None,
+    ) -> List[QueryResult]:
+        """Queries arriving on one host."""
+        return self.router.route({host: list(seqs)}, k=k)[host]
+
+    def query_multi(
+        self, requests: Mapping[int, Sequence[TRSeq]],
+        k: Optional[int] = None,
+    ) -> Dict[int, List[QueryResult]]:
+        """One drain of queries that arrived on different hosts -
+        misses share per-shard device batches."""
+        return self.router.route(requests, k=k)
+
+    def exact_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
+        """Cache-bypassing merged containment rows (global bank
+        order)."""
+        return self.router.joined_rows(seqs)
+
+    # ------------------------------------------------------------ masking
+    def set_row_mask(self, active: Optional[np.ndarray]) -> None:
+        """Install a global tombstone mask: each shard server masks its
+        slice of ``active``; the caches drop (cached rows predate the
+        mask)."""
+        for h in self.hosts:
+            if not len(h.rows):
+                continue
+            h.call(h.server.set_row_mask,
+                   None if active is None else active[h.rows])
+        self.router.clear_caches()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        """Router counters plus the summed shard-server counters."""
+        out = dict(self.router.stats)
+        for h in self.hosts:
+            for key, val in h.server.stats.items():
+                out[f"shards_{key}"] = out.get(f"shards_{key}", 0) + val
+        return out
+
+
+# --------------------------------------------------------------- streaming
+@dataclasses.dataclass
+class RingSlice:
+    """Host-local sliding-window state: this host's slice of the ring
+    (arrivals ``i`` with ``i % n_hosts == hid``), its per-sequence
+    containment bitmaps, freshness flags (the slot-granular dirtiness
+    index - see serving.streaming), and *partial* supports (column sums
+    of the local bitmaps; the all-reduce at refresh sums them into
+    exact global supports)."""
+
+    bits: np.ndarray              # [w_local, P] bool
+    seqs: List[Optional[TRSeq]]
+    gidx: np.ndarray              # [w_local] int64 global arrival id, -1 empty
+    fresh: np.ndarray             # [w_local] bool, written since reconcile
+    psum: np.ndarray              # [P] int64 partial supports
+
+    @classmethod
+    def empty(cls, w_local: int, n_patterns: int) -> "RingSlice":
+        return cls(
+            bits=np.zeros((w_local, n_patterns), bool),
+            seqs=[None] * w_local,
+            gidx=np.full(w_local, -1, np.int64),
+            fresh=np.zeros(w_local, bool),
+            psum=np.zeros(n_patterns, np.int64),
+        )
+
+    def grow(self, n_patterns: int) -> None:
+        pad = n_patterns - self.bits.shape[1]
+        self.bits = np.pad(self.bits, ((0, 0), (0, pad)))
+        self.psum = np.concatenate(
+            [self.psum, np.zeros(pad, np.int64)])
+
+    def reset_rows(self, n_patterns: int) -> None:
+        """Drop all bitmaps/supports (full refresh recounts them); the
+        stored sequences and arrival ids stay - the window itself is
+        unchanged."""
+        self.bits = np.zeros((self.bits.shape[0], n_patterns), bool)
+        self.psum = np.zeros(n_patterns, np.int64)
+
+
+class ShardedStreamingBank:
+    """``StreamingBank`` under the sharded-window protocol (module
+    docstring): ring slices + partial supports per host, one support
+    all-reduce and one depth-1-subtree dirtiness all-reduce per
+    ``refresh()``.  Tombstoning is *refresh-grained* (between refreshes
+    nothing is masked, so partial supports stay exact for every active
+    row); after any refresh the frequent map is bit-equal to a batch
+    re-mine of the window."""
+
+    def __init__(
+        self,
+        bank: PatternBank,
+        *,
+        n_hosts: int,
+        window: int,
+        minsup: int,
+        bank_layout: str = "flat",
+        max_len: Optional[int] = None,
+        tombstones: bool = True,
+        miner_kw: Optional[dict] = None,
+        devices: Optional[Sequence] = None,
+        **server_kw,
+    ):
+        assert window > 0 and minsup > 0 and n_hosts > 0
+        assert window % n_hosts == 0, \
+            "window must divide evenly across ring slices"
+        assert bank.n_rows == max(bank.n_patterns, 1), \
+            "streaming requires an unpadded bank"
+        self.window = window
+        self.minsup = minsup
+        self.n_hosts = n_hosts
+        self.bank_layout = bank_layout
+        self.max_len = max_len
+        self.tombstones = tombstones
+        self.miner_kw = dict(miner_kw or {})
+        self.server_kw = dict(server_kw)
+        self.devices = devices
+        self.bank = bank
+        self._w_local = window // n_hosts
+        P = bank.n_patterns
+        self.support = np.zeros(P, np.int64)  # last all-reduced view
+        self.active = np.ones(P, bool)
+        self.ring = [RingSlice.empty(self._w_local, P)
+                     for _ in range(n_hosts)]
+        self._t = 0  # global arrival counter
+        self._any_change = False
+        self.cluster = self._make_cluster()
+        self.stats: Dict[str, int] = {
+            "arrivals": 0, "evictions": 0, "observe_batches": 0,
+            "tombstoned": 0, "recovered": 0, "added": 0,
+            "refreshes": 0, "full_refreshes": 0,
+            "allreduces": 0, "dirty_subtrees": 0,
+            "frontier_scans": 0, "frontier_scans_skipped": 0,
+            "frontier_retained": 0,
+        }
+
+    # ------------------------------------------------------------ wiring
+    def _make_cluster(self) -> ServingCluster:
+        return ServingCluster(
+            self.bank, self.n_hosts, bank_layout=self.bank_layout,
+            devices=self.devices, **self.server_kw,
+        )
+
+    def _rebuild_serving(self) -> None:
+        """New bank -> new placement, shard servers, and router; the
+        ring slices (window state) survive untouched."""
+        self.cluster = self._make_cluster()
+        self.cluster.router.support = self.support
+
+    def _apply_mask(self) -> None:
+        if not self.tombstones:
+            return
+        mask = None if self.active.all() else self.active
+        self.cluster.set_row_mask(mask)
+
+    @classmethod
+    def from_db(
+        cls,
+        db: Sequence[TRSeq],
+        *,
+        minsup: int,
+        n_hosts: int,
+        window: Optional[int] = None,
+        max_len: Optional[int] = None,
+        miner_kw: Optional[dict] = None,
+        **kw,
+    ) -> "ShardedStreamingBank":
+        """Mine ``db`` into a bank and stream it in as the seed window.
+        The seed arrivals stay *fresh* (unlike ``StreamingBank.from_db``
+        there is no tombstone cut at seed time - tombstoning is
+        refresh-grained here), so the first refresh treats them as
+        dirty; exactness is unaffected."""
+        miner = AcceleratedMiner(db, **(miner_kw or {}))
+        result = miner.mine_rs(minsup, max_len=max_len)
+        bank = compile_bank(result)
+        w = window or max(len(db), 1)
+        sb = cls(bank, n_hosts=n_hosts, window=w, minsup=minsup,
+                 max_len=max_len, miner_kw=miner_kw, **kw)
+        sb.observe(db)
+        return sb
+
+    # ----------------------------------------------------------- streams
+    @property
+    def n_patterns(self) -> int:
+        return self.bank.n_patterns
+
+    def _window_slots(self) -> List[Tuple[int, int, int]]:
+        """Occupied (global arrival id, host, slot) triples in window
+        (oldest-first) order - the strict round-robin placement makes
+        the union of slices exactly the last ``window`` arrivals."""
+        items = []
+        for hid, r in enumerate(self.ring):
+            for slot in range(self._w_local):
+                if r.gidx[slot] >= 0:
+                    items.append((int(r.gidx[slot]), hid, slot))
+        items.sort()
+        return items
+
+    @property
+    def window_seqs(self) -> List[TRSeq]:
+        return [self.ring[h].seqs[s] for _, h, s in self._window_slots()]
+
+    def _frequent_from(self, sup: np.ndarray) -> Dict[Pattern, int]:
+        out = {}
+        for i in np.nonzero(self.active & (sup >= self.minsup))[0]:
+            out[self.bank.patterns[i]] = int(sup[i])
+        return out
+
+    def frequent(self) -> Dict[Pattern, int]:
+        """Active frequent patterns at freshly all-reduced supports
+        (between refreshes supports are only all-reduced on demand;
+        the refresh paths score from their already-reduced view
+        instead of paying a second collective)."""
+        return self._frequent_from(self._allreduce_support())
+
+    # ----------------------------------------------------------- observe
+    def observe(self, batch: Sequence[TRSeq]):
+        """Slide ``batch`` into the sharded window: one routed
+        containment batch (each shard owner joins its slice), then each
+        arrival's merged row lands on its ring owner, which updates its
+        partial supports locally - evictions decrement from the stored
+        bitmap, no re-join, no cross-host traffic."""
+        batch = list(batch)
+        if not batch:
+            return
+        rows = self.cluster.exact_rows(batch)
+        evicted = 0
+        for seq, row in zip(batch, rows):
+            hid = self._t % self.n_hosts
+            slot = (self._t // self.n_hosts) % self._w_local
+            r = self.ring[hid]
+            if r.gidx[slot] >= 0:
+                r.psum -= r.bits[slot]
+                evicted += 1
+            r.seqs[slot] = seq
+            r.bits[slot] = row
+            r.gidx[slot] = self._t
+            r.fresh[slot] = True
+            r.psum += row
+            self._t += 1
+        self._any_change = True
+        self.stats["arrivals"] += len(batch)
+        self.stats["evictions"] += evicted
+        self.stats["observe_batches"] += 1
+
+    # ----------------------------------------------------------- refresh
+    def _allreduce_support(self) -> np.ndarray:
+        self.stats["allreduces"] += 1
+        out = np.zeros(self.bank.n_patterns, np.int64)
+        for r in self.ring:
+            out += r.psum
+        return out
+
+    def _allreduce_dirty_subtrees(self) -> Set[Pattern]:
+        """The per-child dirtiness all-reduce: each host reduces its
+        fresh slots' bitmaps to the depth-1 subtree roots they touched
+        (O(#subtrees) flags), the union is the global dirty-subtree
+        set.  Coarser than per-pattern dirt but a sound superset -
+        refresh_frontier only ever scans more."""
+        pats = self.bank.patterns
+        roots: Set[Pattern] = set()
+        for r in self.ring:
+            if not r.fresh.any():
+                continue
+            local = r.bits[r.fresh].any(axis=0)
+            roots |= {depth1_root(pats[i])
+                      for i in np.nonzero(local)[0]}
+        return roots
+
+    def refresh(self, full: bool = False) -> Dict[Pattern, int]:
+        """The protocol's synchronisation point: all-reduce partial
+        supports and the dirty-subtree flags, frontier-re-mine against
+        the exact global view, extend/recompile the bank, cut
+        tombstones, and broadcast the new masks/placement to every
+        host.  Returns the exact frequent map (== batch re-mine)."""
+        self.support = self._allreduce_support()
+        self.cluster.router.support = self.support
+        win = self._window_slots()
+        seqs = [self.ring[h].seqs[s] for _, h, s in win]
+        if full:
+            return self._refresh_full(seqs, win)
+        if not self._any_change:
+            return self._frequent_from(self.support)
+        active_rows = self.active if self.tombstones else \
+            np.ones_like(self.active)
+        active_map = {
+            self.bank.patterns[i]: int(self.support[i])
+            for i in np.nonzero(active_rows)[0]
+        }
+        droots = self._allreduce_dirty_subtrees()
+        self.stats["dirty_subtrees"] += len(droots)
+        dirty_mask = subtree_dirty_rows(self.bank.patterns, droots)
+        dirty_set = {
+            self.bank.patterns[i]
+            for i in np.nonzero(dirty_mask & active_rows)[0]
+        }
+        fr = refresh_frontier(
+            seqs, self.minsup, active=active_map, dirty=dirty_set,
+            any_change=True, max_len=self.max_len, **self.miner_kw,
+        )
+        self.stats["refreshes"] += 1
+        self.stats["frontier_scans"] += fr.scans
+        self.stats["frontier_scans_skipped"] += fr.scans_skipped
+        self.stats["frontier_retained"] += fr.retained
+        return self._reconcile(seqs, win, fr.patterns, fr.gids)
+
+    def _reconcile(self, seqs, win, mined, gids) -> Dict[Pattern, int]:
+        known = {p: i for i, p in enumerate(self.bank.patterns)}
+        new = {p: s for p, s in mined.items() if p not in known}
+        if new and not self.bank.n_patterns:
+            return self._refresh_full(seqs, win, mined=mined)
+        if new:
+            try:
+                bank2 = extend_bank(self.bank, new)
+            except BankCapacityError:
+                return self._refresh_full(seqs, win, mined=mined)
+            grow = bank2.n_patterns - self.bank.n_patterns
+            self.support = np.concatenate(
+                [self.support, np.zeros(grow, np.int64)])
+            self.active = np.concatenate(
+                [self.active, np.zeros(grow, bool)])
+            for r in self.ring:
+                r.grow(bank2.n_patterns)
+            self.bank = bank2
+            known = {p: i for i, p in enumerate(bank2.patterns)}
+            self.stats["added"] += grow
+            # new rows re-plan the placement; ring state is global-row
+            # indexed, so only the serving plane rebuilds
+            self._rebuild_serving()
+        mined_rows = np.zeros(self.bank.n_patterns, bool)
+        for p in mined:
+            mined_rows[known[p]] = True
+        recount = np.nonzero(mined_rows & ~self.active)[0]
+        if len(recount):
+            # recovered/new rows: backfill window bitmaps from the
+            # miner's exact containing-gid sets, scattered back to each
+            # ring owner; partial supports recompute locally
+            cols = np.zeros((len(seqs), len(recount)), bool)
+            for j, rr in enumerate(recount):
+                cols[sorted(gids[self.bank.patterns[rr]]), j] = True
+            for g, (_, hid, slot) in enumerate(win):
+                self.ring[hid].bits[slot, recount] = cols[g]
+            for r in self.ring:
+                r.psum[recount] = r.bits[:, recount].sum(0)
+            self.support[recount] = cols.sum(0)
+            self.stats["recovered"] += len(recount) - len(new)
+        for p, s in mined.items():
+            assert int(self.support[known[p]]) == s, (
+                "support drift on", p, int(self.support[known[p]]), s)
+        self.active = mined_rows if self.tombstones else \
+            np.ones(self.bank.n_patterns, bool)
+        self._apply_mask()
+        self.cluster.router.support = self.support
+        self.cluster.router.clear_caches()
+        for r in self.ring:
+            r.fresh[:] = False
+        self._any_change = False
+        return self._frequent_from(self.support)
+
+    def _refresh_full(self, seqs, win, mined=None) -> Dict[Pattern, int]:
+        """Re-mine + recompile + recount everything (escape hatch /
+        tombstone compaction), then recount every ring slice through
+        the fresh unmasked shard servers."""
+        self.stats["full_refreshes"] += 1
+        if mined is None:
+            if seqs:
+                miner = AcceleratedMiner(seqs, **self.miner_kw)
+                mined = miner.mine_rs(
+                    self.minsup, max_len=self.max_len).patterns
+            else:
+                mined = {}
+        self.bank = compile_bank(mined)
+        P = self.bank.n_patterns
+        self.support = np.zeros(P, np.int64)
+        self.active = np.ones(P, bool)
+        for r in self.ring:
+            r.reset_rows(P)
+            r.fresh[:] = False
+        self._rebuild_serving()
+        if seqs and P:
+            rows = self.cluster.exact_rows(seqs)
+            for g, (_, hid, slot) in enumerate(win):
+                self.ring[hid].bits[slot] = rows[g]
+            for r in self.ring:
+                r.psum = r.bits.sum(0).astype(np.int64)
+            self.support = rows.sum(0).astype(np.int64)
+            self.cluster.router.support = self.support
+        assert np.array_equal(
+            self.support, self.bank.support[:P].astype(np.int64)
+        ), "full-refresh recount disagrees with mined supports"
+        self._any_change = False
+        return self._frequent_from(self.support)
+
+    # ----------------------------------------------------------- serving
+    def query(
+        self, seqs: Sequence[TRSeq], host: int = 0, k: int = 10,
+    ) -> List[QueryResult]:
+        """Routed containment over the active bank with top-k scored by
+        live supports (all-reduced on demand)."""
+        self.support = self._allreduce_support()
+        self.cluster.router.support = self.support
+        return self.cluster.query(seqs, host=host, k=k)
+
+
+# ---------------------------------------------------------------- replicas
+class BankReplica:
+    """A read replica: serves the writer's (masked) bank and applies
+    shipped deltas - ``extend_bank``/``extend_trie`` appends for
+    incremental refreshes, a recompile only when the writer itself
+    recompiled.  Queries rank top-k by the replica's last-applied live
+    supports (compile-time bank order goes stale as supports drift)."""
+
+    def __init__(
+        self,
+        bank: PatternBank,
+        *,
+        bank_layout: str = "flat",
+        trie: Optional[TrieBank] = None,
+        support: Optional[np.ndarray] = None,
+        active: Optional[np.ndarray] = None,
+        **server_kw,
+    ):
+        self.bank_layout = bank_layout
+        self.server_kw = dict(server_kw)
+        self._install(bank, trie)
+        self.support = (
+            bank.support[: bank.n_patterns].astype(np.int64)
+            if support is None else np.asarray(support, np.int64).copy()
+        )
+        if active is not None and not np.asarray(active).all():
+            self.server.set_row_mask(np.asarray(active, bool).copy())
+        self.applied = 0  # deltas applied so far
+
+    def _install(self, bank: PatternBank,
+                 trie: Optional[TrieBank] = None) -> None:
+        self.bank = bank
+        self.trie = None
+        if self.bank_layout == "trie":
+            self.trie = trie if trie is not None else build_trie(bank)
+        self.server = PatternServer(
+            bank, bank_layout=self.bank_layout, trie=self.trie,
+            **self.server_kw,
+        )
+
+    def apply(self, delta: Tuple) -> None:
+        """Apply one writer delta (see serving.streaming's delta
+        kinds)."""
+        kind = delta[0]
+        if kind == "support":
+            self.support = np.asarray(delta[1], np.int64)
+        elif kind == "mask":
+            _, active, support = delta
+            self.server.set_row_mask(
+                None if active.all() else active)
+            self.support = np.asarray(support, np.int64)
+        elif kind == "extend":
+            _, new, active, support = delta
+            if new:
+                bank2 = extend_bank(self.bank, new)
+                trie2 = (extend_trie(self.trie, bank2)
+                         if self.trie is not None else None)
+                self._install(bank2, trie2)
+            self.server.set_row_mask(
+                None if active.all() else active)
+            self.support = np.asarray(support, np.int64)
+        elif kind == "recompile":
+            _, mined, support = delta
+            self._install(compile_bank(mined))
+            self.support = np.asarray(support, np.int64)
+        else:  # pragma: no cover - future delta kinds
+            raise ValueError(f"unknown delta kind {kind!r}")
+        self.applied += 1
+
+    def query(self, seqs: Sequence[TRSeq], k: int = 10
+              ) -> List[QueryResult]:
+        results = self.server.query(seqs, k=0)
+        return [
+            dataclasses.replace(
+                r, topk=score_topk(r.contained, self.support, k))
+            for r in results
+        ]
+
+
+class ReplicaGroup:
+    """Single-writer / read-replica topology: the writer is an ordinary
+    ``StreamingBank``; every delta it emits is queued per replica and
+    applied on ``sync()`` - the explicit "ship" step, so a replica
+    keeps serving its previous masked bank while the writer refreshes
+    (reads never block on the writer)."""
+
+    def __init__(self, writer: StreamingBank, n_replicas: int,
+                 **server_kw):
+        assert n_replicas >= 1
+        self.writer = writer
+        self.pending: List[List[Tuple]] = [[] for _ in range(n_replicas)]
+        writer.delta_sink = self._broadcast
+        self.replicas = [
+            BankReplica(
+                writer.bank, bank_layout=writer.bank_layout,
+                trie=writer.trie,
+                support=writer.support,
+                active=writer.active if writer.tombstones else None,
+                **server_kw,
+            )
+            for _ in range(n_replicas)
+        ]
+
+    def _broadcast(self, delta: Tuple) -> None:
+        for q in self.pending:
+            # "support" deltas are full-state: a lagging replica only
+            # needs the latest one, so consecutive ones coalesce and
+            # the queue stays bounded by the structural-delta rate
+            if (delta[0] == "support" and q
+                    and q[-1][0] == "support"):
+                q[-1] = delta
+            else:
+                q.append(delta)
+
+    def lag(self, rid: int) -> int:
+        """Deltas shipped by the writer but not yet applied here."""
+        return len(self.pending[rid])
+
+    def sync(self, rid: Optional[int] = None) -> None:
+        """Ship (apply) all pending deltas to one replica, or all."""
+        rids = range(len(self.replicas)) if rid is None else [rid]
+        for i in rids:
+            for delta in self.pending[i]:
+                self.replicas[i].apply(delta)
+            self.pending[i].clear()
+
+    def query(self, seqs: Sequence[TRSeq], replica: int = 0,
+              k: int = 10) -> List[QueryResult]:
+        """Serve from a replica at whatever state it has applied."""
+        return self.replicas[replica].query(seqs, k=k)

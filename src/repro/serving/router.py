@@ -1,0 +1,221 @@
+"""Cross-host request batching and result merging for the serving
+cluster.
+
+The reverse-search decomposition that makes mining parallel also makes
+the mined bank *shardable with zero cross-shard joins*: containment of
+sequence ``b`` in pattern ``p`` touches only ``b`` and ``p``, so a bank
+split across hosts answers any query as the disjoint union of per-shard
+answers.  This module is the query plane over such a split:
+
+* ``plan_placement`` - which host owns which bank rows.  Trie banks
+  place by depth-1 subtree (``TrieBank.shard_rows``: a subtree is never
+  torn across hosts, so every host joins intact sub-tries and keeps the
+  shared-prefix savings); flat banks place by contiguous pattern range.
+* ``ClusterRouter.route`` - takes the queries that arrived on *all*
+  hosts in one drain, dedups them by canonical fingerprint, resolves
+  the two-level cache (host-local L1, then the fingerprint owner's L2),
+  and joins every remaining miss in one batch per shard - each shard
+  owner runs its own ``PatternServer.exact_rows`` (pow-2 device
+  batches) over the union of misses, so requests that arrived on
+  different hosts share device batches.  Per-shard rows scatter back
+  into global bank order and the global top-k is scored over the merged
+  row, so routed answers are bit-equal to a single-host
+  ``PatternServer`` over the unsharded bank.
+
+Two-level cache: L1 is per-host (an arrival host answers replays of its
+own traffic without any cross-host hop); L2 entries live on the
+fingerprint's *owner* host (``hash(fp) % n_hosts``), so a sequence
+first served on host A is a single-hop cache hit when it later arrives
+on host B.  Both are keyed by the renaming-invariant
+``sequence_fingerprint``, so vertex-renamed replays hit either level.
+
+Hosts are duck-typed (see ``serving.cluster.ClusterHost``): the router
+needs ``rows`` (owned global bank rows), ``server`` (a shard
+``PatternServer``), ``l1``/``l2`` ordered dicts with ``l1_size``/
+``l2_size`` bounds, and ``call(fn, *args)`` - the host-boundary hook
+(in-process simulated hosts just call; a ``jax.distributed``-style
+process group would RPC and device-put behind the same interface).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..core.graphseq import TRSeq
+from .bank import PatternBank, sequence_fingerprint
+from .server import QueryResult, score_topk
+from .trie import TrieBank, build_trie
+
+
+@dataclasses.dataclass
+class BankPlacement:
+    """Which global bank rows each shard owns.  ``rows[s]`` is sorted,
+    and the row sets partition ``range(n_patterns)`` (shards may be
+    empty - fewer depth-1 subtrees than hosts)."""
+
+    rows: List[np.ndarray]
+    layout: str
+    n_patterns: int
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.rows)
+
+
+def plan_placement(
+    bank: PatternBank,
+    n_hosts: int,
+    *,
+    layout: str = "flat",
+    trie: Optional[TrieBank] = None,
+) -> BankPlacement:
+    """Place bank rows onto ``n_hosts`` shards: by depth-1 trie subtree
+    for the trie layout (subtrees stay intact per host), by contiguous
+    pattern range for flat."""
+    assert n_hosts >= 1
+    if layout == "trie":
+        if trie is None:
+            trie = build_trie(bank)
+        rows = [np.asarray(r, np.int64) for r in trie.shard_rows(n_hosts)]
+    elif layout == "flat":
+        rows = [
+            np.asarray(r, np.int64)
+            for r in np.array_split(
+                np.arange(bank.n_patterns, dtype=np.int64), n_hosts
+            )
+        ]
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    covered = np.concatenate(rows) if rows else np.zeros(0, np.int64)
+    assert sorted(covered.tolist()) == list(range(bank.n_patterns))
+    return BankPlacement(rows=rows, layout=layout,
+                         n_patterns=bank.n_patterns)
+
+
+def _cache_put(cache: "Dict[str, np.ndarray]", size: int, fp: str,
+               row: np.ndarray) -> None:
+    cache[fp] = row
+    cache.move_to_end(fp)
+    while len(cache) > size:
+        cache.popitem(last=False)
+
+
+class ClusterRouter:
+    """Batches queries arriving on different hosts into shared per-shard
+    device batches and merges the per-shard rows (see the module
+    docstring for the protocol)."""
+
+    def __init__(
+        self,
+        hosts: Sequence,           # ClusterHost duck-types, shard order
+        *,
+        n_patterns: int,
+        support: np.ndarray,       # live scoring supports, global order
+        topk: int = 10,
+    ):
+        self.hosts = list(hosts)
+        self.n_patterns = n_patterns
+        self.support = support
+        self.topk = topk
+        self.stats: Dict[str, int] = {
+            "queries": 0, "l1_hits": 0, "l2_hits": 0, "misses": 0,
+            "shard_batches": 0,
+        }
+
+    # ------------------------------------------------------------- cache
+    def owner(self, fp: str) -> int:
+        """The L2 owner host of a fingerprint (stable hash of the hex
+        digest, so every host agrees without coordination)."""
+        return int(fp[:8], 16) % len(self.hosts)
+
+    def clear_caches(self) -> None:
+        for h in self.hosts:
+            h.l1.clear()
+            h.l2.clear()
+
+    # -------------------------------------------------------------- join
+    def joined_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
+        """Cache-bypassing merged containment rows [len(seqs),
+        n_patterns]: one ``exact_rows`` batch per non-empty shard, rows
+        scattered back into global bank order.  Zero collectives - the
+        shard outputs are disjoint column blocks."""
+        out = np.zeros((len(seqs), self.n_patterns), bool)
+        if not len(seqs):
+            return out
+        for h in self.hosts:
+            if not len(h.rows):
+                continue  # empty shard: no rows to answer
+            shard = h.call(h.server.exact_rows, seqs)
+            out[:, h.rows] = shard[:, : len(h.rows)]
+            self.stats["shard_batches"] += 1
+        return out
+
+    # ------------------------------------------------------------- route
+    def _score(self, row: np.ndarray, k: int) -> List[tuple]:
+        return score_topk(row, self.support, k)
+
+    def route(
+        self,
+        requests: Mapping[int, Sequence[TRSeq]],
+        k: Optional[int] = None,
+    ) -> Dict[int, List[QueryResult]]:
+        """Serve one drain of the cluster-wide request queue:
+        ``requests`` maps arrival host id -> its pending sequences.
+        Returns per-host results in request order, bit-equal to a
+        single-host ``PatternServer.query`` over the unsharded bank."""
+        k = self.topk if k is None else k
+        fps: Dict[int, List[str]] = {}
+        rows: Dict[str, Optional[np.ndarray]] = {}
+        cached: Dict[str, bool] = {}
+        arrival_hosts: Dict[str, set] = {}
+        miss_fps: List[str] = []
+        miss_seqs: List[TRSeq] = []
+        for hid, seqs in requests.items():
+            host = self.hosts[hid]
+            fps[hid] = hfps = [sequence_fingerprint(s) for s in seqs]
+            self.stats["queries"] += len(seqs)
+            for fp, s in zip(hfps, seqs):
+                arrival_hosts.setdefault(fp, set()).add(hid)
+                if fp in rows:
+                    continue
+                if fp in host.l1:
+                    host.l1.move_to_end(fp)
+                    rows[fp] = host.l1[fp]
+                    cached[fp] = True
+                    self.stats["l1_hits"] += 1
+                    continue
+                own = self.hosts[self.owner(fp)]
+                if fp in own.l2:
+                    own.l2.move_to_end(fp)
+                    rows[fp] = own.l2[fp]
+                    cached[fp] = True
+                    self.stats["l2_hits"] += 1
+                    continue
+                rows[fp] = None  # placeholder keeps first-seen order
+                cached[fp] = False
+                miss_fps.append(fp)
+                miss_seqs.append(s)
+        if miss_seqs:
+            self.stats["misses"] += len(miss_seqs)
+            got = self.joined_rows(miss_seqs)
+            for i, fp in enumerate(miss_fps):
+                rows[fp] = got[i]
+                own = self.hosts[self.owner(fp)]
+                _cache_put(own.l2, own.l2_size, fp, got[i])
+        # every resolved fingerprint lands in its arrival hosts' L1s
+        for fp, hids in arrival_hosts.items():
+            for hid in hids:
+                host = self.hosts[hid]
+                _cache_put(host.l1, host.l1_size, fp, rows[fp])
+        return {
+            hid: [
+                QueryResult(
+                    fingerprint=fp, contained=rows[fp],
+                    topk=self._score(rows[fp], k), cached=cached[fp],
+                )
+                for fp in fps[hid]
+            ]
+            for hid in requests
+        }

@@ -61,6 +61,22 @@ def _pow2(n: int) -> int:
     return b
 
 
+def score_topk(
+    contained: np.ndarray, support: np.ndarray, k: int
+) -> List[Tuple[int, int]]:
+    """Support-ranked top-k of one containment row under *live*
+    supports, ties broken by bank row id.  With the compile-time
+    supports this equals ``PatternServer._score``'s bank-order shortcut
+    (rows are ordered by (-support, canonical code)); the streaming /
+    cluster layers rank with it because their supports drift from the
+    compiled order.  Every layer shares this one implementation - the
+    routed==single-host and replica==writer top-k bit-equality
+    contracts depend on identical tie-breaking."""
+    ids = np.nonzero(contained)[0]
+    ranked = sorted(ids, key=lambda i: (-int(support[i]), int(i)))[:k]
+    return [(int(i), int(support[i])) for i in ranked]
+
+
 @dataclasses.dataclass
 class QueryResult:
     fingerprint: str
@@ -278,9 +294,12 @@ class PatternServer:
                            contained, ovf, seqs):
         """Resolve every ``ovf & ~contained`` cell in place - the only
         undecided ones (batch.py) - first through a wider device
-        frontier (uniform-length replay per program-length group), then
-        the per-cell host oracle.  Shared by both bank layouts: this is
-        the whole exactness contract."""
+        frontier (trie layout: re-seed only the failing subtrees and
+        replay the level-synchronous scan at ``emax_retry``, keeping
+        the shared-prefix savings on the retry path; flat layout:
+        uniform-length replay per program-length group), then the
+        per-cell host oracle.  Both layouts end exact: this is the
+        whole exactness contract."""
         if self._row_mask is not None:
             # tombstoned rows answer False, never escalate.  The flat
             # prescreen already excludes them, but a masked *terminal*
@@ -289,33 +308,120 @@ class PatternServer:
             contained[:, ~self._row_mask] = False
             ovf[:, ~self._row_mask] = False
         bank = self.bank
-        und_b, und_p = np.nonzero(ovf & ~contained)
-        if len(und_b) and self.emax_retry > self.emax:
-            und_g = self._row_group[und_p]
-            for gi, (rows, steps_g) in enumerate(self._groups):
-                sel = und_g == gi
-                if not sel.any():
-                    continue
-                ub, up = und_b[sel], und_p[sel]
-                m = len(ub)
-                mpad = _pow2(m)
-                bi = np.zeros(mpad, np.int32)
-                pi = np.zeros(mpad, np.int32)
-                bi[:m], pi[:m] = ub, self._row_pos[up]
-                c2, o2 = pair_contains_indexed(
-                    tokens, order, start, count, steps_g,
-                    jnp.asarray(bi), jnp.asarray(pi),
-                    nv=bank.nv, emax=self.emax_retry, tmax=tmax,
-                    use_kernel=self.use_kernel, block_g=self.block_g,
-                    uniform_length=True,
-                )
-                contained[ub, up] = np.asarray(c2)[:m]
-                ovf[ub, up] = np.asarray(o2)[:m]
-                self.stats["escalated_cells"] += m
-                self.stats["joined_steps"] += m * int(steps_g.shape[1])
+        if (ovf & ~contained).any() and self.emax_retry > self.emax:
+            if self.bank_layout == "trie":
+                self._escalate_trie(tokens, order, start, count, tmax,
+                                    contained, ovf)
+            else:
+                self._escalate_flat(tokens, order, start, count, tmax,
+                                    contained, ovf)
         for b, p in zip(*np.nonzero(ovf & ~contained)):
             contained[b, p] = contains(bank.patterns[p], seqs[b])
             self.stats["host_fallback_cells"] += 1
+
+    def _escalate_flat(self, tokens, order, start, count, tmax,
+                       contained, ovf):
+        """Widen undecided cells through a uniform-length replay of the
+        full step program, one device batch per program-length group."""
+        bank = self.bank
+        und_b, und_p = np.nonzero(ovf & ~contained)
+        und_g = self._row_group[und_p]
+        for gi, (rows, steps_g) in enumerate(self._groups):
+            sel = und_g == gi
+            if not sel.any():
+                continue
+            ub, up = und_b[sel], und_p[sel]
+            m = len(ub)
+            mpad = _pow2(m)
+            bi = np.zeros(mpad, np.int32)
+            pi = np.zeros(mpad, np.int32)
+            bi[:m], pi[:m] = ub, self._row_pos[up]
+            c2, o2 = pair_contains_indexed(
+                tokens, order, start, count, steps_g,
+                jnp.asarray(bi), jnp.asarray(pi),
+                nv=bank.nv, emax=self.emax_retry, tmax=tmax,
+                use_kernel=self.use_kernel, block_g=self.block_g,
+                uniform_length=True,
+            )
+            contained[ub, up] = np.asarray(c2)[:m]
+            ovf[ub, up] = np.asarray(o2)[:m]
+            self.stats["escalated_cells"] += m
+            self.stats["joined_steps"] += m * int(steps_g.shape[1])
+
+    def _escalate_trie(self, tokens, order, start, count, tmax,
+                       contained, ovf):
+        """Trie-native escalation: re-run the level-synchronous scan at
+        ``emax_retry`` over only the failing sub-trie - the union of
+        the undecided rows' root-to-terminal paths - so undecided
+        siblings pay for their shared prefix once on the retry path too
+        (the flat replay re-joins every full program separately).  No
+        prescreen here: every replayed cell already passed it on the
+        first pass, and a pruned path cannot host an undecided
+        terminal."""
+        t, bank = self.trie, self.bank
+        und_b, und_p = np.nonzero(ovf & ~contained)
+        B0 = contained.shape[0]
+        # cells to replay: union of the undecided rows' terminal paths
+        need = np.zeros((B0, max(t.n_nodes, 1)), bool)
+        for b, p in zip(und_b, und_p):
+            n = int(t.terminal_node[p])
+            while n >= 0:
+                need[b, n] = True
+                n = int(t.node_parent[n])
+        und_rows = np.unique(und_p)
+        term_depth = t.node_depth[t.terminal_node[und_rows]]  # 1-based
+        und_mask = np.zeros_like(contained)
+        und_mask[und_b, und_p] = True
+        F = bank.steps.shape[2]
+        prev = None
+        pos_prev = None
+        fetch = []
+        for d, lv in enumerate(self._tlevels):
+            b_idx, n_idx = np.nonzero(need[:, lv["nodes"]])
+            if not len(b_idx):
+                break  # paths end: nothing undecided deeper
+            n_cells = len(b_idx)
+            self.stats["joined_steps"] += n_cells
+            npad = _pow2(n_cells)
+            cells = np.zeros((npad, 2 + F), np.int32)
+            cells[:n_cells, 0] = b_idx
+            cells[:n_cells, 2:] = lv["steps"][n_idx]
+            kw = dict(emax=self.emax_retry, tmax=tmax,
+                      use_kernel=self.use_kernel, block_g=self.block_g,
+                      compact=True)
+            if d == 0:
+                out = trie_root_advance(
+                    tokens, order, start, count, jnp.asarray(cells),
+                    ni=len(self._tlevels), nv=bank.nv, **kw,
+                )
+            else:
+                par = pos_prev[b_idx, lv["parent_pos"][n_idx]]
+                assert (par >= 0).all(), "escalation path parent missing"
+                cells[:n_cells, 1] = par
+                out = trie_level_advance_gather(
+                    tokens, order, start, count, *prev,
+                    jnp.asarray(cells), **kw,
+                )
+            phi, psi, valid, acc, ovf_state, ovf_term = out
+            prev = (phi, psi, valid, ovf_state)
+            cell_pos = np.full((B0, len(lv["nodes"])), -1, np.int64)
+            cell_pos[b_idx, n_idx] = np.arange(n_cells)
+            pos_prev = cell_pos
+            rows_d = und_rows[term_depth == d + 1]
+            if len(rows_d):
+                sub = cell_pos[:, t.node_pos[t.terminal_node[rows_d]]]
+                fetch.append((rows_d, sub, acc, ovf_term, n_cells))
+        for rows, sub, acc, ovf_t, n in fetch:
+            acc_np = np.asarray(acc)[:n]
+            ovf_np = np.asarray(ovf_t)[:n]
+            # touch only the cells that were actually undecided: their
+            # neighbours in these rows are already exact
+            live = (sub >= 0) & und_mask[:, rows]
+            idx = np.clip(sub, 0, None)
+            contained[:, rows] = np.where(
+                live, acc_np[idx], contained[:, rows])
+            ovf[:, rows] = np.where(live, ovf_np[idx], ovf[:, rows])
+            self.stats["escalated_cells"] += int(live.sum())
 
     def _run_batch_trie(self, seqs: List[TRSeq]) -> np.ndarray:
         """Trie-layout batch: one frontier per (sequence, trie node),

@@ -43,20 +43,46 @@ update:
 With ``tombstones=False`` nothing is ever masked, so maintained
 supports stay exact for *every* bank pattern continuously (not just at
 refresh points) - the differential-testing mode.
+
+Dirtiness is tracked per ring *slot*, not per pattern: a ``fresh`` flag
+marks slots written since the last reconcile, and the dirty set handed
+to ``refresh_frontier`` is "patterns contained in a fresh arrival still
+in the window" (the stored bitmaps of the fresh slots).  Overwriting a
+slot drops its dirt, so an arrival that transits the window entirely
+between two reconciles dirties nothing - under heavy churn the frontier
+walk prunes subtrees an accumulated per-pattern dirty scheme would have
+rescanned (see mining.incremental's module docstring).
+
+Two production follow-ons ride on top:
+
+* ``compact_threshold`` - automatic tombstone compaction: when the
+  tombstoned-row fraction crosses the threshold, the next observe or
+  refresh escalates itself to ``refresh(full=True)`` (which re-mines and
+  compacts the dead rows away); ``stats["auto_compactions"]`` counts the
+  triggers.
+* ``delta_sink`` - the single-writer/read-replica hook (see
+  serving.cluster): when set, every state change a replica must mirror
+  is emitted as a delta tuple - ``("support", support)`` after each
+  observe, ``("mask", active, support)`` when tombstones change,
+  ``("extend", new_patterns, active, support)`` after an incremental
+  reconcile, ``("recompile", mined, support)`` after a full refresh -
+  so replicas apply ``extend_bank``/``extend_trie`` instead of
+  recompiling, and keep serving the previous masked bank until the
+  delta lands.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from ..core.graphseq import Pattern, TRSeq
 from ..mining.driver import AcceleratedMiner
-from ..mining.incremental import refresh_frontier
+from ..mining.incremental import depth1_root, refresh_frontier
 from .bank import BankCapacityError, PatternBank, compile_bank, \
     extend_bank
-from .server import PatternServer, QueryResult
+from .server import PatternServer, QueryResult, score_topk
 from .trie import TrieBank, build_trie, extend_trie
 
 
@@ -80,10 +106,12 @@ class StreamingBank:
         max_len: Optional[int] = None,
         tombstones: bool = True,
         refresh_every: int = 0,
+        compact_threshold: Optional[float] = None,
         miner_kw: Optional[dict] = None,
         **server_kw,
     ):
         assert window > 0 and minsup > 0
+        assert compact_threshold is None or 0 < compact_threshold <= 1
         # an empty compile_bank({}) legitimately carries one padding row
         assert bank.n_rows == max(bank.n_patterns, 1), \
             "streaming requires an unpadded bank"
@@ -93,6 +121,7 @@ class StreamingBank:
         self.bank_layout = bank_layout
         self.tombstones = tombstones
         self.refresh_every = refresh_every
+        self.compact_threshold = compact_threshold
         self.miner_kw = dict(miner_kw or {})
         self.server_kw = dict(server_kw)
         self.bank = bank
@@ -105,15 +134,21 @@ class StreamingBank:
         self._seqs: List[Optional[TRSeq]] = [None] * window
         self._head = 0   # next ring slot to write (oldest when full)
         self._count = 0
-        self._dirty = np.zeros(P, bool)
+        # per-slot dirtiness: True = written since the last reconcile.
+        # The slot's stored bitmap IS its dirt, so eviction self-cleans
+        self._fresh = np.zeros(window, bool)
         self._any_change = False
         self._batches_since_refresh = 0
+        # read-replica hook: every delta a replica must mirror is
+        # pushed here (see the module docstring for the tuple kinds)
+        self.delta_sink: Optional[Callable[[Tuple], None]] = None
         self.stats: Dict[str, int] = {
             "arrivals": 0, "evictions": 0, "observe_batches": 0,
             "tombstoned": 0, "recovered": 0, "added": 0,
-            "refreshes": 0, "full_refreshes": 0,
+            "refreshes": 0, "full_refreshes": 0, "auto_compactions": 0,
             "frontier_scans": 0, "frontier_scans_skipped": 0,
             "frontier_retained": 0,
+            "dirty_subtrees": 0, "clean_subtrees": 0,
         }
 
     # ------------------------------------------------------------ wiring
@@ -155,7 +190,7 @@ class StreamingBank:
         # a single unmasked observe counts every bank pattern exactly
         # over the final window, so the tombstone cut it applied *is*
         # the exact frequent set: reconciled without a refresh
-        sb._dirty[:] = False
+        sb._fresh[:] = False
         sb._any_change = False
         sb._batches_since_refresh = 0
         return sb
@@ -207,7 +242,9 @@ class StreamingBank:
             self._seqs[self._head] = seq
             self._bits[self._head] = row
             self.support += row
-            self._dirty |= row
+            # slot-granular dirt: the stored row is the dirt record,
+            # fresh marks it as arrived-since-reconcile
+            self._fresh[self._head] = True
             self._head = (self._head + 1) % self.window
             self._count = min(self._count + 1, self.window)
         self._any_change = True
@@ -218,17 +255,63 @@ class StreamingBank:
             if n_tomb:
                 self.active &= ~newly
                 self._apply_mask()
+                if self.delta_sink is not None:
+                    self._emit("mask", self.active.copy(),
+                               self.support.copy())
+        if self.delta_sink is not None:
+            self._emit("support", self.support.copy())
         self.stats["arrivals"] += len(batch)
         self.stats["evictions"] += evicted
         self.stats["observe_batches"] += 1
         self.stats["tombstoned"] += n_tomb
         self._batches_since_refresh += 1
         refreshed = False
-        if (self.refresh_every
+        if self._compact_due():
+            self.stats["auto_compactions"] += 1
+            self.refresh(full=True)
+            refreshed = True
+        elif (self.refresh_every
                 and self._batches_since_refresh >= self.refresh_every):
             self.refresh()
             refreshed = True
         return ObserveResult(len(batch), evicted, n_tomb, refreshed)
+
+    def _emit(self, kind: str, *payload) -> None:
+        if self.delta_sink is not None:
+            self.delta_sink((kind,) + payload)
+
+    def _compact_due(self) -> bool:
+        """Automatic tombstone compaction trigger: the tombstoned-row
+        fraction crossed ``compact_threshold`` (tombstoned rows cost
+        bank capacity and prescreen width until a full refresh compacts
+        them away)."""
+        if self.compact_threshold is None or not self.tombstones:
+            return False
+        P = self.bank.n_patterns
+        if not P:
+            return False
+        return (P - int(self.active.sum())) / P >= self.compact_threshold
+
+    # --------------------------------------------------------- dirtiness
+    def dirty_rows(self) -> np.ndarray:
+        """[n_patterns] bool: patterns contained in at least one fresh
+        (arrived since the last reconcile) sequence *still in the
+        window* - the slot-granular dirtiness index.  Eviction
+        self-cleans: a transited arrival's slot was overwritten, so its
+        dirt is gone."""
+        if not self._fresh.any():
+            return np.zeros(self.bank.n_patterns, bool)
+        return self._bits[self._fresh].any(axis=0)
+
+    def dirty_subtree_roots(self) -> Set[Pattern]:
+        """The depth-1 reverse-search roots touched since the last
+        reconcile - the coarse, cheaply-communicable form of the
+        dirtiness index (what the sharded-window protocol all-reduces;
+        see serving.cluster)."""
+        return {
+            depth1_root(self.bank.patterns[i])
+            for i in np.nonzero(self.dirty_rows())[0]
+        }
 
     # ----------------------------------------------------------- refresh
     def _ring_slots(self) -> List[int]:
@@ -270,7 +353,7 @@ class StreamingBank:
             np.ones_like(self.active)
         dirty_set = {
             self.bank.patterns[i]
-            for i in np.nonzero(self._dirty & maintained)[0]
+            for i in np.nonzero(self.dirty_rows() & maintained)[0]
         }
         fr = refresh_frontier(
             seqs, self.minsup, active=active_map, dirty=dirty_set,
@@ -280,7 +363,16 @@ class StreamingBank:
         self.stats["frontier_scans"] += fr.scans
         self.stats["frontier_scans_skipped"] += fr.scans_skipped
         self.stats["frontier_retained"] += fr.retained
-        return self._reconcile(seqs, fr.patterns, fr.gids)
+        self.stats["dirty_subtrees"] += fr.depth1_dirty
+        self.stats["clean_subtrees"] += fr.depth1_clean
+        out = self._reconcile(seqs, fr.patterns, fr.gids)
+        if self._compact_due():
+            # the incremental reconcile left too many tombstoned rows:
+            # escalate to the compacting full refresh, reusing the
+            # already-exact frequent map instead of re-mining
+            self.stats["auto_compactions"] += 1
+            out = self._refresh_full(seqs, mined=fr.patterns)
+        return out
 
     def _reconcile(
         self,
@@ -309,8 +401,7 @@ class StreamingBank:
                 [self.support, np.zeros(grow, np.int64)])
             self.active = np.concatenate(
                 [self.active, np.zeros(grow, bool)])
-            self._dirty = np.concatenate(
-                [self._dirty, np.zeros(grow, bool)])
+            # the dirtiness index is slot-granular, nothing to grow
             self._bits = np.pad(self._bits, ((0, 0), (0, grow)))
             if self.trie is not None:
                 self.trie = extend_trie(self.trie, bank2)
@@ -352,8 +443,11 @@ class StreamingBank:
             # (set_row_mask drops the row cache itself)
             self.server = self._make_server()
         self._apply_mask()
-        self._dirty[:] = False
+        self._fresh[:] = False
         self._any_change = False
+        if self.delta_sink is not None:
+            self._emit("extend", dict(new), self.active.copy(),
+                       self.support.copy())
         return self.frequent()
 
     def _refresh_full(
@@ -375,7 +469,7 @@ class StreamingBank:
         P = self.bank.n_patterns
         self.support = np.zeros(P, np.int64)
         self.active = np.ones(P, bool)
-        self._dirty = np.zeros(P, bool)
+        self._fresh[:] = False
         self._bits = np.zeros((self.window, P), bool)
         if seqs and P:
             rows = self.server.exact_rows(seqs)
@@ -388,6 +482,8 @@ class StreamingBank:
             self.support, self.bank.support[:P].astype(np.int64)
         ), "full-refresh recount disagrees with mined supports"
         self._any_change = False
+        if self.delta_sink is not None:
+            self._emit("recompile", dict(mined), self.support.copy())
         return self.frequent()
 
     # ----------------------------------------------------------- serving
@@ -399,13 +495,8 @@ class StreamingBank:
         compiled-time bank order goes stale as supports drift, so the
         server's order-based scoring shortcut does not apply here."""
         results = self.server.query(seqs, k=0)
-        out = []
-        for r in results:
-            ids = np.nonzero(r.contained)[0]
-            ranked = sorted(
-                ids, key=lambda i: (-int(self.support[i]), int(i))
-            )[:k]
-            out.append(dataclasses.replace(r, topk=[
-                (int(i), int(self.support[i])) for i in ranked
-            ]))
-        return out
+        return [
+            dataclasses.replace(
+                r, topk=score_topk(r.contained, self.support, k))
+            for r in results
+        ]

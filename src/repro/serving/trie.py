@@ -147,12 +147,16 @@ class TrieBank:
                           term_level=term_level, term_pos=term_pos)
 
     # ------------------------------------------------------------ shard
-    def shard(self, n_shards: int) -> List["TrieBank"]:
-        """Split by depth-1 subtree into ``n_shards`` tries whose
-        pattern sets partition the bank (greedy node-count balancing;
-        shards may be empty when the root has fewer children).  Each
-        shard keeps the global ``nv``/``n_label_keys`` so token keys and
-        psi widths stay consistent across the mesh."""
+    def shard_rows(self, n_shards: int) -> List[List[int]]:
+        """The bank-row assignment behind ``shard``: rows grouped by
+        depth-1 subtree, subtrees packed onto shards by greedy
+        node-count balancing (a subtree's weight is the join work it
+        seeds), rows sorted within each shard to keep bank
+        (support-desc) order.  Shards may be empty when the root has
+        fewer children than ``n_shards``.  The cluster layer
+        (serving.cluster) uses this as its bank placement - a subtree is
+        never split across hosts, so every host joins intact
+        sub-tries."""
         bank = self.bank
         # depth-1 ancestor of each pattern row
         anc = np.asarray(self.terminal_node[: bank.n_patterns])
@@ -174,12 +178,17 @@ class TrieBank:
             i = int(np.argmin(load))
             bins[i].extend(groups[a])
             load[i] += weight[a]
-        out = []
-        for rows in bins:
-            rows = sorted(rows)  # keep bank (support-desc) order
-            sub = slice_bank(bank, rows)
-            out.append(build_trie(sub))
-        return out
+        return [sorted(rows) for rows in bins]
+
+    def shard(self, n_shards: int) -> List["TrieBank"]:
+        """Split by depth-1 subtree into ``n_shards`` tries whose
+        pattern sets partition the bank (see ``shard_rows``).  Each
+        shard keeps the global ``nv``/``n_label_keys`` so token keys and
+        psi widths stay consistent across the mesh."""
+        return [
+            build_trie(slice_bank(self.bank, rows))
+            for rows in self.shard_rows(n_shards)
+        ]
 
     def _subtree_sizes(self) -> np.ndarray:
         sizes = np.ones(max(self.n_nodes, 1), np.int64)

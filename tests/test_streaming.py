@@ -151,6 +151,65 @@ def test_tombstone_then_recover_inside_one_window():
             assert rows[j, i] == contains(sb.bank.patterns[i], s)
 
 
+def test_auto_tombstone_compaction():
+    """Crossing the tombstoned-row threshold escalates the next observe
+    to a compacting full refresh automatically: dead rows leave the
+    bank, the counter records the trigger, exactness holds."""
+    base = random_db(2, n_seq=W)
+    sb = StreamingBank.from_db(
+        base, minsup=MINSUP, window=W, max_len=MAX_LEN,
+        compact_threshold=0.5)
+    assert sb.bank.n_patterns > 0
+    assert sb.stats["auto_compactions"] == 0
+    from repro.core.graphseq import TR, TRType, NO_VERTEX
+    killer = [((TR(TRType.VI, 0, NO_VERTEX, 90 + i),),)
+              for i in range(W - MINSUP + 1)]
+    sb.observe(killer)  # tombstones everything -> threshold crossed
+    assert sb.stats["auto_compactions"] >= 1
+    assert sb.stats["full_refreshes"] >= 1
+    # compacted: the bank is exactly the window's frequent set again
+    assert sb.frequent() == _oracle(sb.window_seqs)
+    assert sb.bank.n_patterns == len(sb.frequent())
+    assert sb.active.all()
+
+
+def test_no_compaction_below_threshold():
+    sb = _mk(2, compact_threshold=1.0)  # only an all-dead bank triggers
+    sb.observe(random_db(800, n_seq=2))
+    assert sb.stats["auto_compactions"] == 0
+    assert sb.refresh() == _oracle(sb.window_seqs)
+
+
+def test_transited_arrivals_leave_no_dirt():
+    """The dirtiness index is slot-granular, so an arrival that fully
+    transits the window between two reconciles dirties nothing - the
+    refresh after heavy churn prunes subtrees an accumulated dirty-bit
+    scheme would rescan."""
+    sb = _mk(2, tombstones=False)
+    assert sb.bank.n_patterns > 0
+    sb.observe(random_db(900, n_seq=2))
+    assert sb.dirty_rows().any(), "pattern-family arrivals must dirty"
+    from repro.core.graphseq import TR, TRType, NO_VERTEX
+    killer = [((TR(TRType.VI, 0, NO_VERTEX, 90 + i),),)
+              for i in range(W)]
+    sb.observe(killer)  # every earlier fresh slot is overwritten
+    assert not sb.dirty_rows().any(), "evicted dirt must self-clean"
+    assert sb.refresh() == _oracle(sb.window_seqs)
+
+
+def test_dirty_subtree_roots_cover_dirty_rows():
+    """The coarse per-child index is a sound superset: every dirty
+    row's depth-1 ancestor is reported dirty."""
+    from repro.mining.incremental import depth1_root, subtree_dirty_rows
+    sb = _mk(13, tombstones=False)
+    sb.observe(random_db(901, n_seq=3))
+    roots = sb.dirty_subtree_roots()
+    widened = subtree_dirty_rows(sb.bank.patterns, roots)
+    assert (widened | ~sb.dirty_rows()).all()
+    for i in np.nonzero(sb.dirty_rows())[0]:
+        assert depth1_root(sb.bank.patterns[i]) in roots
+
+
 @pytest.mark.parametrize("layout", ["flat", "trie"])
 def test_trie_and_flat_streaming_parity(layout):
     """Both layouts run the same maintenance; drive one stream through

@@ -174,6 +174,43 @@ def test_trie_server_escalation_is_exact():
         np.testing.assert_array_equal(r.contained, want)
 
 
+def test_trie_native_escalation_matches_flat_replay():
+    """The trie-native retry re-seeds only the failing subtrees at
+    ``emax_retry`` (keeping the shared-prefix savings) where the flat
+    server replays full programs - both must resolve the same cells to
+    the same exact answers."""
+    db = random_db(11, n_seq=10, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    flat = PatternServer(bank, emax=1, emax_retry=64, max_batch=16)
+    trie = PatternServer(bank, emax=1, emax_retry=64, max_batch=16,
+                         bank_layout="trie")
+    rf = flat.exact_rows(list(db))
+    rt = trie.exact_rows(list(db))
+    np.testing.assert_array_equal(rf, rt)
+    assert flat.stats["escalated_cells"] > 0
+    assert trie.stats["escalated_cells"] > 0
+    for s, row in zip(db, rt):
+        want = np.array([contains(p, s) for p in bank.patterns])
+        np.testing.assert_array_equal(row, want)
+
+
+def test_trie_escalation_respects_row_mask():
+    """Masked (tombstoned) rows never escalate and always answer False,
+    even when their cells overflow; active rows keep exact answers
+    through the trie-native retry."""
+    db = random_db(11, n_seq=10, n_steps=5, n_v=5)
+    bank = _mine_bank(db, rs=False, max_len=5)
+    mask = np.arange(bank.n_patterns) % 2 == 0
+    srv = PatternServer(bank, emax=1, emax_retry=64, max_batch=16,
+                        bank_layout="trie")
+    srv.set_row_mask(mask)
+    rows = srv.exact_rows(list(db))
+    assert not rows[:, ~mask].any()
+    for s, row in zip(db, rows):
+        for i in np.nonzero(mask)[0]:
+            assert row[i] == contains(bank.patterns[i], s)
+
+
 def test_trie_server_caches_and_empty_bank():
     db = random_db(5, n_seq=6, n_steps=4, n_v=4)
     bank = _mine_bank(db, rs=True)
