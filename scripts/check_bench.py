@@ -93,6 +93,19 @@ SCHEMAS = {
         "cluster_qps": dict,
         "sharded_stream_updates_per_sec": _NUM,
     },
+    "BENCH_mining.json": {
+        "configs": list,
+        "divergences": int,
+        "speedup_wavefront_median": _NUM,
+        "device_call_reduction_median": _NUM,
+        "patterns_per_sec_best": _NUM,
+    },
+    "BENCH_mining_smoke.json": {
+        "configs": list,
+        "divergences": int,
+        "speedup_wavefront_median": _NUM,
+        "device_call_reduction_median": _NUM,
+    },
 }
 
 SMOKE_REGRESSION_FACTOR = 3.0
@@ -143,6 +156,29 @@ def check_invariants(name: str, payload: dict) -> None:
                 f"{name}: streamed maintenance speedup {sp:.2f} < 5.0 "
                 "over re-mine-per-window"
             )
+    if name in ("BENCH_mining.json", "BENCH_mining_smoke.json"):
+        # mining is exactness-gated like the cluster: the bench raises
+        # before writing on any frequent-map mismatch between the
+        # wavefront, per-pattern and host miners
+        if payload["divergences"] != 0:
+            raise GateError(
+                f"{name}: {payload['divergences']} mining configs "
+                "diverged between the wavefront/per-pattern/host miners"
+            )
+        if name == "BENCH_mining.json":
+            med = payload["speedup_wavefront_median"]
+            if med < 3.0:
+                raise GateError(
+                    f"{name}: median wavefront speedup {med:.2f} < 3.0 "
+                    "over per-pattern dispatch - the frontier batching "
+                    "regressed"
+                )
+            calls = payload["device_call_reduction_median"]
+            if calls < 5.0:
+                raise GateError(
+                    f"{name}: median device-call reduction {calls:.1f} "
+                    "< 5.0 - the wavefront stopped packing patterns"
+                )
     if name in ("BENCH_cluster.json", "BENCH_cluster_smoke.json"):
         # the cluster's contract is exactness, not in-process speed:
         # the bench raises before writing on any divergence, so a

@@ -25,13 +25,19 @@
 #           sharded-window protocol, hard-failing on ANY divergence
 #           from the single-host server / streaming bank - the
 #           multi-host exactness gate.
-#   gates   run with tier-2, but AFTER tiers 3-4 so the freshly
+#   tier-5  CI_TIER5=0 skips   mining smoke: bench_mining.py --smoke
+#           runs the wavefront, per-pattern-dispatch and pure-host
+#           miners over the same DB and hard-fails on ANY frequent-map
+#           divergence - the wavefront exactness gate.  Off in the
+#           fast lane.
+#   gates   run with tier-2, but AFTER tiers 3-5 so the freshly
 #           written smoke artifacts are the ones validated:
 #           scripts/check_bench.py checks every BENCH_*.json schema,
 #           gates on the committed trie/flat median speedup (>= 1.0),
-#           streaming speedup (>= 5x), and cluster divergences == 0,
-#           and fails if smoke throughput dropped >3x below the
-#           committed same-machine baseline.
+#           streaming speedup (>= 5x), cluster divergences == 0, and
+#           mining wavefront speedup (median >= 3x, device calls cut
+#           >= 5x, divergences == 0), and fails if smoke throughput
+#           dropped >3x below the committed same-machine baseline.
 #
 # No timing assertions inside the smokes - perf numbers come from the
 # full benchmark runs; regressions are caught by check_bench.py against
@@ -63,6 +69,11 @@ fi
 if [[ "${CI_TIER4:-1}" != "0" ]]; then
     echo "[ci] tier-4: cluster smoke (routed == single-host, sharded window == streaming bank)"
     python benchmarks/bench_cluster.py --smoke
+fi
+
+if [[ "${CI_TIER5:-1}" != "0" ]]; then
+    echo "[ci] tier-5: mining smoke (wavefront == per-pattern == host)"
+    python benchmarks/bench_mining.py --smoke
 fi
 
 if [[ "${CI_TIER2:-1}" != "0" ]]; then

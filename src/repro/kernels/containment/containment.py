@@ -18,6 +18,17 @@ Tiling: grid (G/bG,); per grid step the kernel touches
   out         [bG, E, Tm]  int32
 Default bG=64 with E,Tm <= 32 keeps the working set well under 1 MB of
 VMEM.
+
+E and Tm are small statics well below the TPU tile (8 sublanes x 128
+lanes), so every block load/store would be relayout-padded by the
+hardware anyway; ``lane_pad`` makes the padding explicit up front - Tm
+(the lane dim of the output / token axis) to the 128-lane boundary, E
+(its sublane dim) to a multiple of 8 - with all-zero rows/tokens, which
+are inert by the same argument as the bG padding (token valid=0 /
+row_valid=0 -> no match bits).  It follows the existing backend
+auto-select: on exactly when the kernel compiles for real
+(interpret=False, i.e. on TPU), off in interpret mode where it only
+adds work - interpret-mode parity is tested by forcing it on.
 """
 from __future__ import annotations
 
@@ -27,6 +38,9 @@ from jax.experimental import pallas as pl
 
 from .. import default_interpret
 from .ref import contain_step_core
+
+LANE = 128
+SUBLANE = 8
 
 
 def _kernel(tok_ref, psi_ref, srow_ref, out_ref):
@@ -42,11 +56,28 @@ def contain_step_blocked(
     *,
     block_g: int = 64,
     interpret: bool | None = None,
+    lane_pad: bool | None = None,
 ):
     if interpret is None:
         interpret = default_interpret()
+    if lane_pad is None:
+        lane_pad = not interpret  # pad only when compiling for real
     G, Tm, _ = tok.shape
     _, E, NV = psi.shape
+    if lane_pad:
+        Tp = -(-Tm // LANE) * LANE
+        Ep = -(-E // SUBLANE) * SUBLANE
+        if Tp != Tm:  # zero tokens: valid=0 -> no match bits
+            tok = jnp.pad(tok, ((0, 0), (0, Tp - Tm), (0, 0)))
+        if Ep != E:  # zero rows: row_valid=0 -> no match bits
+            psi = jnp.pad(psi, ((0, 0), (0, Ep - E), (0, 0)))
+            srow = jnp.pad(srow, ((0, 0), (0, Ep - E), (0, 0)))
+        if Tp != Tm or Ep != E:
+            out = contain_step_blocked(
+                tok, psi, srow, block_g=block_g, interpret=interpret,
+                lane_pad=False,
+            )
+            return out[:, :E, :Tm]
     Gp = -(-G // block_g) * block_g
     if Gp != G:
         # zero padding gives token valid=0 / row_valid=0 -> no match bits

@@ -8,7 +8,9 @@ import jax
 from .containment import contain_step_blocked
 
 
-@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_g", "interpret", "lane_pad")
+)
 def contain_step_kernel(
     tok,        # [G, Tm, 6] int32 (per-cell token window)
     psi,        # [G, E, NV] int32
@@ -16,10 +18,14 @@ def contain_step_kernel(
     *,
     block_g: int = 64,
     interpret: bool | None = None,
+    lane_pad: bool | None = None,
 ):
     """Drop-in replacement for ``contain_step_core`` as used by
     repro.serving.batch (``interpret=None`` auto-selects: compiled on
-    TPU, interpreter elsewhere)."""
+    TPU, interpreter elsewhere; ``lane_pad=None`` follows the same
+    auto-select, padding the small E/Tm dims to the hardware tile only
+    when compiling)."""
     return contain_step_blocked(
         tok, psi, srow, block_g=block_g, interpret=interpret,
+        lane_pad=lane_pad,
     )

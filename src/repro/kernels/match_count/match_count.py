@@ -13,7 +13,16 @@ Tiling: grid (E/bE, T/bT); per grid step the kernel touches
   phi/psi     [bE, NI], [bE, NV]
   out         [bE, bT]     int32
 Defaults bE=64, bT=128 keep the working set < 1 MB of VMEM and the lane
-dimension a multiple of 128.
+dimension of the output a multiple of 128.
+
+The phi/psi blocks' *lane* (last) dims are the small NI/NV statics
+(typically 16/12), which a TPU would relayout to the 128-lane boundary
+on every block load; ``lane_pad`` pads them up front with the inert
+sentinels (PAD_PHI / PAD_PSI - both unmatched by construction, so the
+signatures are unchanged).  It follows the existing backend
+auto-select: on by default exactly when the kernel compiles for real
+(interpret=False, i.e. on TPU), off in interpret mode where padding
+only adds work - interpret-mode parity is tested by forcing it on.
 """
 from __future__ import annotations
 
@@ -21,8 +30,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...mining.encoding import PAD_PHI, PAD_PSI
 from .. import default_interpret
 from .ref import match_core
+
+LANE = 128
+
+
+def _lane_pad_to(n: int) -> int:
+    return -(-n // LANE) * LANE
 
 
 def _kernel(scal_ref, tok_ref, phi_ref, psi_ref, valid_ref, ex_ref,
@@ -55,11 +71,27 @@ def match_signatures_blocked(
     block_e: int = 64,
     block_t: int = 128,
     interpret: bool | None = None,
+    lane_pad: bool | None = None,
 ):
     if interpret is None:
         interpret = default_interpret()
+    if lane_pad is None:
+        lane_pad = not interpret  # pad only when compiling for real
     E, T, _ = tok_e.shape
     NI, NV, P = phi.shape[1], psi.shape[1], existing.shape[0]
+    if lane_pad:
+        # PAD_PHI / PAD_PSI columns are inert: PAD_PHI is never equal to
+        # or below a data itemset index, PAD_PSI never equals a data
+        # vertex (>= NO_VERTEX = -1), so padded lookups cannot match
+        NIp, NVp = _lane_pad_to(NI), _lane_pad_to(NV)
+        if NIp != NI:
+            phi = jnp.pad(phi, ((0, 0), (0, NIp - NI)),
+                          constant_values=PAD_PHI)
+            NI = NIp
+        if NVp != NV:
+            psi = jnp.pad(psi, ((0, 0), (0, NVp - NV)),
+                          constant_values=PAD_PSI)
+            NV = NVp
     Ep = -(-E // block_e) * block_e
     Tp = -(-T // block_t) * block_t
     if Ep != E or Tp != T:

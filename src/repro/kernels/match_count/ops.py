@@ -10,7 +10,8 @@ from .match_count import match_signatures_blocked
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_e", "block_t", "interpret")
+    jax.jit, static_argnames=("block_e", "block_t", "interpret",
+                              "lane_pad")
 )
 def match_signatures_kernel(
     tokens,      # [G, T, 6] int32
@@ -26,15 +27,19 @@ def match_signatures_kernel(
     block_e: int = 64,
     block_t: int = 128,
     interpret: bool | None = None,
+    lane_pad: bool | None = None,
 ):
     """Drop-in replacement for repro.mining.engine.match_signatures that
     runs the match predicate as a Pallas kernel (``interpret=None``
     auto-selects from the backend: compiled on TPU, interpreter
-    elsewhere - real TPU runs must not silently take the slow path)."""
+    elsewhere - real TPU runs must not silently take the slow path;
+    ``lane_pad=None`` follows the same auto-select, padding the small
+    NI/NV lane dims to the 128-lane boundary only when compiling)."""
     tok_e = tokens[gid]
     return match_signatures_blocked(
         tok_e, phi, psi, emb_valid, existing,
         jnp.asarray(nv, jnp.int32), jnp.asarray(n_pat, jnp.int32),
         jnp.asarray(mode, jnp.int32),
         block_e=block_e, block_t=block_t, interpret=interpret,
+        lane_pad=lane_pad,
     )

@@ -46,7 +46,23 @@ def _lookup(psi, u):
 def match_core(tok, phi, psi, emb_valid, existing, nv, n_pat, mode):
     """tok [E,T,6] int32 (pre-gathered per embedding), phi [E,NI],
     psi [E,NV], emb_valid [E], existing [P,5], scalars nv/n_pat/mode.
-    Returns sigs [E,T] int32 (-1 = no extension)."""
+    Returns sigs [E,T] int32 (-1 = no extension).
+
+    The wavefront miner packs rows of *different* patterns into one
+    scan, so ``nv``/``n_pat``/``mode`` may also be per-row ``[E]``
+    vectors and ``existing`` a per-row ``[E,P,5]`` table (pre-gathered
+    by pattern id); scalars and the shared ``[P,5]`` table remain the
+    single-pattern fast path (and the Pallas kernel's calling
+    convention)."""
+    nv = jnp.asarray(nv)
+    n_pat = jnp.asarray(n_pat)
+    mode = jnp.asarray(mode)
+    if nv.ndim == 1:
+        nv = nv[:, None]          # [E,1] broadcasts against [E,T]
+    if n_pat.ndim == 1:
+        n_pat = n_pat[:, None]
+    if mode.ndim == 1:
+        mode = mode[:, None]
     ty = tok[..., 0]
     u1 = tok[..., 1]
     u2 = tok[..., 2]
@@ -98,13 +114,19 @@ def match_core(tok, phi, psi, emb_valid, existing, nv, n_pat, mode):
     )
 
     # duplicate-TR-in-itemset rejection
-    ex = existing  # [P,5]
+    ex = existing  # [P,5] shared, or [E,P,5] per-row
+    if ex.ndim == 3:
+        def _exc(c):
+            return ex[:, None, :, c]      # [E,1,P]
+    else:
+        def _exc(c):
+            return ex[None, None, :, c]   # [1,1,P]
     dup = (
-        (ex[:, 0][None, None, :] == slot_idx[..., None])
-        & (ex[:, 1][None, None, :] == ty[..., None])
-        & (ex[:, 2][None, None, :] == pu1[..., None])
-        & (ex[:, 3][None, None, :] == pu2[..., None])
-        & (ex[:, 4][None, None, :] == lab[..., None])
+        (_exc(0) == slot_idx[..., None])
+        & (_exc(1) == ty[..., None])
+        & (_exc(2) == pu1[..., None])
+        & (_exc(3) == pu2[..., None])
+        & (_exc(4) == lab[..., None])
     ).any(-1) & in_any
 
     v = slot_kind

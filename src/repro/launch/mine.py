@@ -18,6 +18,11 @@ def main():
     ap.add_argument("--max-len", type=int, default=6)
     ap.add_argument("--algo", choices=["rs", "gtrace", "both"],
                     default="both")
+    ap.add_argument("--dispatch", choices=["wavefront", "pattern"],
+                    default="wavefront",
+                    help="wavefront = frontier-batched device scans "
+                         "(default); pattern = seed one-dispatch-per-"
+                         "pattern baseline")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -29,7 +34,7 @@ def main():
     sigma = max(2, int(args.min_support_frac * len(db)))
     print(f"[mine] |DB|={len(db)} sigma={sigma} max_len={args.max_len}")
 
-    miner = AcceleratedMiner(db)
+    miner = AcceleratedMiner(db, dispatch=args.dispatch)
     if args.algo in ("rs", "both"):
         t0 = time.time()
         rs = miner.mine_rs(sigma, max_len=args.max_len,
@@ -37,7 +42,8 @@ def main():
                            resume=args.resume)
         print(f"[mine] GTRACE-RS: {len(rs.patterns)} rFTSs "
               f"({rs.n_enumerated} nodes) in {time.time()-t0:.2f}s, "
-              f"device {miner.device_seconds:.2f}s/"
+              f"device {miner.device_seconds:.2f}s "
+              f"(launch {miner.dispatch_seconds:.2f}s)/"
               f"{miner.n_device_calls} calls")
     if args.algo in ("gtrace", "both"):
         t0 = time.time()

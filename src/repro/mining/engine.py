@@ -18,8 +18,16 @@ cannot extend the embedding under the current search phase:
 * mode 3 (GTRACE baseline)           - anything, tail slots only
 
 Supports are distinct-gid counts per signature; `aggregate_host` is the
-exact numpy finalize, `candidate_table_device` the fixed-size on-device
-variant used by the distributed step (see distributed.py).
+exact numpy finalize (vectorized: one sort + boundary split, no
+per-signature python), `candidate_table_device` the fixed-size
+on-device variant used by the distributed step (see distributed.py).
+
+``match_signatures_batch`` / ``aggregate_host_batch`` are the wavefront
+forms: rows of *different* patterns share one dispatch, carrying a
+per-row ``pattern_id`` that indexes stacked per-pattern tables on the
+way in and namespaces the signatures on the way out (the 64-bit
+``pattern_id << 32 | sig`` key) - see mining.driver's wavefront
+scheduler.
 """
 from __future__ import annotations
 
@@ -58,33 +66,96 @@ match_signatures = jax.jit(
 )
 
 
+def match_signatures_batch_ref(tokens, gid, phi, psi, emb_valid, pid,
+                               ex_stack, nv_stack, npat_stack,
+                               mode_stack):
+    """Wavefront variant of ``match_signatures_ref``: rows belonging to
+    *different* patterns share one device scan.  ``pid`` [E] indexes the
+    per-pattern tables ``ex_stack`` [NP,P,5] and ``nv_stack`` /
+    ``npat_stack`` / ``mode_stack`` [NP]; the gathers happen inside the
+    jit so one dispatch covers the whole packed chunk."""
+    from ..kernels.match_count.ref import match_core
+
+    tok = tokens[gid]  # [E,T,6]
+    return match_core(
+        tok, phi, psi, emb_valid, ex_stack[pid],
+        nv_stack[pid], npat_stack[pid], mode_stack[pid],
+    )
+
+
+match_signatures_batch = jax.jit(match_signatures_batch_ref)
+
+
+def _group_finalize(svals, e_idx, t_idx, g):
+    """Shared vectorized finalize core: sort the surviving
+    (signature, e, t, gid) rows once by signature, split the (e,t) rows
+    at the signature boundaries, and dedup (signature, gid) pairs with a
+    second sort - no per-signature ``set(tolist())`` over the
+    duplicate-heavy raw rows (the old host bottleneck).  Returns
+    (signature keys ascending, per-key distinct-gid arrays, per-key
+    (e,t) row arrays ordered by (e,t))."""
+    order = np.lexsort((t_idx, e_idx, svals))
+    svals = svals[order]
+    e_idx = e_idx[order]
+    t_idx = t_idx[order]
+    g = g[order]
+    bounds = np.nonzero(np.diff(svals))[0] + 1
+    et_groups = np.split(np.stack([e_idx, t_idx], axis=1), bounds)
+    gorder = np.lexsort((g, svals))
+    s2, g2 = svals[gorder], g[gorder]
+    keep = np.empty(len(s2), bool)
+    keep[:1] = True
+    keep[1:] = (s2[1:] != s2[:-1]) | (g2[1:] != g2[:-1])
+    s2, g2 = s2[keep], g2[keep]
+    gid_groups = np.split(g2, np.nonzero(np.diff(s2))[0] + 1)
+    keys = svals[np.concatenate([[0], bounds])]
+    return keys, gid_groups, et_groups
+
+
 def aggregate_host(
     sigs: np.ndarray, gids: np.ndarray
 ) -> Dict[int, Tuple[Set[int], np.ndarray]]:
     """Exact finalize: signature -> (distinct gid set, (e,t) index array)."""
     E, T = sigs.shape
     flat = sigs.reshape(-1)
-    ok = flat >= 0
-    if not ok.any():
+    idx = np.nonzero(flat >= 0)[0]
+    if not len(idx):
         return {}
-    idx = np.nonzero(ok)[0]
     svals = flat[idx]
     e_idx = (idx // T).astype(np.int32)
     t_idx = (idx % T).astype(np.int32)
-    g = gids[e_idx]
-    order = np.lexsort((t_idx, e_idx, svals))
-    svals, e_idx, t_idx, g = (x[order] for x in (svals, e_idx, t_idx, g))
-    out: Dict[int, Tuple[Set[int], np.ndarray]] = {}
-    bounds = np.nonzero(np.diff(svals))[0] + 1
-    starts = np.concatenate([[0], bounds])
-    ends = np.concatenate([bounds, [len(svals)]])
-    for s, e in zip(starts, ends):
-        sig = int(svals[s])
-        out[sig] = (
-            set(g[s:e].tolist()),
-            np.stack([e_idx[s:e], t_idx[s:e]], axis=1),
-        )
-    return out
+    g = np.asarray(gids)[e_idx]
+    keys, gid_groups, et_groups = _group_finalize(svals, e_idx, t_idx, g)
+    return {
+        int(s): (set(gg.tolist()), et)
+        for s, gg, et in zip(keys, gid_groups, et_groups)
+    }
+
+
+def aggregate_host_batch(
+    sigs: np.ndarray, gids: np.ndarray, pids: np.ndarray
+) -> Dict[Tuple[int, int], Tuple[Set[int], np.ndarray]]:
+    """Namespaced finalize for wavefront scans: each row carries the
+    pattern id it belongs to (``pids`` [E]), so signatures of different
+    patterns in the same packed batch are disambiguated by composing a
+    64-bit ``pattern_id << 32 | sig`` sort key.  Returns
+    {(pattern_id, sig): (distinct gid set, (e,t) rows)} with ``e``
+    indexing the packed batch rows (the driver maps them back to
+    per-pattern embedding indices)."""
+    E, T = sigs.shape
+    flat = sigs.reshape(-1).astype(np.int64)
+    idx = np.nonzero(flat >= 0)[0]
+    if not len(idx):
+        return {}
+    e_idx = (idx // T).astype(np.int32)
+    t_idx = (idx % T).astype(np.int32)
+    svals = (np.asarray(pids, np.int64)[e_idx] << 32) | flat[idx]
+    g = np.asarray(gids)[e_idx]
+    keys, gid_groups, et_groups = _group_finalize(svals, e_idx, t_idx, g)
+    return {
+        (int(k >> 32), int(k & 0xFFFFFFFF)): (set(gg.tolist()), et)
+        for k, gg, et in zip(keys, gid_groups, et_groups)
+    }
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

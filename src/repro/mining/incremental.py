@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
@@ -190,41 +191,43 @@ def refresh_frontier(
     def is_clean(p: Pattern) -> bool:
         return p in active and p not in dirty
 
+    def want_embs(child: Pattern) -> bool:
+        # clean children are retained, never descended - skip the
+        # embedding rebuild (the expensive host part of a scan)
+        return not is_clean(child)
+
+    # same wavefront scheduling as AcceleratedMiner._mine: the dirty
+    # frontier is drained in slices and every slice's scans share
+    # packed device chunks, so streaming refresh() and the sharded
+    # reconcile get the cross-pattern batching for free
     root: Pattern = ()
-    stack = [(root, [(g, (), ()) for g in range(len(db))])]
-    while stack:
-        pattern, embs = stack.pop()
-        if max_len is not None and pattern_length(pattern) >= max_len:
-            continue
-        if len(pattern) >= miner.ni:
-            continue  # capacity guard, mirrors AcceleratedMiner._mine
-        res.scans += 1
-
-        def want_embs(child: Pattern) -> bool:
-            # clean children are retained, never descended - skip the
-            # embedding rebuild (the expensive host part of a scan)
-            return not is_clean(child)
-
-        for child, gids, child_embs in miner.expand_children(
-            pattern, embs, min_support, rs=True, want_embs=want_embs
-        ):
-            res.patterns[child] = len(gids)
-            if pattern == root:
+    pending = deque([(root, [(g, (), ()) for g in range(len(db))])])
+    while pending:
+        items = miner._take_slice(pending, max_len, wavefront=True)
+        if not items:
+            break  # guards drained the pool
+        res.scans += len(items)
+        for (pattern, _), kids in zip(items, miner.expand_children_batch(
+            items, min_support, rs=True, want_embs=want_embs
+        )):
+            for child, gids, child_embs in kids:
+                res.patterns[child] = len(gids)
+                if pattern == root:
+                    if is_clean(child):
+                        res.depth1_clean += 1
+                    else:
+                        res.depth1_dirty += 1
                 if is_clean(child):
-                    res.depth1_clean += 1
-                else:
-                    res.depth1_dirty += 1
-            if is_clean(child):
-                # clean subtree: no window change touched child, so no
-                # descendant's support changed - retain the known
-                # frequent ones, prune the scan
-                res.scans_skipped += 1
-                res.retained += 1
-                for q in descendants.get(child, ()):
-                    res.patterns[q] = active[q]
+                    # clean subtree: no window change touched child, so
+                    # no descendant's support changed - retain the known
+                    # frequent ones, prune the scan
+                    res.scans_skipped += 1
                     res.retained += 1
-            else:
-                res.gids[child] = gids
-                res.discovered += 1
-                stack.append((child, child_embs))
+                    for q in descendants.get(child, ()):
+                        res.patterns[q] = active[q]
+                        res.retained += 1
+                else:
+                    res.gids[child] = gids
+                    res.discovered += 1
+                    pending.append((child, child_embs))
     return res

@@ -4,7 +4,13 @@ containment queries.
 Mining (repro.mining) produces the rFTS bank; this package answers the
 deployment-side question - "which mined patterns does this incoming
 graph sequence contain?" - as a batched device computation instead of a
-per-sequence host backtrack.
+per-sequence host backtrack.  The mining layer mirrors the same
+batching discipline on the producer side: ``mining.driver``'s wavefront
+scheduler packs the embeddings of many frontier patterns into shared
+device scans (one dispatch per chunk, not per pattern - see driver.py's
+docstring), and ``mining.incremental``'s frontier re-mine - the engine
+behind ``StreamingBank.refresh()`` and the sharded-window reconcile -
+drains its dirty frontier through the same batched expansion.
 
 Module map:
 

@@ -192,14 +192,15 @@ class ServingCluster:
     # ------------------------------------------------------------ masking
     def set_row_mask(self, active: Optional[np.ndarray]) -> None:
         """Install a global tombstone mask: each shard server masks its
-        slice of ``active``; the caches drop (cached rows predate the
-        mask)."""
+        slice of ``active``; the router reconciles its caches per-row
+        (pure tombstones patch newly-dead columns in place, recoveries
+        fall back to a full drop - see ``ClusterRouter.apply_row_mask``)."""
         for h in self.hosts:
             if not len(h.rows):
                 continue
             h.call(h.server.set_row_mask,
                    None if active is None else active[h.rows])
-        self.router.clear_caches()
+        self.router.apply_row_mask(active)
 
     # -------------------------------------------------------------- stats
     def stats(self) -> Dict[str, int]:
@@ -522,9 +523,14 @@ class ShardedStreamingBank:
                 "support drift on", p, int(self.support[known[p]]), s)
         self.active = mined_rows if self.tombstones else \
             np.ones(self.bank.n_patterns, bool)
+        # cache reconciliation is the mask's job now: _apply_mask
+        # patches newly-tombstoned columns per-row and clears only on
+        # recoveries (ClusterRouter.apply_row_mask); cached rows do not
+        # depend on supports (scoring reads router.support at query
+        # time) and the bank-extension path above rebuilt the serving
+        # plane - so surviving entries are exact and stay.
         self._apply_mask()
         self.cluster.router.support = self.support
-        self.cluster.router.clear_caches()
         for r in self.ring:
             r.fresh[:] = False
         self._any_change = False

@@ -119,9 +119,10 @@ class ClusterRouter:
         self.n_patterns = n_patterns
         self.support = support
         self.topk = topk
+        self._row_mask: Optional[np.ndarray] = None  # None = all active
         self.stats: Dict[str, int] = {
             "queries": 0, "l1_hits": 0, "l2_hits": 0, "misses": 0,
-            "shard_batches": 0,
+            "shard_batches": 0, "mask_patches": 0, "mask_clears": 0,
         }
 
     # ------------------------------------------------------------- cache
@@ -134,6 +135,39 @@ class ClusterRouter:
         for h in self.hosts:
             h.l1.clear()
             h.l2.clear()
+
+    def apply_row_mask(self, active: Optional[np.ndarray]) -> None:
+        """Reconcile the L1/L2 caches with a new tombstone mask
+        *per-row* instead of dropping them wholesale.  A masked bank row
+        answers False by definition (see ``PatternServer.set_row_mask``),
+        so a pure tombstone - rows only *leaving* the active set - can
+        patch every cached containment row in place: newly-masked
+        columns go False, untouched columns stay exact, and the entries
+        (plus their LRU positions) survive.  Rows coming *back*
+        (masked -> active) were cached as False with no way to recover
+        the true bit, so any recovery still clears everything - the
+        sound fallback.  Patches are copy-on-write: previously returned
+        ``QueryResult.contained`` arrays may alias cache entries."""
+        old = self._row_mask
+        new = (None if active is None
+               else np.asarray(active, bool).copy())
+        self._row_mask = new
+        old_a = (np.ones(self.n_patterns, bool) if old is None else old)
+        new_a = (np.ones(self.n_patterns, bool) if new is None else new)
+        if (new_a & ~old_a).any():  # recoveries: cached False is stale
+            self.clear_caches()
+            self.stats["mask_clears"] += 1
+            return
+        newly_masked = old_a & ~new_a
+        if not newly_masked.any():
+            return  # mask unchanged: every entry is still exact
+        for h in self.hosts:
+            for cache in (h.l1, h.l2):
+                for fp, row in cache.items():
+                    patched = row.copy()
+                    patched[newly_masked] = False
+                    cache[fp] = patched
+        self.stats["mask_patches"] += 1
 
     # -------------------------------------------------------------- join
     def joined_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:

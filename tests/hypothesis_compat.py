@@ -23,10 +23,19 @@ class _Integers:
         return rng.randint(self.lo, self.hi)
 
 
+class _Booleans:
+    def sample(self, rng: random.Random) -> bool:
+        return bool(rng.getrandbits(1))
+
+
 class strategies:
     @staticmethod
     def integers(min_value: int, max_value: int) -> _Integers:
         return _Integers(min_value, max_value)
+
+    @staticmethod
+    def booleans() -> _Booleans:
+        return _Booleans()
 
 
 st = strategies

@@ -180,6 +180,50 @@ def test_cluster_row_mask_matches_single_host():
             cl.exact_rows(queries), srv.exact_rows(queries))
 
 
+def test_l2_entries_survive_tombstone():
+    """A pure tombstone (rows only leaving the active set) patches the
+    cached rows per-column instead of dropping them: untouched-row L2/L1
+    entries survive, replays stay cache hits, and the patched bits are
+    bit-equal to a fresh masked join.  A recovery (masked -> active)
+    still clears everything - cached False bits are unrecoverable."""
+    bank = _bank(35)
+    queries = random_db(36, n_seq=5)
+    cl = ServingCluster(bank, 2, bank_layout="flat")
+    cl.query(queries, host=0)
+    cl.query(queries, host=1)  # populate L1s on both hosts via L2
+    n_l2 = sum(len(h.l2) for h in cl.hosts)
+    n_l1 = sum(len(h.l1) for h in cl.hosts)
+    assert n_l2 > 0 and n_l1 > 0
+    mask = np.ones(bank.n_patterns, bool)
+    mask[:: 2] = False  # tombstone half the bank
+    cl.set_row_mask(mask)
+    assert sum(len(h.l2) for h in cl.hosts) == n_l2, \
+        "tombstone must not evict untouched L2 entries"
+    assert sum(len(h.l1) for h in cl.hosts) == n_l1
+    assert cl.router.stats["mask_patches"] == 1
+    misses = cl.router.stats["misses"]
+    got = cl.query(queries, host=0)
+    assert cl.router.stats["misses"] == misses, \
+        "patched entries must keep serving as cache hits"
+    assert all(r.cached for r in got)
+    srv = PatternServer(bank, bank_layout="flat")
+    srv.set_row_mask(mask)
+    np.testing.assert_array_equal(
+        np.stack([r.contained for r in got]), srv.exact_rows(queries))
+    # deepening the tombstone patches again; recovering a row clears
+    mask2 = mask.copy()
+    mask2[1] = False
+    cl.set_row_mask(mask2)
+    assert sum(len(h.l2) for h in cl.hosts) == n_l2
+    assert cl.router.stats["mask_patches"] == 2
+    cl.set_row_mask(mask)  # row 1 comes back: cached False is stale
+    assert cl.router.stats["mask_clears"] == 1
+    assert sum(len(h.l2) for h in cl.hosts) == 0
+    got = cl.query(queries, host=0)
+    np.testing.assert_array_equal(
+        np.stack([r.contained for r in got]), srv.exact_rows(queries))
+
+
 # ------------------------------------------------------- sharded window
 @pytest.mark.slow
 @given(st.integers(0, 10_000))

@@ -77,6 +77,24 @@ def test_kernel_block_shapes(block_e, block_t):
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
 
 
+@pytest.mark.parametrize("E,T,mode", [(3, 7, 0), (17, 300, 2), (64, 128, 3)])
+def test_kernel_lane_pad_parity(E, T, mode):
+    """Forcing the TPU lane padding of the small NI/NV dims through the
+    interpreter must not change a single signature (the padded
+    PAD_PHI/PAD_PSI columns are inert by construction)."""
+    rng = np.random.default_rng(E + T + mode)
+    tokens, gid, phi, psi, valid, existing = _random_inputs(
+        rng, E, 4, T, 8, 8, 16
+    )
+    args = [jnp.asarray(x) for x in (tokens, gid, phi, psi, valid, existing)]
+    scal = [jnp.int32(3), jnp.int32(2), jnp.int32(mode)]
+    ref = match_signatures_ref(*args, *scal)
+    ker = match_signatures_kernel(
+        *args, *scal, interpret=True, lane_pad=True
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
 def test_kernel_on_real_mining_data():
     """Kernel vs ref on a scan the real miner would issue."""
     db = random_db(13, n_seq=8, n_steps=5, n_v=5)

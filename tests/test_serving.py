@@ -125,6 +125,12 @@ def test_contain_step_kernel_matches_ref(G, E, Tm, block_g):
     ref = contain_step_core(*args)
     ker = contain_step_kernel(*args, block_g=block_g, interpret=True)
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+    # TPU lane padding of the small E/Tm dims (forced through the
+    # interpreter) must be bit-identical: padded rows/tokens are inert
+    pad = contain_step_kernel(
+        *args, block_g=block_g, interpret=True, lane_pad=True
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pad))
 
 
 def test_batch_contains_kernel_path_equals_ref_path():
