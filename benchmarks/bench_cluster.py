@@ -4,8 +4,19 @@ single-host ``StreamingBank``, on the Table3 synthetic workload.
 
 Emits ``BENCH_cluster.json``: routed queries/sec per (bank layout,
 host count) with the single-host server as baseline, the per-drain
-cross-host batching stats, and sharded-window streamed updates/sec vs
-the single-host streaming bank.
+cross-host batching stats, sharded-window streamed updates/sec vs the
+single-host streaming bank, and a ``metrics`` block (the summed
+registry deltas of every timed pass) that ``scripts/check_bench.py``
+gates on at counter level - in particular the L1/L2 cache hit rates.
+
+The query mix is **Zipfian**: queries are drawn with repetition from a
+fixed pool (rank-``r`` probability ∝ 1/r^s), and the drawn stream is
+routed as several consecutive *drains*.  Production replay traffic is
+exactly this shape, and it is what the two-level cache exists for: a
+fingerprint resolved in an earlier drain is an L1 hit on its arrival
+host and a single-hop L2 hit anywhere else - so the measured hit rates
+are real nonzero numbers (a uniform one-shot mix pinned them at 0 and
+left the cache path untested).
 
 Exactness is asserted, not sampled - and this is the artifact's real
 gate: every routed containment row and top-k must be *bit-equal* to the
@@ -24,7 +35,9 @@ subprocess test pins hosts to 8 virtual devices).
 
 ``--smoke`` is the CI tier-4 gate: a tiny config, both layouts, >= 2
 hosts, hard-failing on any divergence, written atomically to
-``BENCH_cluster_smoke.json``.
+``BENCH_cluster_smoke.json``.  ``--trace PATH`` records the span
+tracer (repro.obs.trace) across the run; render the phase-attribution
+table with ``scripts/trace_report.py PATH``.
 """
 from __future__ import annotations
 
@@ -41,6 +54,7 @@ except ImportError:  # pragma: no cover - run as a script
 
 from repro.data.synthetic import Table3Params, generate_table3_db
 from repro.mining.driver import AcceleratedMiner
+from repro.obs import trace
 from repro.serving.bank import compile_bank
 from repro.serving.cluster import ServingCluster, ShardedStreamingBank
 from repro.serving.server import PatternServer
@@ -49,6 +63,28 @@ from repro.serving.streaming import StreamingBank
 HERE = os.path.dirname(__file__)
 OUT = os.path.join(HERE, "..", "BENCH_cluster.json")
 OUT_SMOKE = os.path.join(HERE, "..", "BENCH_cluster_smoke.json")
+
+ZIPF_S = 1.1  # rank exponent of the repeat mix
+
+
+def zipf_mix(pool, n, seed=2, s=ZIPF_S):
+    """Draw ``n`` queries from ``pool`` with rank-Zipfian repetition
+    (deterministic under ``seed``)."""
+    ranks = np.arange(1, len(pool) + 1, dtype=np.float64)
+    p = ranks ** -s
+    p /= p.sum()
+    rng = np.random.default_rng(seed)
+    return [pool[i] for i in rng.choice(len(pool), size=n, p=p)]
+
+
+def _chunks(items, n_chunks):
+    size = max(1, -(-len(items) // n_chunks))
+    return [items[i: i + size] for i in range(0, len(items), size)]
+
+
+def _merge_metrics(into, delta):
+    for key, val in delta.items():
+        into[key] = into.get(key, 0) + val
 
 
 def _spread(queries, n_hosts):
@@ -69,33 +105,44 @@ def _routed_pass(cl, reqs):
     return [flat[i] for i in sorted(flat)]
 
 
-def bench_serving_cluster(db, queries, sigma, max_len, host_counts,
-                          layouts):
-    """Routed cluster vs single-host server; returns (payload section,
-    divergence count - always 0 or the bench has already raised)."""
+def bench_serving_cluster(db, pool, sigma, max_len, host_counts,
+                          layouts, n_queries, n_drains, metrics_sum):
+    """Routed cluster vs single-host server on a Zipfian repeat mix;
+    returns (payload section, divergence count - always 0 or the bench
+    has already raised)."""
     bank = compile_bank(
         AcceleratedMiner(db).mine_rs(sigma, max_len=max_len))
+    queries = zipf_mix(pool, n_queries)
+    drains = _chunks(queries, n_drains)
     single_qps = {}
     cluster_qps = {}
     divergences = 0
     stats = {}
     for layout in layouts:
         srv = PatternServer(bank, bank_layout=layout)
-        want = srv.query(queries)  # warm the batch shapes + reference
+        want = srv.query(queries)  # the bit-equality reference
+        srv._cache.clear()  # else the warm drains all cache-hit...
+        for dq in drains:   # ...and the per-drain jit buckets stay cold
+            srv.query(dq)
         srv._cache.clear()
         t0 = time.perf_counter()
-        srv.query(queries)
+        for dq in drains:
+            srv.query(dq)
         single_qps[layout] = len(queries) / (time.perf_counter() - t0)
         cluster_qps[layout] = {}
         for H in host_counts:
             cl = ServingCluster(bank, H, bank_layout=layout)
-            reqs = _spread(queries, H)
-            _routed_pass(cl, reqs)  # warm every shard's jit buckets
+            for dq in drains:  # warm every shard's jit buckets
+                _routed_pass(cl, _spread(dq, H))
             cl.router.clear_caches()
+            before = cl.metrics.snapshot()
             t0 = time.perf_counter()
-            got = _routed_pass(cl, reqs)
+            got = []
+            for dq in drains:
+                got.extend(_routed_pass(cl, _spread(dq, H)))
             dt = time.perf_counter() - t0
             cluster_qps[layout][str(H)] = len(queries) / dt
+            _merge_metrics(metrics_sum, cl.metrics.delta(before))
             for r, w in zip(got, want):
                 if not (np.array_equal(r.contained, w.contained)
                         and r.topk == w.topk):
@@ -109,6 +156,9 @@ def bench_serving_cluster(db, queries, sigma, max_len, host_counts,
             stats[f"{layout}_H{H}"] = dict(cl.router.stats)
     return {
         "bank_patterns": bank.n_patterns,
+        "pool_size": len(pool),
+        "n_drains": n_drains,
+        "zipf_s": ZIPF_S,
         "single_qps": single_qps,
         "cluster_qps": cluster_qps,
         "router_stats": stats,
@@ -116,7 +166,7 @@ def bench_serving_cluster(db, queries, sigma, max_len, host_counts,
 
 
 def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
-                         batch_size, refresh_every):
+                         batch_size, refresh_every, metrics_sum):
     """Sharded-window protocol vs the single-host StreamingBank on one
     arrival stream; hard-fails unless every post-refresh frequent map
     is bit-equal."""
@@ -125,6 +175,7 @@ def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
 
     def run(make, observe, refresh):
         sb = make()
+        before = sb.metrics.snapshot()
         t0 = time.perf_counter()
         maps = []
         for i, b in enumerate(batches):
@@ -132,7 +183,8 @@ def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
             if (i + 1) % refresh_every == 0:
                 maps.append(refresh(sb))
         maps.append(refresh(sb))
-        return time.perf_counter() - t0, maps, sb
+        return time.perf_counter() - t0, maps, sb, \
+            sb.metrics.delta(before)
 
     def mk_single():
         return StreamingBank.from_db(
@@ -144,13 +196,14 @@ def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
             max_len=max_len)
 
     run(mk_single, StreamingBank.observe, StreamingBank.refresh)  # warm
-    t_single, maps_single, _ = run(
+    t_single, maps_single, _, _ = run(
         mk_single, StreamingBank.observe, StreamingBank.refresh)
     run(mk_sharded, ShardedStreamingBank.observe,
         ShardedStreamingBank.refresh)  # warm
-    t_sharded, maps_sharded, sh = run(
+    t_sharded, maps_sharded, sh, delta = run(
         mk_sharded, ShardedStreamingBank.observe,
         ShardedStreamingBank.refresh)
+    _merge_metrics(metrics_sum, delta)
     for i, (a, b) in enumerate(zip(maps_single, maps_sharded)):
         if a != b:
             raise AssertionError(
@@ -171,15 +224,20 @@ def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
     }
 
 
-def main(csv=print, smoke: bool = False):
+def main(csv=print, smoke: bool = False, trace_path=None):
     if smoke:
         db_size, n_queries, max_len = 40, 48, 3
+        pool_size, n_drains = 16, 3
         host_counts, out_path = (1, 2, 3), OUT_SMOKE
         window, stream_n, batch_size, refresh_every = 24, 24, 8, 2
     else:
         db_size, n_queries, max_len = 120, 256, 4
+        pool_size, n_drains = 64, 4
         host_counts, out_path = (1, 2, 4), OUT
         window, stream_n, batch_size, refresh_every = 60, 60, 10, 3
+    if trace_path:
+        trace.clear()
+        trace.enable()
     params = Table3Params(db_size=db_size + window + stream_n, v_avg=5,
                           n_interstates=3)
     all_seqs = generate_table3_db(params, seed=0)
@@ -187,23 +245,35 @@ def main(csv=print, smoke: bool = False):
     stream_db = all_seqs[db_size: db_size + window]
     stream = all_seqs[db_size + window:]
     sigma = max(2, db_size // 15)
-    qparams = Table3Params(db_size=n_queries, v_avg=5, n_interstates=3)
-    queries = generate_table3_db(qparams, seed=1)
+    qparams = Table3Params(db_size=pool_size, v_avg=5, n_interstates=3)
+    pool = generate_table3_db(qparams, seed=1)
 
+    metrics_sum = {}
     serving, divergences = bench_serving_cluster(
-        db, queries, sigma, max_len, host_counts, ("flat", "trie"))
+        db, pool, sigma, max_len, host_counts, ("flat", "trie"),
+        n_queries, n_drains, metrics_sum)
     streaming = bench_sharded_stream(
         stream_db, stream, max(2, window // 15), max_len, window,
-        2, batch_size, refresh_every)
+        2, batch_size, refresh_every, metrics_sum)
 
+    l1 = metrics_sum.get("cluster.router.l1_hits", 0)
+    l2 = metrics_sum.get("cluster.router.l2_hits", 0)
+    routed = metrics_sum.get("cluster.router.queries", 0)
     payload = {
         "machine": machine_id(),
         "n_queries": n_queries,
         "host_counts": list(host_counts),
         "divergences": divergences,
+        "cache_hit_rate": (l1 + l2) / routed if routed else 0.0,
         **serving,
         **streaming,
+        "metrics": metrics_sum,
     }
+    if trace_path:
+        trace.save(trace_path)
+        trace.disable()
+        csv(f"# trace saved to {trace_path} "
+            f"({len(trace.tracer.events)} spans)")
     atomic_write_json(out_path, payload)
     for layout in ("flat", "trie"):
         base = serving["single_qps"][layout]
@@ -217,6 +287,8 @@ def main(csv=print, smoke: bool = False):
     csv(f"cluster/stream_single,"
         f"{1e6 / streaming['single_stream_updates_per_sec']:.0f},"
         f"ups={streaming['single_stream_updates_per_sec']:.0f}")
+    csv(f"cluster/cache,{payload['cache_hit_rate']:.3f},"
+        f"l1={l1},l2={l2},routed={routed}")
     return payload
 
 
@@ -226,11 +298,16 @@ if __name__ == "__main__":
                     help="tiny config, >=2 hosts, hard-fail on any "
                          "divergence from single-host results (the CI "
                          "tier-4 gate)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a span trace of the run (Chrome JSON "
+                         "for .json paths, JSONL otherwise); inspect "
+                         "with scripts/trace_report.py")
     args = ap.parse_args()
-    out = main(smoke=args.smoke)
+    out = main(smoke=args.smoke, trace_path=args.trace)
     print(f"# cluster routed serving bit-equal to single-host "
           f"({out['divergences']} divergences) across hosts "
-          f"{out['host_counts']}; sharded window "
+          f"{out['host_counts']}; zipf cache hit rate "
+          f"{out['cache_hit_rate']:.2f}; sharded window "
           f"{out['sharded_stream_updates_per_sec']:.0f} ups vs single "
           f"{out['single_stream_updates_per_sec']:.0f} ups over "
           f"{out['stream_hosts']} hosts")

@@ -31,6 +31,7 @@ import time
 from repro.core.reverse_search import mine_gtrace_rs
 from repro.data.synthetic import Table3Params, generate_table3_db
 from repro.mining.driver import AcceleratedMiner
+from repro.obs import trace
 
 HERE = os.path.dirname(__file__)
 OUT = os.path.join(HERE, "..", "BENCH_mining.json")
@@ -60,7 +61,10 @@ def _run_device(db, sigma, max_len, dispatch, rounds=2):
     AcceleratedMiner(db, dispatch=dispatch).mine_rs(sigma, max_len=max_len)
     best = None
     for _ in range(rounds):
-        m = AcceleratedMiner(db, dispatch=dispatch)
+        # per-dispatch registry namespace: the artifact's metrics block
+        # keeps the two miners' counters apart
+        m = AcceleratedMiner(db, dispatch=dispatch,
+                             metrics_ns=f"mining.{dispatch}")
         t0 = time.perf_counter()
         res = m.mine_rs(sigma, max_len=max_len)
         wall = time.perf_counter() - t0
@@ -69,7 +73,15 @@ def _run_device(db, sigma, max_len, dispatch, rounds=2):
     return best
 
 
-def main(csv=print, smoke: bool = False):
+def _merge_metrics(into, delta):
+    for key, val in delta.items():
+        into[key] = into.get(key, 0) + val
+
+
+def main(csv=print, smoke: bool = False, trace_path=None):
+    if trace_path:
+        trace.clear()
+        trace.enable()
     if smoke:
         grid = [(30, 4)]
         max_len, host_cap, rounds = 3, 10_000, 1
@@ -81,6 +93,7 @@ def main(csv=print, smoke: bool = False):
         max_len, host_cap, rounds = 4, 130, 2
     rows = []
     divergences = 0
+    metrics_sum = {}
     for db_size, sigma in grid:
         params = Table3Params(db_size=db_size, v_avg=5, n_interstates=3)
         db = generate_table3_db(params, seed=0)
@@ -126,6 +139,8 @@ def main(csv=print, smoke: bool = False):
             "dispatch_seconds_pattern": pp.dispatch_seconds,
         }
         rows.append(row)
+        _merge_metrics(metrics_sum, wf.metrics.snapshot())
+        _merge_metrics(metrics_sum, pp.metrics.snapshot())
         csv(f"mining/db{db_size}_s{sigma},{wf_wall * 1e6:.0f},"
             f"x{row['speedup_wavefront']:.1f};"
             f"calls={wf.n_device_calls}vs{pp.n_device_calls};"
@@ -141,7 +156,16 @@ def main(csv=print, smoke: bool = False):
             statistics.median(r["device_call_reduction"] for r in rows),
         "patterns_per_sec_best":
             max(r["patterns_per_sec_wavefront"] for r in rows),
+        # summed best-run registry snapshots across the grid; keys are
+        # namespaced mining.{wavefront,pattern}.* (check_bench gates on
+        # the wavefront/per-pattern device-call ordering here)
+        "metrics": metrics_sum,
     }
+    if trace_path:
+        trace.save(trace_path)
+        trace.disable()
+        csv(f"# trace saved to {trace_path} "
+            f"({len(trace.tracer.events)} spans)")
     atomic_write_json(OUT_SMOKE if smoke else OUT, payload)
     csv(f"mining/speedup_median,0,"
         f"x{payload['speedup_wavefront_median']:.2f}")
@@ -154,8 +178,12 @@ if __name__ == "__main__":
                     help="tiny config; hard-fail on any frequent-map "
                          "divergence between the wavefront, per-pattern "
                          "and host miners (the CI tier-5 gate)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a span trace of the run (Chrome JSON "
+                         "for .json paths, JSONL otherwise); inspect "
+                         "with scripts/trace_report.py")
     args = ap.parse_args()
-    out = main(smoke=args.smoke)
+    out = main(smoke=args.smoke, trace_path=args.trace)
     med = out["speedup_wavefront_median"]
     calls = out["device_call_reduction_median"]
     print(f"# wavefront x{med:.2f} median over per-pattern dispatch "

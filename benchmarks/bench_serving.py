@@ -28,6 +28,7 @@ from repro.core.containment import contains
 from repro.data.synthetic import Table3Params, generate_table3_db
 from repro.mining.driver import AcceleratedMiner
 from repro.mining.encoding import encode_db
+from repro.obs import trace
 from repro.serving.bank import compile_bank, sequence_fingerprint
 from repro.serving.batch import batch_contains, max_key_bucket
 from repro.serving.server import PatternServer
@@ -54,7 +55,10 @@ def _timed_pass(srv, queries):
     return res, time.perf_counter() - t0
 
 
-def main(csv=print, smoke: bool = False):
+def main(csv=print, smoke: bool = False, trace_path=None):
+    if trace_path:
+        trace.clear()
+        trace.enable()
     if smoke:
         db_size, n_queries, oracle_sample, n_rounds = 60, 128, 8, 2
         sigma_div, out_path = 10, OUT_SMOKE
@@ -74,9 +78,12 @@ def main(csv=print, smoke: bool = False):
     qparams = Table3Params(db_size=n_queries, v_avg=5, n_interstates=3)
     queries = generate_table3_db(qparams, seed=1)
 
-    flat_srv = PatternServer(bank, max_batch=1024)
+    # per-layout registry namespaces keep the artifact's metrics block
+    # counters apart (each server owns a private registry)
+    flat_srv = PatternServer(bank, max_batch=1024,
+                             metrics_ns="serving.flat")
     trie_srv = PatternServer(bank, max_batch=1024, bank_layout="trie",
-                             trie=trie)
+                             trie=trie, metrics_ns="serving.trie")
     # warm all jit shape buckets outside the timing, and gate on the
     # layouts agreeing on every (query, pattern) cell - both are exact,
     # so any mismatch is a bug (this is the CI tier-2 smoke check)
@@ -182,7 +189,16 @@ def main(csv=print, smoke: bool = False):
         "rounds": rounds,
         "escalated_cells": trie_srv.stats["escalated_cells"],
         "host_fallback_cells": trie_srv.stats["host_fallback_cells"],
+        # final-timed-pass registry snapshots of both layout servers
+        # (disjoint serving.flat.* / serving.trie.* namespaces)
+        "metrics": {**flat_srv.metrics.snapshot(),
+                    **trie_srv.metrics.snapshot()},
     }
+    if trace_path:
+        trace.save(trace_path)
+        trace.disable()
+        csv(f"# trace saved to {trace_path} "
+            f"({len(trace.tracer.events)} spans)")
     # tempfile + rename: a mismatch-failure above or a crash mid-run
     # must never clobber the last good artifact CI baselines against
     atomic_write_json(out_path, payload)
@@ -210,8 +226,12 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config; hard-fails on flat/trie mismatch"
                          " (the CI tier-2 gate)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a span trace of the run (Chrome JSON "
+                         "for .json paths, JSONL otherwise); inspect "
+                         "with scripts/trace_report.py")
     args = ap.parse_args()
-    out = main(smoke=args.smoke)
+    out = main(smoke=args.smoke, trace_path=args.trace)
     print(f"# speedup over host oracle: x{out['speedup_server']:.1f} "
           f"(raw dense batch x{out['speedup_batched']:.1f}); "
           f"trie vs flat x{out['speedup_trie_vs_flat']:.2f} "

@@ -27,6 +27,7 @@ import time
 
 from repro.data.synthetic import Table3Params, generate_table3_db
 from repro.mining.driver import AcceleratedMiner
+from repro.obs import trace
 from repro.serving.streaming import StreamingBank
 
 HERE = os.path.dirname(__file__)
@@ -99,7 +100,10 @@ def _stream_once(db, batches, *, layout, window, sigma, max_len,
     return t_seed, t_stream, t_observe, sb
 
 
-def main(csv=print, smoke: bool = False):
+def main(csv=print, smoke: bool = False, trace_path=None):
+    if trace_path:
+        trace.clear()
+        trace.enable()
     if smoke:
         window, n_batches, batch_size, max_len = 40, 4, 8, 3
         refresh_every, n_base, out_path = 2, 2, OUT_SMOKE
@@ -130,6 +134,7 @@ def main(csv=print, smoke: bool = False):
     n_updates = len(stream)
 
     results = {}
+    metrics_sum = {}
     for layout in ("flat", "trie"):
         # cold pass warms every jit shape bucket; the second pass is
         # the timed, steady-state one (same stream, fresh state)
@@ -151,6 +156,9 @@ def main(csv=print, smoke: bool = False):
             "stats": dict(sb.stats),
             "bank_patterns": sb.bank.n_patterns,
         }
+        # summed timed-run registry snapshots across the layouts
+        for key, val in sb.metrics.snapshot().items():
+            metrics_sum[key] = metrics_sum.get(key, 0) + val
 
     # baseline: a full re-mine of the window after every batch (what
     # exact supports cost without incremental maintenance); timed on
@@ -203,7 +211,13 @@ def main(csv=print, smoke: bool = False):
         "recovered": st["recovered"],
         "added": st["added"],
         "layouts": results,
+        "metrics": metrics_sum,
     }
+    if trace_path:
+        trace.save(trace_path)
+        trace.disable()
+        csv(f"# trace saved to {trace_path} "
+            f"({len(trace.tracer.events)} spans)")
     atomic_write_json(out_path, payload)
     csv(f"streaming/observe_flat,{1e6 / flat['updates_per_sec']:.0f},"
         f"ups={flat['updates_per_sec']:.0f}")
@@ -223,8 +237,12 @@ if __name__ == "__main__":
                     help="tiny config; re-mine at every refresh point "
                          "and hard-fail on any support divergence (the "
                          "CI tier-3 gate)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a span trace of the run (Chrome JSON "
+                         "for .json paths, JSONL otherwise); inspect "
+                         "with scripts/trace_report.py")
     args = ap.parse_args()
-    out = main(smoke=args.smoke)
+    out = main(smoke=args.smoke, trace_path=args.trace)
     print(f"# streamed maintenance x{out['speedup_streaming']:.1f} over "
           f"re-mine-per-window (flat "
           f"{out['streamed_updates_per_sec']:.0f} ups, trie "

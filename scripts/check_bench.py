@@ -24,6 +24,14 @@ needed):
    ~2x box-to-box throughput swings the full benches document; an
    actual serving-path pessimization lands well past it.
 
+Every artifact also carries a ``metrics`` block - a flat registry
+snapshot (``repro.obs.metrics``) of the counters the timed code paths
+actually incremented.  The schema check requires every entry to be
+numeric, and two gates read specific counters: the cluster artifacts
+must show nonzero L1+L2 cache hits (the Zipfian repeat mix exists to
+exercise the two-level cache), and the mining artifacts must show the
+wavefront issuing fewer device calls than per-pattern dispatch.
+
 Exit code 0 = all gates green.  Used by scripts/ci.sh tier-2.
 """
 from __future__ import annotations
@@ -50,11 +58,13 @@ SCHEMAS = {
         "joined_steps_flat": int,
         "joined_steps_trie": int,
         "rounds": list,
+        "metrics": dict,
     },
     "BENCH_serving_smoke.json": {
         "bank_patterns": int,
         "server_qps": _NUM,
         "speedup_server": _NUM,
+        "metrics": dict,
     },
     "BENCH_streaming.json": {
         "window": int,
@@ -67,12 +77,14 @@ SCHEMAS = {
         "refreshes": int,
         "frontier_scans": int,
         "frontier_scans_skipped": int,
+        "metrics": dict,
     },
     "BENCH_streaming_smoke.json": {
         "window": int,
         "streamed_updates_per_sec": _NUM,
         "remine_updates_per_sec": _NUM,
         "speedup_streaming": _NUM,
+        "metrics": dict,
     },
     "BENCH_cluster.json": {
         "bank_patterns": int,
@@ -85,6 +97,8 @@ SCHEMAS = {
         "stream_hosts": int,
         "single_stream_updates_per_sec": _NUM,
         "sharded_stream_updates_per_sec": _NUM,
+        "cache_hit_rate": _NUM,
+        "metrics": dict,
     },
     "BENCH_cluster_smoke.json": {
         "bank_patterns": int,
@@ -92,6 +106,8 @@ SCHEMAS = {
         "divergences": int,
         "cluster_qps": dict,
         "sharded_stream_updates_per_sec": _NUM,
+        "cache_hit_rate": _NUM,
+        "metrics": dict,
     },
     "BENCH_mining.json": {
         "configs": list,
@@ -99,12 +115,14 @@ SCHEMAS = {
         "speedup_wavefront_median": _NUM,
         "device_call_reduction_median": _NUM,
         "patterns_per_sec_best": _NUM,
+        "metrics": dict,
     },
     "BENCH_mining_smoke.json": {
         "configs": list,
         "divergences": int,
         "speedup_wavefront_median": _NUM,
         "device_call_reduction_median": _NUM,
+        "metrics": dict,
     },
 }
 
@@ -134,6 +152,17 @@ def check_schema(name: str, payload: dict) -> None:
         if isinstance(val, _NUM) and not isinstance(val, bool) \
                 and val < 0:
             raise GateError(f"{name}: {key} = {val} is negative")
+    metrics = payload.get("metrics")
+    if metrics is not None:
+        # registry snapshots are flat {dotted.name: number}; a nested
+        # or non-numeric entry means the bench stopped writing real
+        # counter deltas
+        for key, val in metrics.items():
+            if not isinstance(val, _NUM) or isinstance(val, bool):
+                raise GateError(
+                    f"{name}: metrics[{key!r}] has type "
+                    f"{type(val).__name__}, expected a number"
+                )
 
 
 def check_invariants(name: str, payload: dict) -> None:
@@ -179,6 +208,19 @@ def check_invariants(name: str, payload: dict) -> None:
                     f"{name}: median device-call reduction {calls:.1f} "
                     "< 5.0 - the wavefront stopped packing patterns"
                 )
+        # counter-level gate (the metrics block): total wavefront
+        # device calls across the grid must stay below per-pattern's -
+        # the aggregate restatement of the per-config reduction gate,
+        # read from the registry counters the miners actually increment
+        m = payload["metrics"]
+        wf = m.get("mining.wavefront.n_device_calls", 0)
+        pp = m.get("mining.pattern.n_device_calls", 0)
+        if not (0 < wf < pp):
+            raise GateError(
+                f"{name}: metrics device-call counters out of order - "
+                f"wavefront {wf} must be nonzero and below "
+                f"per-pattern {pp}"
+            )
     if name in ("BENCH_cluster.json", "BENCH_cluster_smoke.json"):
         # the cluster's contract is exactness, not in-process speed:
         # the bench raises before writing on any divergence, so a
@@ -193,6 +235,19 @@ def check_invariants(name: str, payload: dict) -> None:
             raise GateError(
                 f"{name}: host_counts {payload['host_counts']} never "
                 "exercises a real multi-host split"
+            )
+        # counter-level gate (the metrics block): the Zipfian repeat
+        # mix must actually exercise the two-level cache - a hit rate
+        # pinned at 0 means the bench regressed to a one-shot mix or
+        # the L1/L2 path stopped being consulted
+        m = payload["metrics"]
+        hits = (m.get("cluster.router.l1_hits", 0)
+                + m.get("cluster.router.l2_hits", 0))
+        if hits <= 0:
+            raise GateError(
+                f"{name}: zero L1+L2 cache hits in the metrics block - "
+                "the Zipfian repeat mix no longer exercises the "
+                "two-level cache"
             )
 
 

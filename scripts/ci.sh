@@ -30,6 +30,25 @@
 #           miners over the same DB and hard-fails on ANY frequent-map
 #           divergence - the wavefront exactness gate.  Off in the
 #           fast lane.
+#   tier-6  CI_TIER6=0 skips   observability smoke (also off in the
+#           fast lane, CI_FAST=1): re-runs the cluster and mining
+#           smokes with --trace, then validates the recorded spans
+#           with scripts/trace_report.py --check (schema: every span
+#           needs a known category, non-negative ts/dur, >= 1 wall
+#           root; coverage: the phase-attribution table must account
+#           for >= 90% of traced wall time), and fails if any BENCH
+#           smoke artifact written this run is missing its metrics
+#           block.  Tracing is off by default everywhere else - the
+#           no-op path is property-tested to change nothing.
+#
+#           Reading a trace by hand:
+#             scripts/trace_report.py /tmp/trace.json          # tables
+#             scripts/trace_report.py t.jsonl --top 20         # more rows
+#             scripts/trace_report.py t.json --json            # machine-readable
+#             scripts/trace_report.py t.json --check \
+#                 --min-coverage 0.9                           # CI gate mode
+#           (.json traces are Chrome-trace format - load them in
+#           chrome://tracing / Perfetto for a timeline view.)
 #   gates   run with tier-2, but AFTER tiers 3-5 so the freshly
 #           written smoke artifacts are the ones validated:
 #           scripts/check_bench.py checks every BENCH_*.json schema,
@@ -74,6 +93,33 @@ fi
 if [[ "${CI_TIER5:-1}" != "0" ]]; then
     echo "[ci] tier-5: mining smoke (wavefront == per-pattern == host)"
     python benchmarks/bench_mining.py --smoke
+fi
+
+if [[ "${CI_TIER6:-1}" != "0" && "${CI_FAST:-0}" != "1" ]]; then
+    echo "[ci] tier-6: observability smoke (traced runs + span schema + metrics blocks)"
+    TRACE_DIR="$(mktemp -d)"
+    python benchmarks/bench_cluster.py --smoke --trace "$TRACE_DIR/cluster.json"
+    python benchmarks/bench_mining.py --smoke --trace "$TRACE_DIR/mining.jsonl"
+    python scripts/trace_report.py "$TRACE_DIR/cluster.json" --check --min-coverage 0.9
+    python scripts/trace_report.py "$TRACE_DIR/mining.jsonl" --check --min-coverage 0.9
+    python - <<'PY'
+import json, os, sys
+# every smoke artifact present after this run must carry the metrics
+# block check_bench gates on (flat numeric registry snapshot)
+bad = []
+for name in sorted(os.listdir(".")):
+    if not (name.startswith("BENCH_") and name.endswith("_smoke.json")):
+        continue
+    m = json.load(open(name)).get("metrics")
+    if not isinstance(m, dict) or not m or not all(
+            isinstance(v, (int, float)) and not isinstance(v, bool)
+            for v in m.values()):
+        bad.append(name)
+print("[ci] tier-6: metrics blocks " +
+      ("MISSING/MALFORMED in " + ", ".join(bad) if bad else "OK"))
+sys.exit(1 if bad else 0)
+PY
+    rm -rf "$TRACE_DIR"
 fi
 
 if [[ "${CI_TIER2:-1}" != "0" ]]; then

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.canonical import canonical_form, canonical_map
+from ..obs import trace
+from ..obs.metrics import MetricsRegistry
 from ..core.enumerate_host import Emb, apply_extension
 from ..core.gtrace import MiningResult
 from ..core.graphseq import Pattern, TRSeq, pattern_length, pattern_vertices
@@ -92,6 +94,8 @@ class AcceleratedMiner:
         dispatch: str = "wavefront",
         wave_patterns: int = 256,
         wave_rows: Optional[int] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        metrics_ns: str = "mining",
     ):
         assert dispatch in ("wavefront", "pattern"), dispatch
         self.db = db
@@ -106,9 +110,33 @@ class AcceleratedMiner:
         self.wave_rows = 4 * e_batch if wave_rows is None else wave_rows
         self.tdb: TokenDB = encode_db(db)
         self.tokens = jnp.asarray(self.tdb.tokens)
-        self.device_seconds = 0.0    # launch + execution (blocked)
-        self.dispatch_seconds = 0.0  # async launch only
-        self.n_device_calls = 0
+        # counters live in a registry (private by default; pass
+        # ``metrics=`` to accumulate across miner rebuilds, e.g. the
+        # streaming bank's incremental refreshes)
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._c_device_s = self.metrics.counter(
+            f"{metrics_ns}.device_seconds")
+        self._c_dispatch_s = self.metrics.counter(
+            f"{metrics_ns}.dispatch_seconds")
+        self._c_calls = self.metrics.counter(
+            f"{metrics_ns}.n_device_calls")
+        self._h_wave = self.metrics.histogram(
+            f"{metrics_ns}.wave_patterns")
+
+    # registry-backed views of the historical timing attributes
+    @property
+    def device_seconds(self) -> float:
+        """Launch + execution (blocked)."""
+        return self._c_device_s.value
+
+    @property
+    def dispatch_seconds(self) -> float:
+        """Async launch only."""
+        return self._c_dispatch_s.value
+
+    @property
+    def n_device_calls(self) -> int:
+        return self._c_calls.value
 
     # ------------------------------------------------------------- phases
     @staticmethod
@@ -189,10 +217,17 @@ class AcceleratedMiner:
                 jnp.asarray(valid), jnp.asarray(pid),
                 ex_j, nv_j, npat_j, mode_j,
             )
-            self.dispatch_seconds += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            self._c_dispatch_s.inc(t1 - t0)
             sigs.block_until_ready()  # async dispatch: launch != done
-            self.device_seconds += time.perf_counter() - t0
-            self.n_device_calls += 1
+            t2 = time.perf_counter()
+            self._c_device_s.inc(t2 - t0)
+            self._c_calls.inc()
+            # intervals are measured above regardless of tracing, so
+            # recording them cannot perturb the timing they describe
+            trace.add_complete("mining.dispatch", "dispatch",
+                               t0, t1 - t0, rows=int(Epad))
+            trace.add_complete("mining.device", "device", t1, t2 - t1)
             for (pi, sig), (gset, et) in aggregate_host_batch(
                 np.asarray(sigs), gid, pid
             ).items():
@@ -442,31 +477,38 @@ class AcceleratedMiner:
         )
         wavefront = self.dispatch == "wavefront"
         expansions_since_ckpt = 0
-        while pending:
-            items = self._take_slice(pending, max_len, wavefront)
-            if not items:
-                break  # guards drained the pool
-            res.n_extension_scans += len(items)
-            for kids in self.expand_children_batch(
-                items, min_support, rs=rs, want_embs=want
-            ):
-                for child, gids, child_embs in kids:
-                    if not rs and child in res.patterns:
-                        continue
-                    res.patterns[child] = len(gids)
-                    res.n_enumerated += 1
-                    pending.append((child, child_embs))
-            expansions_since_ckpt += len(items)
-            if (
-                checkpoint_path
-                and expansions_since_ckpt >= checkpoint_every
-            ):
-                save_state(
-                    checkpoint_path, res.patterns, list(pending),
-                    meta={"min_support": min_support, "rs": rs,
-                          "n_enumerated": res.n_enumerated},
-                )
-                expansions_since_ckpt = 0
+        with trace.root_or_span("mining.mine", rs=rs,
+                                min_support=min_support):
+            while pending:
+                items = self._take_slice(pending, max_len, wavefront)
+                if not items:
+                    break  # guards drained the pool
+                res.n_extension_scans += len(items)
+                self._h_wave.observe(len(items))
+                with trace.span("mining.wavefront",
+                                patterns=len(items)):
+                    for kids in self.expand_children_batch(
+                        items, min_support, rs=rs, want_embs=want
+                    ):
+                        for child, gids, child_embs in kids:
+                            if not rs and child in res.patterns:
+                                continue
+                            res.patterns[child] = len(gids)
+                            res.n_enumerated += 1
+                            pending.append((child, child_embs))
+                expansions_since_ckpt += len(items)
+                if (
+                    checkpoint_path
+                    and expansions_since_ckpt >= checkpoint_every
+                ):
+                    with trace.span("mining.checkpoint"):
+                        save_state(
+                            checkpoint_path, res.patterns,
+                            list(pending),
+                            meta={"min_support": min_support, "rs": rs,
+                                  "n_enumerated": res.n_enumerated},
+                        )
+                    expansions_since_ckpt = 0
         if checkpoint_path:
             save_state(
                 checkpoint_path, res.patterns, [],

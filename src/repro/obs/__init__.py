@@ -1,0 +1,40 @@
+"""Observability: the unified tracing + metrics layer.
+
+Every layer of the system - mining wavefront slices, serving join
+levels and the escalation ladder, streaming refresh/reconcile phases,
+cluster routing rounds - reports through this package:
+
+* ``metrics``  - ``MetricsRegistry``: typed counters / gauges /
+                 histograms under dotted namespaces, with cheap
+                 ``snapshot()`` / ``delta()`` / explicit-only
+                 ``reset()``.  The old ad-hoc ``stats`` dicts are now
+                 ``StatsView`` facades over a registry, so counters
+                 survive component rebuilds (a streaming
+                 ``refresh(full=True)`` recompile no longer zeroes its
+                 server's counters) and BENCH artifacts export a
+                 ``metrics`` block that ``scripts/check_bench.py``
+                 gates on.
+* ``trace``    - the span tracer: ``trace.span("serving.trie_level",
+                 cat="dispatch", level=k)`` regions bucketed into
+                 host / dispatch / device / cache, per-query and
+                 per-wavefront trace ids threaded through
+                 ``ClusterRouter.route -> ClusterHost.call ->
+                 PatternServer -> kernel dispatch`` by contextvar,
+                 Chrome-trace JSON + JSONL export.  Disabled by
+                 default with a property-tested no-op fast path:
+                 tracing on/off never changes results or device
+                 dispatch counts.
+
+``scripts/trace_report.py`` renders a phase-attribution table (self
+time per bucket, per subsystem, top spans) from a saved trace and
+doubles as the CI tier-6 trace-schema gate.
+"""
+from . import trace  # noqa: F401
+from .metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    StatsView,
+    global_registry,
+)

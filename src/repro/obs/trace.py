@@ -1,0 +1,238 @@
+"""Span tracer: phase-attributed wall time across mine/serve/stream/
+cluster, exported as Chrome-trace JSON or JSONL.
+
+The repo's performance questions ("where did the H4 cluster qps go?")
+need wall time *attributed*: how much of a routed drain was host
+bookkeeping vs kernel launch vs actual device execution vs cache
+lookups.  This module is that substrate:
+
+* ``span(name, cat=..., **args)`` - a context manager recording one
+  timed region.  ``cat`` is the attribution bucket (``"host"``,
+  ``"dispatch"``, ``"device"``, ``"cache"``); ``scripts/trace_report.py``
+  sums *self time* (duration minus nested child spans) per bucket, so
+  nesting never double-counts.
+* ``root_or_span(name, **args)`` - public entry points
+  (``ClusterRouter.route``, ``PatternServer.query``,
+  ``StreamingBank.observe/refresh``, ``AcceleratedMiner.mine_rs``)
+  open a *root* span (``cat="wall"``) carrying a fresh trace id when no
+  trace is active, and a plain nested span when one is - so a routed
+  query owns one trace id that threads through
+  ``ClusterRouter.route -> ClusterHost.call -> PatternServer ->
+  kernel dispatch`` via a contextvar, with zero plumbing in signatures.
+* ``add_complete(name, cat, start, duration)`` - record an
+  already-measured interval (the miner times dispatch vs
+  ``block_until_ready()`` with its own ``perf_counter`` pairs; the
+  tracer must not perturb that measurement).
+
+**Disabled is the default and the fast path**: ``span()`` returns a
+shared no-op context manager, nothing is recorded, no clocks are read,
+and - property-tested in tests/test_obs.py - results and device
+dispatch counts are bit-identical with tracing on, off, or absent.
+Tracing only ever *observes*: the one behavioural difference when
+enabled is extra ``block_until_ready()`` fences inside device spans
+(needed to split launch from execution time; they change timing, never
+results or dispatch counts).
+
+Export: ``save(path)`` writes Chrome ``traceEvents`` JSON for ``.json``
+paths (load in ``chrome://tracing`` / Perfetto) and one-span-per-line
+JSONL otherwise; ``scripts/trace_report.py`` reads both.
+"""
+from __future__ import annotations
+
+import contextvars
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+# attribution buckets trace_report.py understands; "wall" is reserved
+# for root spans (their duration IS the denominator of the report)
+CATEGORIES = ("host", "dispatch", "device", "cache", "wall")
+
+_current_trace: contextvars.ContextVar[Optional[int]] = \
+    contextvars.ContextVar("repro_obs_trace", default=None)
+
+
+class _NoopSpan:
+    """The disabled-tracing fast path: one shared, stateless context
+    manager."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+_NOOP = _NoopSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "name", "cat", "args", "_t0", "_token")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 args: Dict[str, Any], new_trace: bool):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        # a root span installs a fresh trace id for everything nested
+        self._token = (
+            _current_trace.set(tracer._next_trace_id())
+            if new_trace else None
+        )
+        self._t0 = time.perf_counter()
+
+    def __enter__(self) -> "_Span":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        t1 = time.perf_counter()
+        self._tracer._record(
+            self.name, self.cat, self._t0, t1 - self._t0, self.args
+        )
+        if self._token is not None:
+            _current_trace.reset(self._token)
+        return False
+
+
+class Tracer:
+    """Event buffer + clock base.  One module-level instance
+    (``tracer``) serves the whole process; everything here is plain
+    host Python."""
+
+    # runaway guard: a forgotten enabled tracer must not eat the heap
+    MAX_EVENTS = 2_000_000
+
+    def __init__(self) -> None:
+        self.enabled = False
+        self.events: List[Dict[str, Any]] = []
+        self.dropped = 0
+        self._t_base = time.perf_counter()
+        self._trace_seq = 0
+
+    # ------------------------------------------------------- lifecycle
+    def enable(self) -> None:
+        self.enabled = True
+        if not self.events:
+            self._t_base = time.perf_counter()
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def clear(self) -> None:
+        self.events = []
+        self.dropped = 0
+        self._trace_seq = 0
+        self._t_base = time.perf_counter()
+
+    def _next_trace_id(self) -> int:
+        self._trace_seq += 1
+        return self._trace_seq
+
+    # ------------------------------------------------------- recording
+    def _record(self, name: str, cat: str, t0: float, dur: float,
+                args: Dict[str, Any]) -> None:
+        if len(self.events) >= self.MAX_EVENTS:
+            self.dropped += 1
+            return
+        ev = {
+            "name": name,
+            "cat": cat,
+            # Chrome-trace convention: microseconds
+            "ts": (t0 - self._t_base) * 1e6,
+            "dur": dur * 1e6,
+            "trace": _current_trace.get(),
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def add_complete(self, name: str, cat: str, start: float,
+                     duration: float, **args: Any) -> None:
+        """Record an interval measured by the caller (``start`` is a
+        ``time.perf_counter()`` value, so it nests consistently with
+        context-manager spans)."""
+        if self.enabled:
+            self._record(name, cat, start, duration, args)
+
+    # --------------------------------------------------------- export
+    def chrome_events(self) -> List[Dict[str, Any]]:
+        out = []
+        for ev in self.events:
+            args = dict(ev.get("args", {}))
+            if ev["trace"] is not None:
+                args["trace"] = ev["trace"]
+            out.append({
+                "name": ev["name"], "cat": ev["cat"], "ph": "X",
+                "ts": ev["ts"], "dur": ev["dur"],
+                "pid": 0, "tid": 0, "args": args,
+            })
+        return out
+
+    def save(self, path: str) -> None:
+        """Chrome ``traceEvents`` JSON for ``.json`` paths, JSONL (one
+        span object per line) otherwise."""
+        if path.endswith(".json"):
+            with open(path, "w") as f:
+                json.dump({"traceEvents": self.chrome_events(),
+                           "displayTimeUnit": "ms"}, f)
+        else:
+            with open(path, "w") as f:
+                for ev in self.events:
+                    f.write(json.dumps(ev) + "\n")
+
+
+tracer = Tracer()
+
+
+def enabled() -> bool:
+    return tracer.enabled
+
+
+def enable() -> None:
+    tracer.enable()
+
+
+def disable() -> None:
+    tracer.disable()
+
+
+def clear() -> None:
+    tracer.clear()
+
+
+def save(path: str) -> None:
+    tracer.save(path)
+
+
+def current_trace() -> Optional[int]:
+    """The active trace id (None outside any root span)."""
+    return _current_trace.get()
+
+
+def span(name: str, cat: str = "host", **args: Any):
+    """A timed region attributed to bucket ``cat``.  No-op (shared
+    singleton, no clock read) while tracing is disabled."""
+    if not tracer.enabled:
+        return _NOOP
+    return _Span(tracer, name, cat, args, new_trace=False)
+
+
+def root_or_span(name: str, **args: Any):
+    """Entry-point span: opens a new trace (``cat="wall"``) when none
+    is active - per-query / per-wavefront trace ids are minted here -
+    and nests as a plain host span inside an existing trace (a routed
+    query reaching ``PatternServer.query`` stays in the route's
+    trace)."""
+    if not tracer.enabled:
+        return _NOOP
+    if _current_trace.get() is None:
+        return _Span(tracer, name, "wall", args, new_trace=True)
+    return _Span(tracer, name, "host", args, new_trace=False)
+
+
+def add_complete(name: str, cat: str, start: float, duration: float,
+                 **args: Any) -> None:
+    tracer.add_complete(name, cat, start, duration, **args)

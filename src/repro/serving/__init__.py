@@ -83,6 +83,19 @@ Module map:
                    (in-process simulated hosts, optionally device-
                    pinned), so every protocol is property-tested
                    bit-equal to its single-host counterpart.
+
+Observability (``repro.obs``, cross-cutting): every layer's counters
+live in a ``MetricsRegistry`` (``server.stats``, ``router.stats``, the
+streaming banks' ``stats`` are ``StatsView`` facades over it), so
+counters survive component rebuilds - a ``refresh(full=True)`` that
+recompiles the server or re-plans the router re-attaches by name and
+keeps accumulating; ``registry.snapshot()/delta()`` feed the BENCH
+artifacts' ``metrics`` blocks.  The span tracer (``repro.obs.trace``)
+threads one trace id per routed query / wavefront through
+``ClusterRouter.route -> ClusterHost.call -> PatternServer -> kernel
+dispatch``, splitting launch from blocked device time; it is off by
+default and property-tested to change nothing (tests/test_obs.py).
+Render a saved trace with ``scripts/trace_report.py``.
 """
 from .bank import (  # noqa: F401
     BankCapacityError,

@@ -78,6 +78,8 @@ import jax
 
 from ..core.graphseq import Pattern, TRSeq
 from ..mining.driver import AcceleratedMiner
+from ..obs import trace
+from ..obs.metrics import MetricsRegistry
 from ..mining.incremental import depth1_root, refresh_frontier, \
     subtree_dirty_rows
 from .bank import BankCapacityError, PatternBank, compile_bank, \
@@ -104,10 +106,11 @@ class ClusterHost:
     device: Optional[object] = None  # jax device pin (None = default)
 
     def call(self, fn, *args, **kw):
-        if self.device is None:
-            return fn(*args, **kw)
-        with jax.default_device(self.device):
-            return fn(*args, **kw)
+        with trace.span("cluster.host_call", host=self.hid):
+            if self.device is None:
+                return fn(*args, **kw)
+            with jax.default_device(self.device):
+                return fn(*args, **kw)
 
 
 def _make_hosts(
@@ -119,11 +122,17 @@ def _make_hosts(
     l2_size: int,
     devices: Optional[Sequence] = None,
     server_kw: Optional[dict] = None,
+    metrics: Optional[MetricsRegistry] = None,
 ) -> List[ClusterHost]:
     hosts = []
     for hid, rows in enumerate(placement.rows):
         shard = slice_bank(bank, rows)
+        # per-host namespaces on the shared registry: shard counters
+        # stay separate (ServingCluster.stats sums them), yet survive
+        # re-planning because the registry outlives the servers
         srv = PatternServer(shard, bank_layout=bank_layout,
+                            metrics=metrics,
+                            metrics_ns=f"serving.server.h{hid}",
                             **(server_kw or {}))
         hosts.append(ClusterHost(
             hid=hid, rows=rows, server=srv,
@@ -150,13 +159,16 @@ class ServingCluster:
         l1_size: int = 4096,
         l2_size: int = 8192,
         devices: Optional[Sequence] = None,
+        metrics: Optional[MetricsRegistry] = None,
         **server_kw,
     ):
         self.bank = bank
         self.n_hosts = n_hosts
         self.bank_layout = bank_layout
+        self.metrics = MetricsRegistry() if metrics is None else metrics
         self._mk = dict(l1_size=l1_size, l2_size=l2_size,
-                        devices=devices, server_kw=server_kw)
+                        devices=devices, server_kw=server_kw,
+                        metrics=self.metrics)
         self.placement = plan_placement(
             bank, n_hosts, layout=bank_layout, trie=trie
         )
@@ -165,7 +177,7 @@ class ServingCluster:
         self.router = ClusterRouter(
             self.hosts, n_patterns=bank.n_patterns,
             support=bank.support[: bank.n_patterns].astype(np.int64),
-            topk=topk,
+            topk=topk, metrics=self.metrics,
         )
 
     # ------------------------------------------------------------ serving
@@ -298,21 +310,27 @@ class ShardedStreamingBank:
                      for _ in range(n_hosts)]
         self._t = 0  # global arrival counter
         self._any_change = False
+        # one registry for the whole topology: the serving plane
+        # (shard servers + router) is rebuilt on every re-plan, but its
+        # counters re-attach here and accumulate - refresh(full=True)
+        # no longer zeroes router hit rates
+        self.metrics = MetricsRegistry()
         self.cluster = self._make_cluster()
-        self.stats: Dict[str, int] = {
-            "arrivals": 0, "evictions": 0, "observe_batches": 0,
-            "tombstoned": 0, "recovered": 0, "added": 0,
-            "refreshes": 0, "full_refreshes": 0,
-            "allreduces": 0, "dirty_subtrees": 0,
-            "frontier_scans": 0, "frontier_scans_skipped": 0,
-            "frontier_retained": 0,
-        }
+        self.stats = self.metrics.view("streaming.sharded", keys=[
+            "arrivals", "evictions", "observe_batches",
+            "tombstoned", "recovered", "added",
+            "refreshes", "full_refreshes",
+            "allreduces", "dirty_subtrees",
+            "frontier_scans", "frontier_scans_skipped",
+            "frontier_retained",
+        ])
 
     # ------------------------------------------------------------ wiring
     def _make_cluster(self) -> ServingCluster:
         return ServingCluster(
             self.bank, self.n_hosts, bank_layout=self.bank_layout,
-            devices=self.devices, **self.server_kw,
+            devices=self.devices, metrics=self.metrics,
+            **self.server_kw,
         )
 
     def _rebuild_serving(self) -> None:
@@ -397,22 +415,24 @@ class ShardedStreamingBank:
         batch = list(batch)
         if not batch:
             return
-        rows = self.cluster.exact_rows(batch)
-        evicted = 0
-        for seq, row in zip(batch, rows):
-            hid = self._t % self.n_hosts
-            slot = (self._t // self.n_hosts) % self._w_local
-            r = self.ring[hid]
-            if r.gidx[slot] >= 0:
-                r.psum -= r.bits[slot]
-                evicted += 1
-            r.seqs[slot] = seq
-            r.bits[slot] = row
-            r.gidx[slot] = self._t
-            r.fresh[slot] = True
-            r.psum += row
-            self._t += 1
-        self._any_change = True
+        with trace.root_or_span("streaming.observe", n=len(batch)):
+            rows = self.cluster.exact_rows(batch)
+            evicted = 0
+            with trace.span("streaming.ring"):
+                for seq, row in zip(batch, rows):
+                    hid = self._t % self.n_hosts
+                    slot = (self._t // self.n_hosts) % self._w_local
+                    r = self.ring[hid]
+                    if r.gidx[slot] >= 0:
+                        r.psum -= r.bits[slot]
+                        evicted += 1
+                    r.seqs[slot] = seq
+                    r.bits[slot] = row
+                    r.gidx[slot] = self._t
+                    r.fresh[slot] = True
+                    r.psum += row
+                    self._t += 1
+            self._any_change = True
         self.stats["arrivals"] += len(batch)
         self.stats["evictions"] += evicted
         self.stats["observe_batches"] += 1
@@ -447,38 +467,49 @@ class ShardedStreamingBank:
         the exact global view, extend/recompile the bank, cut
         tombstones, and broadcast the new masks/placement to every
         host.  Returns the exact frequent map (== batch re-mine)."""
-        self.support = self._allreduce_support()
-        self.cluster.router.support = self.support
-        win = self._window_slots()
-        seqs = [self.ring[h].seqs[s] for _, h, s in win]
-        if full:
-            return self._refresh_full(seqs, win)
-        if not self._any_change:
-            return self._frequent_from(self.support)
-        active_rows = self.active if self.tombstones else \
-            np.ones_like(self.active)
-        active_map = {
-            self.bank.patterns[i]: int(self.support[i])
-            for i in np.nonzero(active_rows)[0]
-        }
-        droots = self._allreduce_dirty_subtrees()
-        self.stats["dirty_subtrees"] += len(droots)
-        dirty_mask = subtree_dirty_rows(self.bank.patterns, droots)
-        dirty_set = {
-            self.bank.patterns[i]
-            for i in np.nonzero(dirty_mask & active_rows)[0]
-        }
-        fr = refresh_frontier(
-            seqs, self.minsup, active=active_map, dirty=dirty_set,
-            any_change=True, max_len=self.max_len, **self.miner_kw,
-        )
-        self.stats["refreshes"] += 1
-        self.stats["frontier_scans"] += fr.scans
-        self.stats["frontier_scans_skipped"] += fr.scans_skipped
-        self.stats["frontier_retained"] += fr.retained
-        return self._reconcile(seqs, win, fr.patterns, fr.gids)
+        with trace.root_or_span("streaming.refresh", full=full):
+            with trace.span("cluster.allreduce"):
+                self.support = self._allreduce_support()
+            self.cluster.router.support = self.support
+            win = self._window_slots()
+            seqs = [self.ring[h].seqs[s] for _, h, s in win]
+            if full:
+                return self._refresh_full(seqs, win)
+            if not self._any_change:
+                return self._frequent_from(self.support)
+            active_rows = self.active if self.tombstones else \
+                np.ones_like(self.active)
+            active_map = {
+                self.bank.patterns[i]: int(self.support[i])
+                for i in np.nonzero(active_rows)[0]
+            }
+            with trace.span("cluster.allreduce"):
+                droots = self._allreduce_dirty_subtrees()
+            self.stats["dirty_subtrees"] += len(droots)
+            dirty_mask = subtree_dirty_rows(self.bank.patterns, droots)
+            dirty_set = {
+                self.bank.patterns[i]
+                for i in np.nonzero(dirty_mask & active_rows)[0]
+            }
+            with trace.span("streaming.frontier"):
+                fr = refresh_frontier(
+                    seqs, self.minsup, active=active_map,
+                    dirty=dirty_set, any_change=True,
+                    max_len=self.max_len, metrics=self.metrics,
+                    **self.miner_kw,
+                )
+            self.stats["refreshes"] += 1
+            self.stats["frontier_scans"] += fr.scans
+            self.stats["frontier_scans_skipped"] += fr.scans_skipped
+            self.stats["frontier_retained"] += fr.retained
+            return self._reconcile(seqs, win, fr.patterns, fr.gids)
 
     def _reconcile(self, seqs, win, mined, gids) -> Dict[Pattern, int]:
+        with trace.span("streaming.reconcile"):
+            return self._reconcile_inner(seqs, win, mined, gids)
+
+    def _reconcile_inner(self, seqs, win, mined, gids
+                         ) -> Dict[Pattern, int]:
         known = {p: i for i, p in enumerate(self.bank.patterns)}
         new = {p: s for p, s in mined.items() if p not in known}
         if new and not self.bank.n_patterns:
@@ -540,10 +571,16 @@ class ShardedStreamingBank:
         """Re-mine + recompile + recount everything (escape hatch /
         tombstone compaction), then recount every ring slice through
         the fresh unmasked shard servers."""
+        with trace.span("streaming.full_refresh"):
+            return self._refresh_full_inner(seqs, win, mined)
+
+    def _refresh_full_inner(self, seqs, win, mined=None
+                            ) -> Dict[Pattern, int]:
         self.stats["full_refreshes"] += 1
         if mined is None:
             if seqs:
-                miner = AcceleratedMiner(seqs, **self.miner_kw)
+                miner = AcceleratedMiner(
+                    seqs, metrics=self.metrics, **self.miner_kw)
                 mined = miner.mine_rs(
                     self.minsup, max_len=self.max_len).patterns
             else:

@@ -44,6 +44,8 @@ from typing import Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from ..core.graphseq import TRSeq
+from ..obs import trace
+from ..obs.metrics import MetricsRegistry
 from .bank import PatternBank, sequence_fingerprint
 from .server import QueryResult, score_topk
 from .trie import TrieBank, build_trie
@@ -114,16 +116,22 @@ class ClusterRouter:
         n_patterns: int,
         support: np.ndarray,       # live scoring supports, global order
         topk: int = 10,
+        metrics: Optional[MetricsRegistry] = None,
+        metrics_ns: str = "cluster.router",
     ):
         self.hosts = list(hosts)
         self.n_patterns = n_patterns
         self.support = support
         self.topk = topk
         self._row_mask: Optional[np.ndarray] = None  # None = all active
-        self.stats: Dict[str, int] = {
-            "queries": 0, "l1_hits": 0, "l2_hits": 0, "misses": 0,
-            "shard_batches": 0, "mask_patches": 0, "mask_clears": 0,
-        }
+        # registry-backed: pass ``metrics=`` to keep accumulating across
+        # router rebuilds (the sharded streaming bank re-plans placement
+        # on every full refresh; its hit counters must survive that)
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.stats = self.metrics.view(metrics_ns, keys=[
+            "queries", "l1_hits", "l2_hits", "misses",
+            "shard_batches", "mask_patches", "mask_clears",
+        ])
 
     # ------------------------------------------------------------- cache
     def owner(self, fp: str) -> int:
@@ -178,12 +186,13 @@ class ClusterRouter:
         out = np.zeros((len(seqs), self.n_patterns), bool)
         if not len(seqs):
             return out
-        for h in self.hosts:
-            if not len(h.rows):
-                continue  # empty shard: no rows to answer
-            shard = h.call(h.server.exact_rows, seqs)
-            out[:, h.rows] = shard[:, : len(h.rows)]
-            self.stats["shard_batches"] += 1
+        with trace.span("cluster.join", n=len(seqs)):
+            for h in self.hosts:
+                if not len(h.rows):
+                    continue  # empty shard: no rows to answer
+                shard = h.call(h.server.exact_rows, seqs)
+                out[:, h.rows] = shard[:, : len(h.rows)]
+                self.stats["shard_batches"] += 1
         return out
 
     # ------------------------------------------------------------- route
@@ -200,56 +209,66 @@ class ClusterRouter:
         Returns per-host results in request order, bit-equal to a
         single-host ``PatternServer.query`` over the unsharded bank."""
         k = self.topk if k is None else k
-        fps: Dict[int, List[str]] = {}
-        rows: Dict[str, Optional[np.ndarray]] = {}
-        cached: Dict[str, bool] = {}
-        arrival_hosts: Dict[str, set] = {}
-        miss_fps: List[str] = []
-        miss_seqs: List[TRSeq] = []
-        for hid, seqs in requests.items():
-            host = self.hosts[hid]
-            fps[hid] = hfps = [sequence_fingerprint(s) for s in seqs]
-            self.stats["queries"] += len(seqs)
-            for fp, s in zip(hfps, seqs):
-                arrival_hosts.setdefault(fp, set()).add(hid)
-                if fp in rows:
-                    continue
-                if fp in host.l1:
-                    host.l1.move_to_end(fp)
-                    rows[fp] = host.l1[fp]
-                    cached[fp] = True
-                    self.stats["l1_hits"] += 1
-                    continue
-                own = self.hosts[self.owner(fp)]
-                if fp in own.l2:
-                    own.l2.move_to_end(fp)
-                    rows[fp] = own.l2[fp]
-                    cached[fp] = True
-                    self.stats["l2_hits"] += 1
-                    continue
-                rows[fp] = None  # placeholder keeps first-seen order
-                cached[fp] = False
-                miss_fps.append(fp)
-                miss_seqs.append(s)
-        if miss_seqs:
-            self.stats["misses"] += len(miss_seqs)
-            got = self.joined_rows(miss_seqs)
-            for i, fp in enumerate(miss_fps):
-                rows[fp] = got[i]
-                own = self.hosts[self.owner(fp)]
-                _cache_put(own.l2, own.l2_size, fp, got[i])
-        # every resolved fingerprint lands in its arrival hosts' L1s
-        for fp, hids in arrival_hosts.items():
-            for hid in hids:
-                host = self.hosts[hid]
-                _cache_put(host.l1, host.l1_size, fp, rows[fp])
-        return {
-            hid: [
-                QueryResult(
-                    fingerprint=fp, contained=rows[fp],
-                    topk=self._score(rows[fp], k), cached=cached[fp],
-                )
-                for fp in fps[hid]
-            ]
-            for hid in requests
-        }
+        with trace.root_or_span(
+                "cluster.route",
+                n=sum(len(s) for s in requests.values())):
+            fps: Dict[int, List[str]] = {}
+            rows: Dict[str, Optional[np.ndarray]] = {}
+            cached: Dict[str, bool] = {}
+            arrival_hosts: Dict[str, set] = {}
+            miss_fps: List[str] = []
+            miss_seqs: List[TRSeq] = []
+            with trace.span("cluster.cache", cat="cache"):
+                for hid, seqs in requests.items():
+                    host = self.hosts[hid]
+                    fps[hid] = hfps = [
+                        sequence_fingerprint(s) for s in seqs
+                    ]
+                    self.stats["queries"] += len(seqs)
+                    for fp, s in zip(hfps, seqs):
+                        arrival_hosts.setdefault(fp, set()).add(hid)
+                        if fp in rows:
+                            continue
+                        if fp in host.l1:
+                            host.l1.move_to_end(fp)
+                            rows[fp] = host.l1[fp]
+                            cached[fp] = True
+                            self.stats["l1_hits"] += 1
+                            continue
+                        own = self.hosts[self.owner(fp)]
+                        if fp in own.l2:
+                            own.l2.move_to_end(fp)
+                            rows[fp] = own.l2[fp]
+                            cached[fp] = True
+                            self.stats["l2_hits"] += 1
+                            continue
+                        rows[fp] = None  # placeholder: first-seen order
+                        cached[fp] = False
+                        miss_fps.append(fp)
+                        miss_seqs.append(s)
+            if miss_seqs:
+                self.stats["misses"] += len(miss_seqs)
+                got = self.joined_rows(miss_seqs)
+                with trace.span("cluster.cache_fill", cat="cache"):
+                    for i, fp in enumerate(miss_fps):
+                        rows[fp] = got[i]
+                        own = self.hosts[self.owner(fp)]
+                        _cache_put(own.l2, own.l2_size, fp, got[i])
+            with trace.span("cluster.finalize"):
+                # every resolved fingerprint lands in its arrival
+                # hosts' L1s
+                for fp, hids in arrival_hosts.items():
+                    for hid in hids:
+                        host = self.hosts[hid]
+                        _cache_put(host.l1, host.l1_size, fp, rows[fp])
+                return {
+                    hid: [
+                        QueryResult(
+                            fingerprint=fp, contained=rows[fp],
+                            topk=self._score(rows[fp], k),
+                            cached=cached[fp],
+                        )
+                        for fp in fps[hid]
+                    ]
+                    for hid in requests
+                }

@@ -33,15 +33,19 @@ Two bank layouts share all of the above (``bank_layout=``):
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.containment import contains
 from ..core.graphseq import TRSeq
 from ..mining.encoding import encode_db
+from ..obs import trace
+from ..obs.metrics import MetricsRegistry
 from .bank import PatternBank, sequence_fingerprint
 from .batch import (
     index_and_node_prescreen,
@@ -103,6 +107,8 @@ class PatternServer:
         block_g: int = 64,
         bank_layout: str = "flat",
         trie: Optional[TrieBank] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        metrics_ns: str = "serving.server",
     ):
         self.bank = bank
         self.emax = emax
@@ -174,14 +180,33 @@ class PatternServer:
         self._cache: "OrderedDict[str, np.ndarray]" = OrderedDict()
         # pairs_* count (sequence, pattern) prescreen pairs (flat
         # layout); cells_* count (sequence, trie node) prescreen cells
-        # (trie layout) - deliberately distinct keys, the units differ
-        self.stats: Dict[str, int] = {
-            "queries": 0, "cache_hits": 0, "device_batches": 0,
-            "pairs_possible": 0, "pairs_prescreened": 0,
-            "cells_possible": 0, "cells_prescreened": 0,
-            "joined_steps": 0,
-            "escalated_cells": 0, "host_fallback_cells": 0,
-        }
+        # (trie layout) - deliberately distinct keys, the units differ.
+        # Counters live in a registry (private unless ``metrics=`` is
+        # passed), so a caller that rebuilds its server on a shared
+        # registry keeps accumulating instead of silently zeroing.
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.stats = self.metrics.view(metrics_ns, keys=[
+            "queries", "cache_hits", "device_batches",
+            "pairs_possible", "pairs_prescreened",
+            "cells_possible", "cells_prescreened",
+            "joined_steps",
+            "escalated_cells", "host_fallback_cells",
+        ])
+
+    # ------------------------------------------------------------ tracing
+    @staticmethod
+    def _fence(name: str, t0: float, out, **args) -> None:
+        """Tracing-only launch/execution split for one async device
+        call: when tracing is on, fence the dispatch and record both
+        halves.  When off this returns before reading any clock - the
+        disabled path never blocks, so results, dispatch counts, and
+        async overlap are untouched."""
+        if trace.enabled():
+            t1 = time.perf_counter()
+            jax.block_until_ready(out)
+            t2 = time.perf_counter()
+            trace.add_complete(name, "dispatch", t0, t1 - t0, **args)
+            trace.add_complete(name + ".device", "device", t1, t2 - t1)
 
     # ------------------------------------------------------------- masking
     def set_row_mask(self, active: Optional[np.ndarray]) -> None:
@@ -229,30 +254,41 @@ class PatternServer:
         maintains per-sequence window bitmaps, so every arrival must be
         answered fresh and row-aligned)."""
         out = np.zeros((len(seqs), self.bank.n_patterns), bool)
-        for start in range(0, len(seqs), self.max_batch):
-            chunk = list(seqs[start : start + self.max_batch])
-            out[start : start + len(chunk)] = self._run_batch(chunk)
+        with trace.root_or_span("serving.exact_rows", n=len(seqs)):
+            for start in range(0, len(seqs), self.max_batch):
+                chunk = list(seqs[start : start + self.max_batch])
+                out[start : start + len(chunk)] = self._run_batch(chunk)
         return out
 
     def _run_batch(self, seqs: List[TRSeq]) -> np.ndarray:
         """Exact containment rows [len(seqs), n_patterns] for one chunk."""
         assert len(seqs) <= self.max_batch
         if self.bank_layout == "trie":
-            return self._run_batch_trie(seqs)
+            with trace.span("serving.batch", n=len(seqs),
+                            layout="trie"):
+                return self._run_batch_trie(seqs)
+        with trace.span("serving.batch", n=len(seqs), layout="flat"):
+            return self._run_batch_flat(seqs)
+
+    def _run_batch_flat(self, seqs: List[TRSeq]) -> np.ndarray:
         bank = self.bank
-        tdb = encode_db(
-            seqs,
-            pad_to=_pow2(max(
-                1, max(sum(len(it) for it in s) for s in seqs)
-            )),
-            pad_seqs_to=_pow2(len(seqs)),
-        )
-        tokens = jnp.asarray(tdb.tokens)
-        tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
+        with trace.span("serving.encode", n=len(seqs)):
+            tdb = encode_db(
+                seqs,
+                pad_to=_pow2(max(
+                    1, max(sum(len(it) for it in s) for s in seqs)
+                )),
+                pad_seqs_to=_pow2(len(seqs)),
+            )
+            tokens = jnp.asarray(tdb.tokens)
+            tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
         # one index build per batch, shared by every group join below
+        t0 = time.perf_counter()
         order, start, count, possible = index_and_prescreen(
             tokens, self._req, n_label_keys=bank.n_label_keys
         )
+        self._fence("serving.prescreen", t0,
+                    (order, start, count, possible))
         possible = np.asarray(possible)[: len(seqs), : bank.n_patterns]
         self.stats["device_batches"] += 1
         self.stats["pairs_possible"] += int(possible.sum())
@@ -275,6 +311,7 @@ class PatternServer:
             bi = np.zeros(npad, np.int32)
             pi = np.zeros(npad, np.int32)
             bi[:n], pi[:n] = b_idx, g_idx
+            t0 = time.perf_counter()
             c, o = pair_contains_indexed(
                 tokens, order, start, count, steps_g,
                 jnp.asarray(bi), jnp.asarray(pi),
@@ -282,6 +319,8 @@ class PatternServer:
                 use_kernel=self.use_kernel, block_g=self.block_g,
                 uniform_length=True,
             )
+            self._fence("serving.join", t0, (c, o),
+                        steps=int(steps_g.shape[1]), cells=n)
             p_global = rows[g_idx]
             contained[b_idx, p_global] = np.array(c)[:n]
             ovf_out[b_idx, p_global] = np.array(o)[:n]
@@ -315,9 +354,10 @@ class PatternServer:
             else:
                 self._escalate_flat(tokens, order, start, count, tmax,
                                     contained, ovf)
-        for b, p in zip(*np.nonzero(ovf & ~contained)):
-            contained[b, p] = contains(bank.patterns[p], seqs[b])
-            self.stats["host_fallback_cells"] += 1
+        with trace.span("serving.oracle"):
+            for b, p in zip(*np.nonzero(ovf & ~contained)):
+                contained[b, p] = contains(bank.patterns[p], seqs[b])
+                self.stats["host_fallback_cells"] += 1
 
     def _escalate_flat(self, tokens, order, start, count, tmax,
                        contained, ovf):
@@ -336,6 +376,7 @@ class PatternServer:
             bi = np.zeros(mpad, np.int32)
             pi = np.zeros(mpad, np.int32)
             bi[:m], pi[:m] = ub, self._row_pos[up]
+            t0 = time.perf_counter()
             c2, o2 = pair_contains_indexed(
                 tokens, order, start, count, steps_g,
                 jnp.asarray(bi), jnp.asarray(pi),
@@ -343,6 +384,8 @@ class PatternServer:
                 use_kernel=self.use_kernel, block_g=self.block_g,
                 uniform_length=True,
             )
+            self._fence("serving.escalate.join", t0, (c2, o2),
+                        cells=m)
             contained[ub, up] = np.asarray(c2)[:m]
             ovf[ub, up] = np.asarray(o2)[:m]
             self.stats["escalated_cells"] += m
@@ -389,6 +432,7 @@ class PatternServer:
             kw = dict(emax=self.emax_retry, tmax=tmax,
                       use_kernel=self.use_kernel, block_g=self.block_g,
                       compact=True)
+            t0 = time.perf_counter()
             if d == 0:
                 out = trie_root_advance(
                     tokens, order, start, count, jnp.asarray(cells),
@@ -402,6 +446,8 @@ class PatternServer:
                     tokens, order, start, count, *prev,
                     jnp.asarray(cells), **kw,
                 )
+            self._fence("serving.escalate.trie_level", t0, out,
+                        level=d, cells=n_cells)
             phi, psi, valid, acc, ovf_state, ovf_term = out
             prev = (phi, psi, valid, ovf_state)
             cell_pos = np.full((B0, len(lv["nodes"])), -1, np.int64)
@@ -437,18 +483,22 @@ class PatternServer:
         contained = np.zeros((B0, bank.n_patterns), bool)
         if not self._tlevels or not bank.n_patterns:
             return contained
-        tdb = encode_db(
-            seqs,
-            pad_to=_pow2(max(
-                1, max(sum(len(it) for it in s) for s in seqs)
-            )),
-            pad_seqs_to=_pow2(len(seqs)),
-        )
-        tokens = jnp.asarray(tdb.tokens)
-        tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
+        with trace.span("serving.encode", n=len(seqs)):
+            tdb = encode_db(
+                seqs,
+                pad_to=_pow2(max(
+                    1, max(sum(len(it) for it in s) for s in seqs)
+                )),
+                pad_seqs_to=_pow2(len(seqs)),
+            )
+            tokens = jnp.asarray(tdb.tokens)
+            tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
+        t0 = time.perf_counter()
         order, start, count, possible = index_and_node_prescreen(
             tokens, self._node_req, n_label_keys=bank.n_label_keys
         )
+        self._fence("serving.prescreen", t0,
+                    (order, start, count, possible))
         poss = np.asarray(possible)[:B0]
         self.stats["device_batches"] += 1
         # node cells, not pattern pairs: a pattern spans several nodes,
@@ -475,63 +525,72 @@ class PatternServer:
             kw = dict(emax=self.emax, tmax=tmax,
                       use_kernel=self.use_kernel, block_g=self.block_g,
                       compact=compact)
+            t0 = time.perf_counter()
             if d == 0:
-                return trie_root_advance(
+                out = trie_root_advance(
                     tokens, order, start, count, jnp.asarray(cells),
                     ni=D, nv=bank.nv, **kw,
                 )
-            par = pos_prev[b_idx, lv["parent_pos"][n_idx]]
-            assert (par >= 0).all(), "parent cell pruned below child"
-            cells[:n, 1] = par
-            return trie_level_advance_gather(
-                tokens, order, start, count, *prev,
-                jnp.asarray(cells), **kw,
-            )
+            else:
+                par = pos_prev[b_idx, lv["parent_pos"][n_idx]]
+                assert (par >= 0).all(), "parent cell pruned below child"
+                cells[:n, 1] = par
+                out = trie_level_advance_gather(
+                    tokens, order, start, count, *prev,
+                    jnp.asarray(cells), **kw,
+                )
+            self._fence("serving.trie_advance", t0, out,
+                        level=d, cells=n)
+            return out
 
         for d, lv in enumerate(self._tlevels):
             act = poss[:, lv["nodes"]]
             b_idx, n_idx = np.nonzero(act)
             if not len(b_idx):
                 break  # prescreen is monotone: no deeper cell survives
-            is_leaf = lv["leaf"][n_idx]
-            lb, ln = b_idx[is_leaf], n_idx[is_leaf]
-            ib, inn = b_idx[~is_leaf], n_idx[~is_leaf]
-            # ---- leaf cells: compaction-free accept test.  Depth-1
-            # leaves skip the join entirely: the node prescreen IS the
-            # exact containment test for single-TR patterns (a matching
-            # -key token always embeds under an empty psi).
-            if len(lb):  # every leaf node is some pattern's terminal
-                cell_leaf = np.full((B0, len(lv["nodes"])), -1, np.int64)
-                cell_leaf[lb, ln] = np.arange(len(lb))
-                sub = cell_leaf[:, lv["term_pos_leaf"]]
-                if d == 0:
-                    contained[:, lv["term_rows_leaf"]] = sub >= 0
+            with trace.span("serving.trie_level", level=d,
+                            cells=len(b_idx)):
+                is_leaf = lv["leaf"][n_idx]
+                lb, ln = b_idx[is_leaf], n_idx[is_leaf]
+                ib, inn = b_idx[~is_leaf], n_idx[~is_leaf]
+                # ---- leaf cells: compaction-free accept test.  Depth-1
+                # leaves skip the join entirely: the node prescreen IS
+                # the exact containment test for single-TR patterns (a
+                # matching-key token always embeds under an empty psi).
+                if len(lb):  # every leaf is some pattern's terminal
+                    cell_leaf = np.full(
+                        (B0, len(lv["nodes"])), -1, np.int64)
+                    cell_leaf[lb, ln] = np.arange(len(lb))
+                    sub = cell_leaf[:, lv["term_pos_leaf"]]
+                    if d == 0:
+                        contained[:, lv["term_rows_leaf"]] = sub >= 0
+                    else:
+                        self.stats["joined_steps"] += len(lb)
+                        acc, ovf = _cells(lb, ln, lv, d, compact=False)
+                        fetch.append((lv["term_rows_leaf"], sub, acc,
+                                      ovf, len(lb)))
+                # ---- internal cells: compacted frontiers seed children
+                n_int = len(ib)
+                if n_int:
+                    self.stats["joined_steps"] += n_int
+                    phi, psi, valid, acc, ovf_state, ovf_term = _cells(
+                        ib, inn, lv, d, compact=True
+                    )
+                    # children inherit the full path overflow; a
+                    # terminal ending at this node is undecided only via
+                    # ovf_term (its accept bit is exact regardless of
+                    # what this step's compaction dropped)
+                    prev = (phi, psi, valid, ovf_state)
+                    cell_int = np.full(
+                        (B0, len(lv["nodes"])), -1, np.int64)
+                    cell_int[ib, inn] = np.arange(n_int)
+                    pos_prev = cell_int
+                    if len(lv["term_rows_int"]):
+                        sub = cell_int[:, lv["term_pos_int"]]
+                        fetch.append((lv["term_rows_int"], sub, acc,
+                                      ovf_term, n_int))
                 else:
-                    self.stats["joined_steps"] += len(lb)
-                    acc, ovf = _cells(lb, ln, lv, d, compact=False)
-                    fetch.append((lv["term_rows_leaf"], sub, acc, ovf,
-                                  len(lb)))
-            # ---- internal cells: compacted frontiers seed the children
-            n_int = len(ib)
-            if n_int:
-                self.stats["joined_steps"] += n_int
-                phi, psi, valid, acc, ovf_state, ovf_term = _cells(
-                    ib, inn, lv, d, compact=True
-                )
-                # children inherit the full path overflow; a terminal
-                # ending at this node is undecided only via ovf_term
-                # (its accept bit is exact regardless of what this
-                # step's compaction dropped)
-                prev = (phi, psi, valid, ovf_state)
-                cell_int = np.full((B0, len(lv["nodes"])), -1, np.int64)
-                cell_int[ib, inn] = np.arange(n_int)
-                pos_prev = cell_int
-                if len(lv["term_rows_int"]):
-                    sub = cell_int[:, lv["term_pos_int"]]
-                    fetch.append((lv["term_rows_int"], sub, acc,
-                                  ovf_term, n_int))
-            else:
-                break  # no internal frontier: nothing seeds deeper
+                    break  # no internal frontier: nothing seeds deeper
         for rows, sub, acc, ovf, n in fetch:
             acc_np = np.asarray(acc)[:n]
             ovf_np = np.asarray(ovf)[:n]
@@ -558,39 +617,44 @@ class PatternServer:
     ) -> List[QueryResult]:
         k = self.topk if k is None else k
         self.stats["queries"] += len(seqs)
-        fps = [sequence_fingerprint(s) for s in seqs]
-        rows: Dict[str, np.ndarray] = {}
-        cached: Dict[str, bool] = {}
-        miss_fps: List[str] = []
-        miss_seqs: List[TRSeq] = []
-        for fp, s in zip(fps, seqs):
-            if fp in rows:
-                continue
-            if fp in self._cache:
-                self._cache.move_to_end(fp)
-                rows[fp] = self._cache[fp]
-                cached[fp] = True
-                self.stats["cache_hits"] += 1
-            else:
-                rows[fp] = None  # placeholder, preserves first-seen order
-                cached[fp] = False
-                miss_fps.append(fp)
-                miss_seqs.append(s)
-        for start in range(0, len(miss_seqs), self.max_batch):
-            chunk = miss_seqs[start : start + self.max_batch]
-            got = self._run_batch(chunk)
-            for i, fp in enumerate(miss_fps[start : start + len(chunk)]):
-                rows[fp] = got[i]
-                self._cache[fp] = got[i]
-                while len(self._cache) > self.cache_size:
-                    self._cache.popitem(last=False)
-        return [
-            QueryResult(
-                fingerprint=fp, contained=rows[fp],
-                topk=self._score(rows[fp], k), cached=cached[fp],
-            )
-            for fp in fps
-        ]
+        with trace.root_or_span("serving.query", n=len(seqs)):
+            rows: Dict[str, np.ndarray] = {}
+            cached: Dict[str, bool] = {}
+            miss_fps: List[str] = []
+            miss_seqs: List[TRSeq] = []
+            with trace.span("serving.cache", cat="cache"):
+                fps = [sequence_fingerprint(s) for s in seqs]
+                for fp, s in zip(fps, seqs):
+                    if fp in rows:
+                        continue
+                    if fp in self._cache:
+                        self._cache.move_to_end(fp)
+                        rows[fp] = self._cache[fp]
+                        cached[fp] = True
+                        self.stats["cache_hits"] += 1
+                    else:
+                        # placeholder, preserves first-seen order
+                        rows[fp] = None
+                        cached[fp] = False
+                        miss_fps.append(fp)
+                        miss_seqs.append(s)
+            for start in range(0, len(miss_seqs), self.max_batch):
+                chunk = miss_seqs[start : start + self.max_batch]
+                got = self._run_batch(chunk)
+                for i, fp in enumerate(
+                        miss_fps[start : start + len(chunk)]):
+                    rows[fp] = got[i]
+                    self._cache[fp] = got[i]
+                    while len(self._cache) > self.cache_size:
+                        self._cache.popitem(last=False)
+            with trace.span("serving.finalize"):
+                return [
+                    QueryResult(
+                        fingerprint=fp, contained=rows[fp],
+                        topk=self._score(rows[fp], k), cached=cached[fp],
+                    )
+                    for fp in fps
+                ]
 
     def query_one(self, seq: TRSeq, k: Optional[int] = None) -> QueryResult:
         return self.query([seq], k)[0]

@@ -80,6 +80,8 @@ import numpy as np
 from ..core.graphseq import Pattern, TRSeq
 from ..mining.driver import AcceleratedMiner
 from ..mining.incremental import depth1_root, refresh_frontier
+from ..obs import trace
+from ..obs.metrics import MetricsRegistry
 from .bank import BankCapacityError, PatternBank, compile_bank, \
     extend_bank
 from .server import PatternServer, QueryResult, score_topk
@@ -126,7 +128,6 @@ class StreamingBank:
         self.server_kw = dict(server_kw)
         self.bank = bank
         self.trie = trie
-        self.server = self._make_server()
         P = bank.n_patterns
         self.support = np.zeros(P, np.int64)
         self.active = np.ones(P, bool)
@@ -142,14 +143,19 @@ class StreamingBank:
         # read-replica hook: every delta a replica must mirror is
         # pushed here (see the module docstring for the tuple kinds)
         self.delta_sink: Optional[Callable[[Tuple], None]] = None
-        self.stats: Dict[str, int] = {
-            "arrivals": 0, "evictions": 0, "observe_batches": 0,
-            "tombstoned": 0, "recovered": 0, "added": 0,
-            "refreshes": 0, "full_refreshes": 0, "auto_compactions": 0,
-            "frontier_scans": 0, "frontier_scans_skipped": 0,
-            "frontier_retained": 0,
-            "dirty_subtrees": 0, "clean_subtrees": 0,
-        }
+        # the registry outlives every server/miner rebuild: a
+        # refresh(full=True) recompile re-attaches to the same counters
+        # instead of zeroing them (reset is registry.reset(), only)
+        self.metrics = MetricsRegistry()
+        self.stats = self.metrics.view("streaming.bank", keys=[
+            "arrivals", "evictions", "observe_batches",
+            "tombstoned", "recovered", "added",
+            "refreshes", "full_refreshes", "auto_compactions",
+            "frontier_scans", "frontier_scans_skipped",
+            "frontier_retained",
+            "dirty_subtrees", "clean_subtrees",
+        ])
+        self.server = self._make_server()
 
     # ------------------------------------------------------------ wiring
     def _make_server(self) -> PatternServer:
@@ -157,7 +163,7 @@ class StreamingBank:
             self.trie = build_trie(self.bank)
         return PatternServer(
             self.bank, bank_layout=self.bank_layout, trie=self.trie,
-            **self.server_kw,
+            metrics=self.metrics, **self.server_kw,
         )
 
     def _apply_mask(self) -> None:
@@ -227,39 +233,42 @@ class StreamingBank:
         batch = list(batch)
         if not batch:
             return ObserveResult(0, 0, 0, False)
-        rows = self.server.exact_rows(batch)
-        evicted = 0
-        for seq, row in zip(batch, rows):
-            if self._count == self.window:
-                old = self._bits[self._head]
-                self.support -= old
-                # evictions do NOT set dirty bits: supports only
-                # decrease below an evicted-from pattern, so no new
-                # frequent descendant can appear and active
-                # descendants' supports stay maintained-exact - only
-                # arrivals can create re-scan work (incremental.py)
-                evicted += 1
-            self._seqs[self._head] = seq
-            self._bits[self._head] = row
-            self.support += row
-            # slot-granular dirt: the stored row is the dirt record,
-            # fresh marks it as arrived-since-reconcile
-            self._fresh[self._head] = True
-            self._head = (self._head + 1) % self.window
-            self._count = min(self._count + 1, self.window)
-        self._any_change = True
-        n_tomb = 0
-        if self.tombstones:
-            newly = self.active & (self.support < self.minsup)
-            n_tomb = int(newly.sum())
-            if n_tomb:
-                self.active &= ~newly
-                self._apply_mask()
-                if self.delta_sink is not None:
-                    self._emit("mask", self.active.copy(),
-                               self.support.copy())
-        if self.delta_sink is not None:
-            self._emit("support", self.support.copy())
+        with trace.root_or_span("streaming.observe", n=len(batch)):
+            rows = self.server.exact_rows(batch)
+            evicted = 0
+            with trace.span("streaming.ring"):
+                for seq, row in zip(batch, rows):
+                    if self._count == self.window:
+                        old = self._bits[self._head]
+                        self.support -= old
+                        # evictions do NOT set dirty bits: supports
+                        # only decrease below an evicted-from pattern,
+                        # so no new frequent descendant can appear and
+                        # active descendants' supports stay
+                        # maintained-exact - only arrivals can create
+                        # re-scan work (incremental.py)
+                        evicted += 1
+                    self._seqs[self._head] = seq
+                    self._bits[self._head] = row
+                    self.support += row
+                    # slot-granular dirt: the stored row is the dirt
+                    # record, fresh marks it as arrived-since-reconcile
+                    self._fresh[self._head] = True
+                    self._head = (self._head + 1) % self.window
+                    self._count = min(self._count + 1, self.window)
+            self._any_change = True
+            n_tomb = 0
+            if self.tombstones:
+                newly = self.active & (self.support < self.minsup)
+                n_tomb = int(newly.sum())
+                if n_tomb:
+                    self.active &= ~newly
+                    self._apply_mask()
+                    if self.delta_sink is not None:
+                        self._emit("mask", self.active.copy(),
+                                   self.support.copy())
+            if self.delta_sink is not None:
+                self._emit("support", self.support.copy())
         self.stats["arrivals"] += len(batch)
         self.stats["evictions"] += evicted
         self.stats["observe_batches"] += 1
@@ -329,6 +338,10 @@ class StreamingBank:
         recompiles everything (the escape hatch, also compacts
         tombstones away)."""
         self._batches_since_refresh = 0
+        with trace.root_or_span("streaming.refresh", full=full):
+            return self._refresh_inner(full)
+
+    def _refresh_inner(self, full: bool) -> Dict[Pattern, int]:
         seqs = self.window_seqs
         if full:
             return self._refresh_full(seqs)
@@ -355,10 +368,12 @@ class StreamingBank:
             self.bank.patterns[i]
             for i in np.nonzero(self.dirty_rows() & maintained)[0]
         }
-        fr = refresh_frontier(
-            seqs, self.minsup, active=active_map, dirty=dirty_set,
-            any_change=True, max_len=self.max_len, **self.miner_kw,
-        )
+        with trace.span("streaming.frontier"):
+            fr = refresh_frontier(
+                seqs, self.minsup, active=active_map, dirty=dirty_set,
+                any_change=True, max_len=self.max_len,
+                metrics=self.metrics, **self.miner_kw,
+            )
         self.stats["refreshes"] += 1
         self.stats["frontier_scans"] += fr.scans
         self.stats["frontier_scans_skipped"] += fr.scans_skipped
@@ -375,6 +390,15 @@ class StreamingBank:
         return out
 
     def _reconcile(
+        self,
+        seqs: List[TRSeq],
+        mined: Dict[Pattern, int],
+        gids: Dict[Pattern, set],
+    ) -> Dict[Pattern, int]:
+        with trace.span("streaming.reconcile"):
+            return self._reconcile_inner(seqs, mined, gids)
+
+    def _reconcile_inner(
         self,
         seqs: List[TRSeq],
         mined: Dict[Pattern, int],
@@ -455,10 +479,17 @@ class StreamingBank:
     ) -> Dict[Pattern, int]:
         """Re-mine + recompile + recount everything (escape hatch /
         tombstone compaction)."""
+        with trace.span("streaming.full_refresh"):
+            return self._refresh_full_inner(seqs, mined)
+
+    def _refresh_full_inner(
+        self, seqs: List[TRSeq], mined: Optional[Dict[Pattern, int]] = None
+    ) -> Dict[Pattern, int]:
         self.stats["full_refreshes"] += 1
         if mined is None:
             if seqs:
-                miner = AcceleratedMiner(seqs, **self.miner_kw)
+                miner = AcceleratedMiner(
+                    seqs, metrics=self.metrics, **self.miner_kw)
                 mined = miner.mine_rs(
                     self.minsup, max_len=self.max_len).patterns
             else:

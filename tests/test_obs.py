@@ -1,0 +1,402 @@
+"""Observability layer: the metrics registry, the span tracer, and -
+the load-bearing contract - the disabled-tracing no-op path.
+
+Tracing is off by default and must be *free*: with the tracer
+disabled, every instrumented subsystem (mining wavefront, serving
+joins, streaming refreshes, cluster routing) must produce bit-identical
+results, identical device dispatch counts, and zero recorded events
+compared to the uninstrumented seed code; enabling tracing may add
+fences (it blocks to split launch from device time) but must never
+change a result either.  The registry's reset semantics are the other
+contract: counters live in the registry, so component rebuilds
+(``refresh(full=True)`` recompiling a server, the sharded-window
+protocol re-planning its router) accumulate instead of silently
+zeroing."""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import pytest
+from conftest import random_db
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI shim (see hypothesis_compat)
+    from hypothesis_compat import given, settings, strategies as st
+
+from repro.mining.driver import AcceleratedMiner
+from repro.obs import MetricsRegistry, trace
+from repro.serving.bank import compile_bank
+from repro.serving.cluster import ServingCluster, ShardedStreamingBank
+from repro.serving.server import PatternServer
+from repro.serving.streaming import StreamingBank
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+import trace_report  # noqa: E402
+
+MINSUP, MAX_LEN = 2, 3
+
+
+@pytest.fixture(autouse=True)
+def _tracer_off():
+    """Every test starts and ends with the global tracer disabled and
+    empty - a leaked enabled tracer would perturb every later test."""
+    trace.disable()
+    trace.clear()
+    yield
+    trace.disable()
+    trace.clear()
+
+
+def _spread(queries, n_hosts):
+    reqs = {h: [] for h in range(n_hosts)}
+    for i, s in enumerate(queries):
+        reqs[i % n_hosts].append(s)
+    return reqs
+
+
+# ========================================================== registry
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("m.calls")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    g = reg.gauge("m.depth")
+    g.set(7)
+    g.set(4)
+    assert g.value == 4
+    h = reg.histogram("m.wave")
+    for v in (1, 5, 3):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["m.calls"] == 3
+    assert snap["m.depth"] == 4
+    assert snap["m.wave.count"] == 3
+    assert snap["m.wave.sum"] == 9
+    assert snap["m.wave.min"] == 1
+    assert snap["m.wave.max"] == 5
+    assert snap["m.wave.mean"] == 3
+
+
+def test_registry_collision_returns_same_object():
+    """The rebuild-survival mechanism: re-registering a name returns
+    the SAME metric, so a recompiled component keeps accumulating."""
+    reg = MetricsRegistry()
+    a = reg.counter("srv.queries")
+    a.inc(5)
+    b = reg.counter("srv.queries")
+    assert a is b and b.value == 5
+    with pytest.raises(TypeError):
+        reg.gauge("srv.queries")  # a name owns exactly one type
+
+
+def test_snapshot_delta_reset():
+    reg = MetricsRegistry()
+    reg.counter("a.x").inc(10)
+    reg.counter("b.y").inc(1)
+    before = reg.snapshot()
+    reg.counter("a.x").inc(4)
+    assert reg.delta(before) == {"a.x": 4, "b.y": 0}
+    assert reg.snapshot("a") == {"a.x": 14}
+    reg.reset("a")
+    assert reg.counter("a.x").value == 0
+    assert reg.counter("b.y").value == 1  # prefix reset is scoped
+    reg.reset()
+    assert reg.counter("b.y").value == 0
+
+
+def test_stats_view_is_a_mutable_mapping():
+    """The facade the migrated call sites rely on: iteration shows
+    declared keys, += and = write through to registry counters, and
+    benchmark-style reset-by-assignment works."""
+    reg = MetricsRegistry()
+    view = reg.view("srv", keys=["queries", "hits"])
+    assert dict(view) == {"queries": 0, "hits": 0}
+    view["queries"] += 3
+    assert reg.counter("srv.queries").value == 3
+    view["new_key"] = 2  # unknown keys register on assignment
+    assert "new_key" in view and reg.counter("srv.new_key").value == 2
+    for k in view:  # the bench reset idiom
+        view[k] = 0
+    assert all(v == 0 for v in dict(view).values())
+    with pytest.raises(KeyError):
+        view["never_declared"]
+    with pytest.raises(TypeError):
+        del view["queries"]
+
+
+# ============================================================ tracer
+def test_disabled_tracer_is_shared_noop():
+    assert not trace.enabled()
+    assert trace.span("x") is trace.span("y") is trace.root_or_span("z")
+    trace.add_complete("x", "device", 0.0, 1.0)
+    assert trace.tracer.events == []
+
+
+def test_span_nesting_and_trace_ids():
+    trace.enable()
+    with trace.root_or_span("outer", n=1):
+        tid = trace.current_trace()
+        assert tid is not None
+        with trace.root_or_span("inner"):  # nested: same trace, host cat
+            assert trace.current_trace() == tid
+        with trace.span("leaf", cat="device"):
+            pass
+    assert trace.current_trace() is None
+    with trace.root_or_span("outer2"):
+        assert trace.current_trace() == tid + 1  # fresh id per root
+    evs = {e["name"]: e for e in trace.tracer.events}
+    assert evs["outer"]["cat"] == "wall"
+    assert evs["inner"]["cat"] == "host"
+    assert evs["leaf"]["cat"] == "device"
+    assert evs["outer"]["args"] == {"n": 1}
+    assert evs["leaf"]["trace"] == tid
+    # children recorded before parents (exit order), all inside outer
+    assert evs["leaf"]["ts"] >= evs["outer"]["ts"]
+    assert (evs["leaf"]["ts"] + evs["leaf"]["dur"]
+            <= evs["outer"]["ts"] + evs["outer"]["dur"] + 1.0)
+
+
+def test_save_and_report_roundtrip(tmp_path):
+    """Both export formats load, validate, and attribute >= 90% of
+    wall time (every root's body is tiled by child spans here, as the
+    instrumentation style mandates)."""
+    trace.enable()
+    for _ in range(3):
+        # the children need real duration: coverage is self-time based,
+        # so empty leaves would leave the root's own body dominant
+        with trace.root_or_span("q.query"):
+            with trace.span("q.cache", cat="cache"):
+                time.sleep(0.002)
+            with trace.span("q.join", cat="dispatch"):
+                with trace.span("q.device", cat="device"):
+                    time.sleep(0.002)
+            with trace.span("q.finalize"):
+                time.sleep(0.002)
+    for suffix in ("t.json", "t.jsonl"):
+        path = str(tmp_path / suffix)
+        trace.save(path)
+        events = trace_report.load_events(path)
+        assert len(events) == len(trace.tracer.events)
+        assert trace_report.validate(events) == []
+        att = trace_report.attribute(events)
+        assert att["n_traces"] == 3
+        assert att["coverage"] >= 0.9
+        total = (sum(att["buckets_us"].values())
+                 + att["uninstrumented_us"])
+        assert total == pytest.approx(att["wall_us"], rel=1e-6)
+    # chrome export is valid trace-viewer input
+    with open(str(tmp_path / "t.json")) as f:
+        doc = json.load(f)
+    assert all(e["ph"] == "X" for e in doc["traceEvents"])
+
+
+def test_trace_report_rejects_malformed(tmp_path):
+    bad = [{"name": "x", "cat": "nope", "ts": 0.0, "dur": 1.0,
+            "trace": None}]
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        for e in bad:
+            f.write(json.dumps(e) + "\n")
+    problems = trace_report.validate(trace_report.load_events(path))
+    assert problems  # unknown category + no wall root
+
+
+# ========================================== no-op path: bit-identical
+@pytest.mark.slow
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_mining_unchanged_by_tracing(seed):
+    """Disabled tracing adds zero device dispatches and changes no
+    frequent map; enabling it changes no results either."""
+    # hypothesis reuses one fixture across examples: reset per example
+    trace.disable()
+    trace.clear()
+    db = random_db(seed % 50, n_seq=8)
+    base = AcceleratedMiner(db)
+    want = base.mine_rs(MINSUP, max_len=MAX_LEN)
+    assert trace.tracer.events == []  # disabled run recorded nothing
+
+    m_off = AcceleratedMiner(db)
+    got_off = m_off.mine_rs(MINSUP, max_len=MAX_LEN)
+    assert got_off.patterns == want.patterns
+    assert m_off.n_device_calls == base.n_device_calls
+
+    trace.enable()
+    m_on = AcceleratedMiner(db)
+    got_on = m_on.mine_rs(MINSUP, max_len=MAX_LEN)
+    trace.disable()
+    assert got_on.patterns == want.patterns
+    assert m_on.n_device_calls == base.n_device_calls
+    assert any(e["cat"] == "wall" for e in trace.tracer.events)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_serving_unchanged_by_tracing(seed):
+    # hypothesis reuses one fixture across examples: reset per example
+    trace.disable()
+    trace.clear()
+    db = random_db(seed % 50, n_seq=8)
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(MINSUP, max_len=MAX_LEN))
+    if not bank.n_patterns:
+        return
+    queries = random_db(seed % 50 + 1, n_seq=6)
+    layout = "trie" if seed % 2 else "flat"
+
+    srv = PatternServer(bank, bank_layout=layout)
+    want = srv.query(queries)
+    assert trace.tracer.events == []
+
+    trace.enable()
+    srv_on = PatternServer(bank, bank_layout=layout)
+    got = srv_on.query(queries)
+    trace.disable()
+    for r, w in zip(got, want):
+        np.testing.assert_array_equal(r.contained, w.contained)
+        assert r.topk == w.topk
+    assert (srv_on.stats["device_batches"]
+            == srv.stats["device_batches"])
+    assert trace.tracer.events  # enabled run did record spans
+
+
+@pytest.mark.slow
+@given(st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_streaming_unchanged_by_tracing(seed):
+    # hypothesis reuses one fixture across examples: reset per example
+    trace.disable()
+    trace.clear()
+    db = random_db(seed % 50, n_seq=8)
+    batches = [random_db(seed % 50 + 1 + i, n_seq=2) for i in range(3)]
+
+    def run():
+        sb = StreamingBank.from_db(db, minsup=MINSUP, window=8,
+                                   max_len=MAX_LEN, refresh_every=0)
+        maps = []
+        for b in batches:
+            sb.observe(b)
+            maps.append(sb.refresh())
+        maps.append(sb.refresh(full=True))
+        return maps
+
+    want = run()
+    assert trace.tracer.events == []
+    trace.enable()
+    got = run()
+    trace.disable()
+    assert got == want
+
+
+@pytest.mark.slow
+@given(st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_cluster_unchanged_by_tracing(seed):
+    # hypothesis reuses one fixture across examples: reset per example
+    trace.disable()
+    trace.clear()
+    db = random_db(seed % 50, n_seq=10)
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(MINSUP, max_len=MAX_LEN))
+    if not bank.n_patterns:
+        return
+    queries = random_db(seed % 50 + 1, n_seq=6)
+    H = 2 + seed % 2
+
+    def run():
+        cl = ServingCluster(bank, H)
+        out = cl.query_multi(_spread(queries, H))
+        # second drain replays the same queries through the caches
+        out2 = cl.query_multi(_spread(queries, H))
+        rows = [r.contained for h in sorted(out) for r in out[h]]
+        rows += [r.contained for h in sorted(out2) for r in out2[h]]
+        hits = cl.router.stats["l1_hits"] + cl.router.stats["l2_hits"]
+        return np.stack(rows), hits, cl.router.stats["shard_batches"]
+
+    want_rows, want_hits, want_batches = run()
+    assert want_hits > 0  # the replay drain exercises the cache path
+    assert trace.tracer.events == []
+    trace.enable()
+    got_rows, got_hits, got_batches = run()
+    trace.disable()
+    np.testing.assert_array_equal(got_rows, want_rows)
+    assert (got_hits, got_batches) == (want_hits, want_batches)
+
+
+# ===================================== counters survive full refresh
+def test_streaming_stats_survive_full_refresh():
+    """Satellite bugfix: the server's counters live in the bank's
+    registry, so the full-refresh recompile (which rebuilds the
+    PatternServer) accumulates instead of zeroing."""
+    db = random_db(0, n_seq=8)
+    sb = StreamingBank.from_db(db, minsup=MINSUP, window=8,
+                               max_len=MAX_LEN, refresh_every=0)
+    queries = random_db(1, n_seq=3)
+    sb.server.query(queries)
+    before = sb.server.stats["queries"]
+    assert before == len(queries)
+    sb.observe(random_db(2, n_seq=2))
+    sb.refresh(full=True)  # rebuilds self.server from scratch
+    assert sb.server.stats["queries"] == before
+    sb.server.query(queries)
+    assert sb.server.stats["queries"] == before + len(queries)
+
+
+def test_sharded_stats_survive_full_refresh():
+    """Same contract one layer up: the router (re-planned on every
+    full refresh) re-attaches to the sharded bank's registry."""
+    db = random_db(0, n_seq=10)
+    sb = ShardedStreamingBank.from_db(db, minsup=MINSUP, n_hosts=2,
+                                      window=10, max_len=MAX_LEN)
+    queries = random_db(1, n_seq=4)
+    sb.cluster.query_multi(_spread(queries, 2))
+    sb.cluster.query_multi(_spread(queries, 2))  # replay -> cache hits
+    st = sb.cluster.router.stats
+    hits_before = st["l1_hits"] + st["l2_hits"]
+    queries_before = st["queries"]
+    assert hits_before > 0
+    sb.observe(random_db(2, n_seq=2))
+    sb.refresh(full=True)  # re-plans placement, rebuilds the router
+    st = sb.cluster.router.stats
+    assert st["l1_hits"] + st["l2_hits"] == hits_before
+    assert st["queries"] == queries_before
+    snap = sb.metrics.snapshot("cluster.router")
+    assert snap["cluster.router.queries"] == queries_before
+
+
+# ============================================ end-to-end trace shape
+def test_traced_cluster_query_coverage(tmp_path):
+    """A real routed query's trace validates and attributes >= 90% of
+    wall time - the per-artifact form of the tier-6 CI gate."""
+    db = random_db(3, n_seq=10)
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(MINSUP, max_len=MAX_LEN))
+    if not bank.n_patterns:
+        pytest.skip("empty bank for this seed")
+    queries = random_db(4, n_seq=6)
+    cl = ServingCluster(bank, 2)
+    cl.query_multi(_spread(queries, 2))  # warm jit outside the trace
+    trace.clear()
+    trace.enable()
+    cl.query_multi(_spread(queries, 2))
+    cl.query_multi(_spread(queries, 2))
+    trace.disable()
+    path = str(tmp_path / "route.jsonl")
+    trace.save(path)
+    events = trace_report.load_events(path)
+    assert trace_report.validate(events) == []
+    att = trace_report.attribute(events)
+    # a routed drain on a toy bank is microseconds of wall, so the
+    # fixed span-entry overhead shows up in the uninstrumented line;
+    # the full >= 0.9 gate runs at bench scale (ci.sh tier-6, where
+    # device batches dominate and coverage sits near 1.0)
+    assert att["coverage"] >= 0.75
+    assert att["n_traces"] >= 2  # one trace id per route drain
+    names = {e["name"] for e in events}
+    assert "cluster.route" in names and "cluster.cache" in names
