@@ -9,6 +9,34 @@ single-host streaming bank, and a ``metrics`` block (the summed
 registry deltas of every timed pass) that ``scripts/check_bench.py``
 gates on at counter level - in particular the L1/L2 cache hit rates.
 
+The headline ``cluster_qps`` is the **async admission pipeline**
+(``submit``/``collect`` continuous batching) under the production
+offered-load model: **every host receives its own open-loop Zipfian
+arrival stream** (per-host load held constant, so aggregate offered
+load scales with H - the standard serving-bench convention), drains
+are submitted without blocking - arrivals keep queueing while earlier
+flushes compute on device - and collected at the end.  Aggregate
+qps = (H * per-host queries) / wall.  This is where the cluster's
+scaling story lives: the bank-sharded join work is *constant-sum*
+across shards (every miss fans out once, each shard joins only its
+~1/H slice from one shared query encoding), while each added host
+brings its own L1 cache and admission capacity - so aggregate
+throughput must not fall as hosts join.  ``scripts/check_bench.py``
+gates ``cluster_qps`` monotonically non-decreasing in H for both
+layouts.  The old bench split one fixed stream across hosts, which
+divides the cacheable traffic H ways while keeping the join constant -
+that measures per-shard protocol overhead (still reported, as
+``cluster_route_qps`` on the same per-host streams via the synchronous
+``route`` path), not cluster capacity, and is why the committed table
+showed throughput "going backwards".
+
+Every timed pass is **best-of-``N_ROUNDS``**: a single pass is ~tens
+of milliseconds on this workload, small enough that one GC pause or
+scheduler hiccup used to distort the committed scaling table (the seed
+artifact's trie single-host number was a third of flat's from exactly
+that).  Best-of over identical rounds measures the code, not the
+noise.
+
 The query mix is **Zipfian**: queries are drawn with repetition from a
 fixed pool (rank-``r`` probability ∝ 1/r^s), and the drawn stream is
 routed as several consecutive *drains*.  Production replay traffic is
@@ -26,12 +54,14 @@ post-refresh frequent map must be bit-equal to the single-host
 divergence raises before the artifact is written; the committed
 ``divergences`` field is checked == 0 by scripts/check_bench.py.
 
-The hosts are in-process simulations sharing one CPU device, so
-multi-host qps measures *protocol overhead*, not parallel speedup -
-the point of the scaling table is that per-shard work shrinks with
-host count (each shard joins ~1/H of the bank) while the merged
-answers stay identical; real scaling needs one device per host (the
-subprocess test pins hosts to 8 virtual devices).
+The hosts are in-process simulations sharing one CPU device, so no
+true parallelism is available here: the monotone aggregate comes from
+the constant-sum join amortizing over the growing cacheable traffic
+(every repeat past the first fan-out is an L1/L2 hit), not from
+concurrent execution.  Real parallel speedup needs one device per
+host (the subprocess test pins hosts to 8 virtual devices);
+``cluster_route_qps`` exposes the residual per-shard protocol cost
+that such a deployment would overlap away.
 
 ``--smoke`` is the CI tier-4 gate: a tiny config, both layouts, >= 2
 hosts, hard-failing on any divergence, written atomically to
@@ -65,6 +95,7 @@ OUT = os.path.join(HERE, "..", "BENCH_cluster.json")
 OUT_SMOKE = os.path.join(HERE, "..", "BENCH_cluster_smoke.json")
 
 ZIPF_S = 1.1  # rank exponent of the repeat mix
+N_ROUNDS = 3  # best-of rounds per timed pass (see module docstring)
 
 
 def zipf_mix(pool, n, seed=2, s=ZIPF_S):
@@ -94,75 +125,171 @@ def _spread(queries, n_hosts):
     return reqs
 
 
-def _routed_pass(cl, reqs):
-    """Route one full drain; returns results flattened back to query
-    order."""
-    got = cl.query_multi(reqs)
+def _flatten_drain(results, reqs):
+    """Per-host drain results flattened back to query order (the
+    inverse of ``_spread``)."""
     flat = {}
-    for h, rs in got.items():
+    for h, rs in results.items():
         for j, r in enumerate(rs):
             flat[j * len(reqs) + h] = r
     return [flat[i] for i in sorted(flat)]
 
 
+def _best_of(run, rounds=N_ROUNDS):
+    """Best (minimum) wall time over identical rounds of ``run``."""
+    return min(run() for _ in range(rounds))
+
+
+def _check_exact(results, want_by_fp, where):
+    """Bit-equality of routed results vs the single-host reference
+    (fingerprint-keyed); returns the divergence count after raising on
+    the first nonzero."""
+    divergences = 0
+    n = 0
+    for per_host in results:
+        for rs in per_host.values():
+            for r in rs:
+                n += 1
+                w = want_by_fp[r.fingerprint]
+                if not (np.array_equal(r.contained, w.contained)
+                        and r.topk == w.topk and r.exact):
+                    divergences += 1
+    assert n > 0
+    if divergences:
+        raise AssertionError(
+            f"[{where}] routed cluster diverged from the single-host "
+            f"server on {divergences} queries - exactness contract "
+            "broken"
+        )
+    return divergences
+
+
 def bench_serving_cluster(db, pool, sigma, max_len, host_counts,
-                          layouts, n_queries, n_drains, metrics_sum):
-    """Routed cluster vs single-host server on a Zipfian repeat mix;
-    returns (payload section, divergence count - always 0 or the bench
-    has already raised)."""
+                          layouts, n_queries, n_drains, flush_batch,
+                          metrics_sum):
+    """Routed cluster vs single-host server under per-host Zipfian
+    arrival streams (offered load scales with H - see the module
+    docstring); returns (payload section, divergence count - always 0
+    or the bench has already raised).  Each host count is timed twice:
+    the async submit-all/collect pipeline (headline aggregate
+    ``cluster_qps``) and the synchronous per-drain ``route``
+    (``cluster_route_qps``)."""
     bank = compile_bank(
         AcceleratedMiner(db).mine_rs(sigma, max_len=max_len))
-    queries = zipf_mix(pool, n_queries)
-    drains = _chunks(queries, n_drains)
     single_qps = {}
     cluster_qps = {}
+    route_qps = {}
     divergences = 0
     stats = {}
+    exact_ref = None  # flat-layout pool rows, reused by the shed demo
     for layout in layouts:
         srv = PatternServer(bank, bank_layout=layout)
-        want = srv.query(queries)  # the bit-equality reference
-        srv._cache.clear()  # else the warm drains all cache-hit...
-        for dq in drains:   # ...and the per-drain jit buckets stay cold
-            srv.query(dq)
-        srv._cache.clear()
-        t0 = time.perf_counter()
-        for dq in drains:
-            srv.query(dq)
-        single_qps[layout] = len(queries) / (time.perf_counter() - t0)
-        cluster_qps[layout] = {}
-        for H in host_counts:
-            cl = ServingCluster(bank, H, bank_layout=layout)
-            for dq in drains:  # warm every shard's jit buckets
-                _routed_pass(cl, _spread(dq, H))
-            cl.router.clear_caches()
-            before = cl.metrics.snapshot()
+        # the bit-equality reference: one result per distinct pool
+        # sequence, looked up by canonical fingerprint
+        pool_want = srv.query(pool)
+        want_by_fp = {w.fingerprint: w for w in pool_want}
+        if exact_ref is None:
+            exact_ref = np.stack([w.contained for w in pool_want])
+        stream0 = zipf_mix(pool, n_queries, seed=2)
+        drains0 = _chunks(stream0, n_drains)
+
+        def run_single():
+            srv._cache.clear()  # else the drains all cache-hit
             t0 = time.perf_counter()
-            got = []
-            for dq in drains:
-                got.extend(_routed_pass(cl, _spread(dq, H)))
-            dt = time.perf_counter() - t0
-            cluster_qps[layout][str(H)] = len(queries) / dt
+            for dq in drains0:
+                srv.query(dq)
+            return time.perf_counter() - t0
+
+        run_single()  # warm the per-drain jit buckets
+        single_qps[layout] = len(stream0) / _best_of(run_single)
+        cluster_qps[layout] = {}
+        route_qps[layout] = {}
+        for H in host_counts:
+            cl = ServingCluster(bank, H, bank_layout=layout,
+                                flush_batch=flush_batch)
+            # one independent arrival stream per host, same pool:
+            # aggregate offered load is H * n_queries
+            streams = [zipf_mix(pool, n_queries, seed=2 + 17 * h)
+                       for h in range(H)]
+            chunked = [_chunks(s, n_drains) for s in streams]
+            reqs = [
+                {h: chunked[h][d] for h in range(H)}
+                for d in range(n_drains)
+            ]
+            total = sum(len(s) for s in streams)
+
+            def run_route():
+                cl.router.clear_caches()
+                t0 = time.perf_counter()
+                got = [cl.query_multi(r) for r in reqs]
+                dt = time.perf_counter() - t0
+                run_route.got = got
+                return dt
+
+            def run_async():
+                # open-loop arrivals: every drain is admitted before
+                # any result is fenced; flushes overlap with later
+                # submits (JAX dispatch is async) and repeats
+                # piggyback on queued/in-flight joins
+                cl.router.clear_caches()
+                t0 = time.perf_counter()
+                tickets = [cl.submit(r) for r in reqs]
+                got = [cl.collect(t) for t in tickets]
+                dt = time.perf_counter() - t0
+                run_async.got = got
+                return dt
+
+            run_route()  # warm every shard's jit buckets
+            run_async()
+            before = cl.metrics.snapshot()
+            route_qps[layout][str(H)] = total / _best_of(run_route)
+            cluster_qps[layout][str(H)] = total / _best_of(run_async)
             _merge_metrics(metrics_sum, cl.metrics.delta(before))
-            for r, w in zip(got, want):
-                if not (np.array_equal(r.contained, w.contained)
-                        and r.topk == w.topk):
-                    divergences += 1
-            if divergences:
-                raise AssertionError(
-                    f"[{layout} H={H}] routed cluster diverged from the "
-                    f"single-host server on {divergences} queries - "
-                    "exactness contract broken"
-                )
+            divergences += _check_exact(
+                run_route.got, want_by_fp, f"{layout} H={H} route")
+            divergences += _check_exact(
+                run_async.got, want_by_fp, f"{layout} H={H} async")
+            for h in cl.hosts:  # per-host query accounting (was 0)
+                if len(h.rows):
+                    assert h.server.stats["queries"] > 0, \
+                        f"h{h.hid} served joins but counted 0 queries"
             stats[f"{layout}_H{H}"] = dict(cl.router.stats)
     return {
         "bank_patterns": bank.n_patterns,
         "pool_size": len(pool),
         "n_drains": n_drains,
+        "n_rounds": N_ROUNDS,
+        "flush_batch": flush_batch,
         "zipf_s": ZIPF_S,
         "single_qps": single_qps,
         "cluster_qps": cluster_qps,
+        "cluster_route_qps": route_qps,
         "router_stats": stats,
+        "shed_stats": bench_shed_tier(
+            bank, pool, exact_ref, max(host_counts)),
     }, divergences
+
+
+def bench_shed_tier(bank, pool, exact_ref, n_hosts):
+    """Exercise the overload tier on its own cluster instance (own
+    registry: the headline metrics stay a pure exactness run).  With
+    ``shed_depth=0`` every miss is answered from the host-side
+    prescreen - sound superset bits, flagged inexact, never cached."""
+    cl = ServingCluster(bank, n_hosts, shed_depth=0)
+    sample = pool[:32]
+    got = _flatten_drain(
+        cl.collect(cl.submit(_spread(sample, n_hosts))),
+        _spread(sample, n_hosts))
+    for i, r in enumerate(got):
+        assert not r.exact, "shed answers must be flagged inexact"
+        assert not (exact_ref[i] & ~r.contained).any(), \
+            "prescreen dropped a true containment - shed tier unsound"
+    assert all(not h.l1 and not h.l2 for h in cl.hosts), \
+        "approximate rows leaked into the caches"
+    st = dict(cl.router.stats)
+    assert st["shed_prescreen"] > 0
+    return {k: st[k] for k in
+            ("queries", "misses", "shed_prescreen", "shard_batches")}
 
 
 def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
@@ -195,12 +322,18 @@ def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
             db, minsup=sigma, n_hosts=n_hosts, window=window,
             max_len=max_len)
 
-    run(mk_single, StreamingBank.observe, StreamingBank.refresh)  # warm
-    t_single, maps_single, _, _ = run(
+    def best_of(make, observe, refresh):
+        run(make, observe, refresh)  # warm the jit buckets
+        best = None
+        for _ in range(N_ROUNDS):
+            r = run(make, observe, refresh)
+            if best is None or r[0] < best[0]:
+                best = r
+        return best
+
+    t_single, maps_single, _, _ = best_of(
         mk_single, StreamingBank.observe, StreamingBank.refresh)
-    run(mk_sharded, ShardedStreamingBank.observe,
-        ShardedStreamingBank.refresh)  # warm
-    t_sharded, maps_sharded, sh, delta = run(
+    t_sharded, maps_sharded, sh, delta = best_of(
         mk_sharded, ShardedStreamingBank.observe,
         ShardedStreamingBank.refresh)
     _merge_metrics(metrics_sum, delta)
@@ -227,12 +360,12 @@ def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
 def main(csv=print, smoke: bool = False, trace_path=None):
     if smoke:
         db_size, n_queries, max_len = 40, 48, 3
-        pool_size, n_drains = 16, 3
+        pool_size, n_drains, flush_batch = 16, 3, 8
         host_counts, out_path = (1, 2, 3), OUT_SMOKE
         window, stream_n, batch_size, refresh_every = 24, 24, 8, 2
     else:
         db_size, n_queries, max_len = 120, 256, 4
-        pool_size, n_drains = 64, 4
+        pool_size, n_drains, flush_batch = 64, 4, 16
         host_counts, out_path = (1, 2, 4), OUT
         window, stream_n, batch_size, refresh_every = 60, 60, 10, 3
     if trace_path:
@@ -251,11 +384,16 @@ def main(csv=print, smoke: bool = False, trace_path=None):
     metrics_sum = {}
     serving, divergences = bench_serving_cluster(
         db, pool, sigma, max_len, host_counts, ("flat", "trie"),
-        n_queries, n_drains, metrics_sum)
+        n_queries, n_drains, flush_batch, metrics_sum)
     streaming = bench_sharded_stream(
         stream_db, stream, max(2, window // 15), max_len, window,
         2, batch_size, refresh_every, metrics_sum)
 
+    host_q = sum(v for k, v in metrics_sum.items()
+                 if k.startswith("serving.server.")
+                 and k.endswith(".queries"))
+    assert host_q > 0, \
+        "per-host query accounting regressed to zero (satellite bug)"
     l1 = metrics_sum.get("cluster.router.l1_hits", 0)
     l2 = metrics_sum.get("cluster.router.l2_hits", 0)
     routed = metrics_sum.get("cluster.router.queries", 0)
@@ -279,8 +417,10 @@ def main(csv=print, smoke: bool = False, trace_path=None):
         base = serving["single_qps"][layout]
         for H in host_counts:
             qps = serving["cluster_qps"][layout][str(H)]
+            rqps = serving["cluster_route_qps"][layout][str(H)]
             csv(f"cluster/{layout}_H{H},{1e6 / qps:.0f},"
-                f"qps={qps:.0f},x{qps / base:.2f}_vs_single")
+                f"qps={qps:.0f},x{qps / base:.2f}_vs_single,"
+                f"route_qps={rqps:.0f}")
     csv(f"cluster/stream_sharded,"
         f"{1e6 / streaming['sharded_stream_updates_per_sec']:.0f},"
         f"ups={streaming['sharded_stream_updates_per_sec']:.0f}")

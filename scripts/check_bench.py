@@ -17,6 +17,11 @@ needed):
      re-mine-per-window baseline by >= 5x (``speedup_streaming``), and
      the final frequent-map equality is asserted inside the bench
      itself (it raises before writing on any divergence).
+   - ``BENCH_cluster.json``: zero divergences, >= 2 hosts, nonzero
+     L1+L2 cache hits, the shed tier actually exercised, async
+     ``cluster_qps`` monotone non-decreasing in host count for both
+     layouts (per-host offered load - see bench_cluster.py), and
+     sharded-window streaming >= 0.8x the single-host bank.
 3. **Smoke throughput regression** (fresh tier-2 runs): the smoke
    artifact just (re)written by ``bench_serving.py --smoke`` is
    compared against the committed baseline (``git show HEAD:...``);
@@ -89,10 +94,14 @@ SCHEMAS = {
     "BENCH_cluster.json": {
         "bank_patterns": int,
         "n_queries": int,
+        "n_rounds": int,
+        "flush_batch": int,
         "host_counts": list,
         "divergences": int,
         "single_qps": dict,
         "cluster_qps": dict,
+        "cluster_route_qps": dict,
+        "shed_stats": dict,
         "stream_window": int,
         "stream_hosts": int,
         "single_stream_updates_per_sec": _NUM,
@@ -105,6 +114,8 @@ SCHEMAS = {
         "host_counts": list,
         "divergences": int,
         "cluster_qps": dict,
+        "cluster_route_qps": dict,
+        "shed_stats": dict,
         "sharded_stream_updates_per_sec": _NUM,
         "cache_hit_rate": _NUM,
         "metrics": dict,
@@ -248,6 +259,49 @@ def check_invariants(name: str, payload: dict) -> None:
                 f"{name}: zero L1+L2 cache hits in the metrics block - "
                 "the Zipfian repeat mix no longer exercises the "
                 "two-level cache"
+            )
+        # the shed-tier demo must actually shed: a zero counter means
+        # the overload path silently degraded to exact serving and its
+        # soundness assertions (superset bits, inexact flag, no cache
+        # pollution) no longer ran
+        if payload["shed_stats"].get("shed_prescreen", 0) <= 0:
+            raise GateError(
+                f"{name}: shed_stats shows zero shed_prescreen answers "
+                "- the load-shedding tier was never exercised"
+            )
+    if name == "BENCH_cluster.json":
+        # the PR-7 scaling gate, full artifact only (the smoke config
+        # is small enough for timing noise to invert adjacent points):
+        # under per-host offered load (every host drives its own
+        # arrival stream), aggregate async qps must be monotone
+        # non-decreasing in host count for BOTH layouts - the
+        # bank-sharded join is constant-sum across shards, so each
+        # added host's cache + admission capacity must not make the
+        # cluster slower.  The 3% tolerance absorbs best-of-N residual
+        # jitter, nothing more; the old split-one-stream bench decayed
+        # ~25% per host step and fails this by an order of magnitude.
+        noise = 0.97
+        for layout, by_h in payload["cluster_qps"].items():
+            hs = sorted(int(h) for h in by_h)
+            for lo, hi in zip(hs, hs[1:]):
+                if by_h[str(hi)] < by_h[str(lo)] * noise:
+                    raise GateError(
+                        f"{name}: {layout} cluster_qps fell from "
+                        f"{by_h[str(lo)]:.0f} (H={lo}) to "
+                        f"{by_h[str(hi)]:.0f} (H={hi}) - scaling went "
+                        "negative again"
+                    )
+        # the sharded-window protocol must stay within 0.8x of the
+        # single-host streaming bank (it was at 0.46x before the
+        # shared-encoding + launch/fence split): one all-reduce per
+        # refresh is the only protocol cost that may remain
+        sh = payload["sharded_stream_updates_per_sec"]
+        sg = payload["single_stream_updates_per_sec"]
+        if sh < 0.8 * sg:
+            raise GateError(
+                f"{name}: sharded streaming {sh:.0f} ups < 0.8x the "
+                f"single-host bank {sg:.0f} ups - the sharded-window "
+                "protocol overhead regressed"
             )
 
 

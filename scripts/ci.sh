@@ -21,10 +21,14 @@
 #           refresh point - the incremental-maintenance exactness gate.
 #   tier-4  CI_TIER4=0 skips   cluster smoke: bench_cluster.py --smoke
 #           routes queries through the multi-host cluster (simulated
-#           hosts, both layouts, >= 2 hosts) and streams through the
-#           sharded-window protocol, hard-failing on ANY divergence
-#           from the single-host server / streaming bank - the
-#           multi-host exactness gate.
+#           hosts, both layouts, >= 2 hosts) twice - the synchronous
+#           route path AND the async continuous-batching pipeline
+#           (submit/flush/collect, open-loop arrivals) - plus the
+#           shed-tier soundness check (approximate answers must be
+#           flagged supersets) and the sharded-window streaming
+#           protocol, hard-failing on ANY divergence from the
+#           single-host server / streaming bank - the multi-host
+#           exactness gate.
 #   tier-5  CI_TIER5=0 skips   mining smoke: bench_mining.py --smoke
 #           runs the wavefront, per-pattern-dispatch and pure-host
 #           miners over the same DB and hard-fails on ANY frequent-map
@@ -53,10 +57,12 @@
 #           written smoke artifacts are the ones validated:
 #           scripts/check_bench.py checks every BENCH_*.json schema,
 #           gates on the committed trie/flat median speedup (>= 1.0),
-#           streaming speedup (>= 5x), cluster divergences == 0, and
-#           mining wavefront speedup (median >= 3x, device calls cut
-#           >= 5x, divergences == 0), and fails if smoke throughput
-#           dropped >3x below the committed same-machine baseline.
+#           streaming speedup (>= 5x), cluster divergences == 0 with
+#           qps monotone non-decreasing in host count (both layouts)
+#           and sharded streaming >= 0.8x single-host, and mining
+#           wavefront speedup (median >= 3x, device calls cut >= 5x,
+#           divergences == 0), and fails if smoke throughput dropped
+#           >3x below the committed same-machine baseline.
 #
 # No timing assertions inside the smokes - perf numbers come from the
 # full benchmark runs; regressions are caught by check_bench.py against
@@ -86,7 +92,7 @@ if [[ "${CI_TIER3:-1}" != "0" ]]; then
 fi
 
 if [[ "${CI_TIER4:-1}" != "0" ]]; then
-    echo "[ci] tier-4: cluster smoke (routed == single-host, sharded window == streaming bank)"
+    echo "[ci] tier-4: cluster smoke (route + async pipeline == single-host, sharded window == streaming bank)"
     python benchmarks/bench_cluster.py --smoke
 fi
 

@@ -72,6 +72,21 @@ Module map:
                    fingerprint-owner L2), and the misses batched into
                    shared pow-2 device batches per shard; merged
                    answers are bit-equal to a single-host server.
+                   Two driving modes share that machinery: synchronous
+                   ``route`` (one blocking drain) and the async
+                   admission pipeline ``submit -> [queue] -> flush ->
+                   [in-flight] -> collect`` (continuous batching: the
+                   queries are encoded once per flush, every shard's
+                   join launches before any is fenced, and later
+                   drains keep admitting while earlier batches compute
+                   on device; repeats piggyback on queued/in-flight
+                   joins).  Flushes trigger on queue length
+                   (``flush_batch``), head-of-queue age (``max_wait``,
+                   against an injectable clock), or a blocked
+                   ``collect``; past ``shed_depth`` new misses get
+                   host-prescreen-only answers - sound supersets
+                   flagged ``exact=False``, never cached (off by
+                   default: exactness stays the contract).
 * ``cluster.py`` - the multi-host topologies over router.py:
                    ``ServingCluster`` (static sharded bank),
                    ``ShardedStreamingBank`` (the sharded-window
@@ -90,7 +105,12 @@ streaming banks' ``stats`` are ``StatsView`` facades over it), so
 counters survive component rebuilds - a ``refresh(full=True)`` that
 recompiles the server or re-plans the router re-attaches by name and
 keeps accumulating; ``registry.snapshot()/delta()`` feed the BENCH
-artifacts' ``metrics`` blocks.  The span tracer (``repro.obs.trace``)
+artifacts' ``metrics`` blocks.  The admission pipeline adds
+``cluster.router.{inflight_hits, shed_prescreen, flush_batch,
+flush_deadline, flush_force}`` counters and the
+``cluster.router.queue_depth`` gauge (queued + un-fenced in-flight
+misses); per-shard servers count every join entry point under
+``serving.server.h<hid>.queries``.  The span tracer (``repro.obs.trace``)
 threads one trace id per routed query / wavefront through
 ``ClusterRouter.route -> ClusterHost.call -> PatternServer -> kernel
 dispatch``, splitting launch from blocked device time; it is off by
@@ -127,9 +147,15 @@ from .cluster import (  # noqa: F401
 from .router import (  # noqa: F401
     BankPlacement,
     ClusterRouter,
+    DrainTicket,
     plan_placement,
 )
-from .server import PatternServer, QueryResult  # noqa: F401
+from .server import (  # noqa: F401
+    PatternServer,
+    QueryResult,
+    SharedEncoding,
+    encode_queries,
+)
 from .sharded import (  # noqa: F401
     make_serving_step,
     make_trie_serving_step,

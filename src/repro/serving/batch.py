@@ -111,6 +111,14 @@ def build_token_index(tokens, *, n_label_keys: int):
         count.astype(jnp.int32)
 
 
+# jitted alias of build_token_index: the index depends on the query
+# batch alone (never on the bank), so the cluster router builds it once
+# per flush and ships it to every shard (server.encode_queries)
+token_index = jax.jit(
+    build_token_index, static_argnames=("n_label_keys",)
+)
+
+
 @functools.partial(jax.jit, static_argnames=("n_label_keys",))
 def prescreen_counts(tokens, req, *, n_label_keys: int):
     """Sound necessary condition: possible[b,p] = counts_b >= req_p

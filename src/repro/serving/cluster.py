@@ -160,6 +160,10 @@ class ServingCluster:
         l2_size: int = 8192,
         devices: Optional[Sequence] = None,
         metrics: Optional[MetricsRegistry] = None,
+        max_wait: Optional[float] = None,
+        flush_batch: Optional[int] = None,
+        shed_depth: Optional[int] = None,
+        clock=None,
         **server_kw,
     ):
         self.bank = bank
@@ -178,6 +182,8 @@ class ServingCluster:
             self.hosts, n_patterns=bank.n_patterns,
             support=bank.support[: bank.n_patterns].astype(np.int64),
             topk=topk, metrics=self.metrics,
+            max_wait=max_wait, flush_batch=flush_batch,
+            shed_depth=shed_depth, clock=clock,
         )
 
     # ------------------------------------------------------------ serving
@@ -201,18 +207,37 @@ class ServingCluster:
         order)."""
         return self.router.joined_rows(seqs)
 
+    # --------------------------------------------- async ingestion
+    def submit(self, requests, k: Optional[int] = None):
+        """Admit one drain into the continuous-batching pipeline
+        without blocking (``ClusterRouter.submit``); redeem the
+        returned ticket with ``collect``.  Configure the flush/shed
+        policy via the constructor's ``max_wait`` / ``flush_batch`` /
+        ``shed_depth``."""
+        return self.router.submit(requests, k=k)
+
+    def poll(self) -> None:
+        """Deadline pump between sparse submits."""
+        self.router.poll()
+
+    def collect(self, ticket=None):
+        """Fence + finalize one ticket (or all outstanding ones)."""
+        return self.router.collect(ticket)
+
     # ------------------------------------------------------------ masking
     def set_row_mask(self, active: Optional[np.ndarray]) -> None:
         """Install a global tombstone mask: each shard server masks its
         slice of ``active``; the router reconciles its caches per-row
         (pure tombstones patch newly-dead columns in place, recoveries
-        fall back to a full drop - see ``ClusterRouter.apply_row_mask``)."""
+        fall back to a full drop - see ``ClusterRouter.apply_row_mask``).
+        The router goes first: its quiescence check (no uncollected
+        tickets) must refuse before any shard server is touched."""
+        self.router.apply_row_mask(active)
         for h in self.hosts:
             if not len(h.rows):
                 continue
             h.call(h.server.set_row_mask,
                    None if active is None else active[h.rows])
-        self.router.apply_row_mask(active)
 
     # -------------------------------------------------------------- stats
     def stats(self) -> Dict[str, int]:

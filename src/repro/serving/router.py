@@ -14,13 +14,44 @@ answers.  This module is the query plane over such a split:
 * ``ClusterRouter.route`` - takes the queries that arrived on *all*
   hosts in one drain, dedups them by canonical fingerprint, resolves
   the two-level cache (host-local L1, then the fingerprint owner's L2),
-  and joins every remaining miss in one batch per shard - each shard
-  owner runs its own ``PatternServer.exact_rows`` (pow-2 device
-  batches) over the union of misses, so requests that arrived on
-  different hosts share device batches.  Per-shard rows scatter back
-  into global bank order and the global top-k is scored over the merged
-  row, so routed answers are bit-equal to a single-host
+  and joins every remaining miss in one batch per shard - requests that
+  arrived on different hosts share device batches.  Per-shard rows
+  scatter back into global bank order and the global top-k is scored
+  over the merged row, so routed answers are bit-equal to a single-host
   ``PatternServer`` over the unsharded bank.
+* ``ClusterRouter.submit/poll/collect`` - the async admission pipeline
+  over the same cache/join/merge machinery (continuous batching):
+
+      submit -> [admission queue] -> flush -> [in-flight batches]
+                                                  -> collect
+
+  ``submit`` resolves caches immediately and enqueues the misses
+  (deduped against queued *and* in-flight fingerprints - a repeat
+  arriving while its first copy is still on device piggybacks instead
+  of re-joining).  A **flush** launches one batch per shard
+  (``PatternServer.launch_rows`` with one shared query encoding,
+  ``server.encode_queries``) and does NOT block: JAX dispatch is
+  async, so the joins compute while later submits keep accumulating.
+  Flush triggers: queue reached ``flush_batch`` (reason ``batch``),
+  head-of-queue older than ``max_wait`` (reason ``deadline``, checked
+  at every submit/poll against the injectable ``clock``), or a
+  ``collect`` needing unresolved rows (reason ``force``).  ``collect``
+  fences in admission order (``finalize_rows`` per shard), fills L2
+  then L1 exactly like the synchronous path, and returns per-host
+  results - bit-equal to ``route`` and the single-host server.
+
+  **Load shedding**: with ``shed_depth`` set, a miss admitted while
+  ``queue + in-flight >= shed_depth`` is not joined at all - it is
+  answered from the host-side counts prescreen
+  (``PatternServer.approx_rows``), a sound overapproximation flagged
+  ``exact=False`` and never cached.  Off by default: exactness stays
+  the default contract.
+
+  There is one cluster-wide admission queue, not one per shard: every
+  miss fans out to *all* shards (each answers its own column block),
+  so per-shard queues would always flush in lockstep anyway - the
+  per-shard split happens at flush time, one ``launch_rows`` per
+  shard over the same batch.
 
 Two-level cache: L1 is per-host (an arrival host answers replays of its
 own traffic without any cross-host hop); L2 entries live on the
@@ -39,7 +70,8 @@ process group would RPC and device-put behind the same interface).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence
+import time
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -47,7 +79,7 @@ from ..core.graphseq import TRSeq
 from ..obs import trace
 from ..obs.metrics import MetricsRegistry
 from .bank import PatternBank, sequence_fingerprint
-from .server import QueryResult, score_topk
+from .server import QueryResult, encode_queries, score_topk
 from .trie import TrieBank, build_trie
 
 
@@ -104,6 +136,52 @@ def _cache_put(cache: "Dict[str, np.ndarray]", size: int, fp: str,
         cache.popitem(last=False)
 
 
+@dataclasses.dataclass
+class _PendingJoin:
+    """One admitted cache-miss awaiting its shard join.  Shared by
+    every ticket that references the fingerprint (in-flight dedup);
+    ``row`` is filled when the batch carrying it is fenced."""
+
+    fp: str
+    seq: TRSeq
+    enqueued: float                       # admission clock reading
+    row: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class _InFlightBatch:
+    """One flushed batch: its admitted entries and the per-shard
+    ``InFlightRows`` handles, launched but not yet fenced."""
+
+    entries: List[_PendingJoin]
+    handles: list                          # [(host, InFlightRows)]
+    done: bool = False
+
+
+class DrainTicket:
+    """Handle for one ``ClusterRouter.submit`` drain: remembers the
+    request shape (per-host fingerprints, arrival hosts) and how each
+    fingerprint resolved (cached row / pending join / shed).  Redeem
+    with ``ClusterRouter.collect``."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self.fps: Dict[int, List[str]] = {}
+        self.arrival_hosts: Dict[str, set] = {}
+        self.rows: Dict[str, object] = {}   # row | _PendingJoin | None
+        self.cached: Dict[str, bool] = {}
+        self.shed: Dict[str, TRSeq] = {}    # fps answered approximately
+        self.results: Optional[Dict[int, List[QueryResult]]] = None
+
+    @property
+    def pending(self) -> int:
+        """Referenced joins not yet fenced (0 = collect won't block)."""
+        return sum(
+            1 for v in self.rows.values()
+            if isinstance(v, _PendingJoin) and v.row is None
+        )
+
+
 class ClusterRouter:
     """Batches queries arriving on different hosts into shared per-shard
     device batches and merges the per-shard rows (see the module
@@ -118,12 +196,30 @@ class ClusterRouter:
         topk: int = 10,
         metrics: Optional[MetricsRegistry] = None,
         metrics_ns: str = "cluster.router",
+        max_wait: Optional[float] = None,
+        flush_batch: Optional[int] = None,
+        shed_depth: Optional[int] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.hosts = list(hosts)
         self.n_patterns = n_patterns
         self.support = support
         self.topk = topk
         self._row_mask: Optional[np.ndarray] = None  # None = all active
+        # --- admission pipeline knobs (see module docstring) ---
+        # max_wait: deadline flush - seconds the head-of-queue may wait
+        # flush_batch: batch flush - queue length that triggers a flush
+        # shed_depth: queue+in-flight depth past which new misses get
+        #   prescreen-only approximate answers (None = never shed)
+        # clock: injectable monotonic clock (tests drive a fake one)
+        self.max_wait = max_wait
+        self.flush_batch = flush_batch
+        self.shed_depth = shed_depth
+        self.clock = time.monotonic if clock is None else clock
+        self._queue: List[_PendingJoin] = []     # admission order
+        self._pending: Dict[str, _PendingJoin] = {}  # queued+in-flight
+        self._batches: List[_InFlightBatch] = []     # launch order
+        self._tickets: List[DrainTicket] = []        # uncollected
         # registry-backed: pass ``metrics=`` to keep accumulating across
         # router rebuilds (the sharded streaming bank re-plans placement
         # on every full refresh; its hit counters must survive that)
@@ -131,7 +227,11 @@ class ClusterRouter:
         self.stats = self.metrics.view(metrics_ns, keys=[
             "queries", "l1_hits", "l2_hits", "misses",
             "shard_batches", "mask_patches", "mask_clears",
+            "inflight_hits", "shed_prescreen",
+            "flush_batch", "flush_deadline", "flush_force",
         ])
+        self._depth_gauge = self.metrics.gauge(
+            f"{metrics_ns}.queue_depth")
 
     # ------------------------------------------------------------- cache
     def owner(self, fp: str) -> int:
@@ -155,7 +255,14 @@ class ClusterRouter:
         (masked -> active) were cached as False with no way to recover
         the true bit, so any recovery still clears everything - the
         sound fallback.  Patches are copy-on-write: previously returned
-        ``QueryResult.contained`` arrays may alias cache entries."""
+        ``QueryResult.contained`` arrays may alias cache entries.
+
+        The admission pipeline must be quiescent: an in-flight join was
+        launched against the pre-mask requirements and its ticket holds
+        references the patch cannot reach - collect every ticket before
+        re-masking."""
+        assert not (self._tickets or self._queue or self._batches), \
+            "collect all tickets before changing the row mask"
         old = self._row_mask
         new = (None if active is None
                else np.asarray(active, bool).copy())
@@ -178,21 +285,36 @@ class ClusterRouter:
         self.stats["mask_patches"] += 1
 
     # -------------------------------------------------------------- join
+    def _live_hosts(self) -> List:
+        return [h for h in self.hosts if len(h.rows)]
+
     def joined_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
         """Cache-bypassing merged containment rows [len(seqs),
-        n_patterns]: one ``exact_rows`` batch per non-empty shard, rows
-        scattered back into global bank order.  Zero collectives - the
-        shard outputs are disjoint column blocks."""
+        n_patterns], rows scattered back into global bank order.  The
+        queries are encoded ONCE (``encode_queries``) and every shard's
+        join is launched before any is fenced - per-shard cost is the
+        shard's own group joins, not a full re-encode, and the shards'
+        device batches overlap.  Zero collectives - the shard outputs
+        are disjoint column blocks."""
         out = np.zeros((len(seqs), self.n_patterns), bool)
-        if not len(seqs):
+        live = self._live_hosts()
+        if not len(seqs) or not live:
             return out
+        nlk = live[0].server.bank.n_label_keys
+        cap = min(h.server.max_batch for h in live)
         with trace.span("cluster.join", n=len(seqs)):
-            for h in self.hosts:
-                if not len(h.rows):
-                    continue  # empty shard: no rows to answer
-                shard = h.call(h.server.exact_rows, seqs)
-                out[:, h.rows] = shard[:, : len(h.rows)]
-                self.stats["shard_batches"] += 1
+            for c0 in range(0, len(seqs), cap):
+                chunk = list(seqs[c0 : c0 + cap])
+                shared = encode_queries(chunk, n_label_keys=nlk)
+                launched = [
+                    (h, h.call(h.server.launch_rows, chunk, shared))
+                    for h in live
+                ]
+                for h, flight in launched:
+                    shard = h.call(h.server.finalize_rows, flight)
+                    out[c0 : c0 + len(chunk), h.rows] = \
+                        shard[:, : len(h.rows)]
+            self.stats["shard_batches"] += len(live)
         return out
 
     # ------------------------------------------------------------- route
@@ -272,3 +394,217 @@ class ClusterRouter:
                     ]
                     for hid in requests
                 }
+
+    # --------------------------------------------- admission pipeline
+    def depth(self) -> int:
+        """Misses admitted but not yet fenced: queued + in flight."""
+        return len(self._queue) + sum(
+            len(b.entries) for b in self._batches if not b.done
+        )
+
+    def _note_depth(self) -> None:
+        self._depth_gauge.set(self.depth())
+
+    def submit(
+        self,
+        requests: Mapping[int, Sequence[TRSeq]],
+        k: Optional[int] = None,
+    ) -> DrainTicket:
+        """Admit one drain without blocking: resolve the two-level
+        cache exactly like ``route``, piggyback on queued/in-flight
+        duplicates, shed to the approximate tier past ``shed_depth``,
+        enqueue the rest, and fire any flush trigger.  Returns a ticket
+        for ``collect``; the queued joins run on device while later
+        drains keep submitting."""
+        k = self.topk if k is None else k
+        ticket = DrainTicket(k)
+        with trace.root_or_span(
+                "cluster.submit",
+                n=sum(len(s) for s in requests.values())):
+            with trace.span("cluster.cache", cat="cache"):
+                for hid, seqs in requests.items():
+                    host = self.hosts[hid]
+                    ticket.fps[hid] = hfps = [
+                        sequence_fingerprint(s) for s in seqs
+                    ]
+                    self.stats["queries"] += len(seqs)
+                    for fp, s in zip(hfps, seqs):
+                        ticket.arrival_hosts.setdefault(
+                            fp, set()).add(hid)
+                        if fp in ticket.rows:
+                            continue
+                        if fp in host.l1:
+                            host.l1.move_to_end(fp)
+                            ticket.rows[fp] = host.l1[fp]
+                            ticket.cached[fp] = True
+                            self.stats["l1_hits"] += 1
+                            continue
+                        own = self.hosts[self.owner(fp)]
+                        if fp in own.l2:
+                            own.l2.move_to_end(fp)
+                            ticket.rows[fp] = own.l2[fp]
+                            ticket.cached[fp] = True
+                            self.stats["l2_hits"] += 1
+                            continue
+                        pend = self._pending.get(fp)
+                        if pend is not None:
+                            # an earlier drain already admitted this
+                            # fingerprint and it is queued or on
+                            # device: share its row, no second join
+                            ticket.rows[fp] = pend
+                            ticket.cached[fp] = False
+                            self.stats["inflight_hits"] += 1
+                            continue
+                        self.stats["misses"] += 1
+                        if (self.shed_depth is not None
+                                and self.depth() >= self.shed_depth):
+                            # overload: prescreen-only answer at
+                            # collect time, flagged inexact, uncached
+                            ticket.shed[fp] = s
+                            ticket.rows[fp] = None
+                            ticket.cached[fp] = False
+                            self.stats["shed_prescreen"] += 1
+                            continue
+                        pend = _PendingJoin(fp, s, self.clock())
+                        self._queue.append(pend)
+                        self._pending[fp] = pend
+                        ticket.rows[fp] = pend
+                        ticket.cached[fp] = False
+            self._tickets.append(ticket)
+            self._maybe_flush()
+            self._note_depth()
+        return ticket
+
+    def poll(self) -> None:
+        """Deadline pump: flush the queue if its head has waited past
+        ``max_wait``.  Call between submits when arrivals are sparse -
+        submit/collect fire the same check themselves."""
+        self._maybe_flush()
+        self._note_depth()
+
+    def _maybe_flush(self) -> None:
+        while self._queue:
+            if (self.flush_batch is not None
+                    and len(self._queue) >= self.flush_batch):
+                self._flush("batch")
+            elif (self.max_wait is not None
+                    and self.clock() - self._queue[0].enqueued
+                    >= self.max_wait):
+                self._flush("deadline")
+            else:
+                break
+
+    def _flush(self, reason: str) -> None:
+        """Launch the head of the queue as one batch per shard (shared
+        query encoding, ``launch_rows``) - dispatch only, no fence: the
+        joins compute while the pipeline keeps admitting."""
+        live = self._live_hosts()
+        cap = min((h.server.max_batch for h in live),
+                  default=len(self._queue))
+        batch = self._queue[:cap]
+        del self._queue[:cap]
+        seqs = [e.seq for e in batch]
+        with trace.span("cluster.flush", reason=reason, n=len(seqs)):
+            handles = []
+            if live:
+                shared = encode_queries(
+                    seqs,
+                    n_label_keys=live[0].server.bank.n_label_keys,
+                )
+                handles = [
+                    (h, h.call(h.server.launch_rows, seqs, shared))
+                    for h in live
+                ]
+            self.stats["shard_batches"] += len(handles)
+        self._batches.append(
+            _InFlightBatch(entries=batch, handles=handles))
+        self.stats["flush_" + reason] += 1
+
+    def _fence_batch(self, batch: _InFlightBatch) -> None:
+        """Fence one in-flight batch and fill the owner L2s - the
+        async analogue of ``route``'s post-join cache fill, same order:
+        batch entries in admission order, L2 before any ticket's L1."""
+        with trace.span("cluster.fence", n=len(batch.entries)):
+            rows = np.zeros((len(batch.entries), self.n_patterns), bool)
+            for h, flight in batch.handles:
+                shard = h.call(h.server.finalize_rows, flight)
+                rows[:, h.rows] = shard[:, : len(h.rows)]
+            with trace.span("cluster.cache_fill", cat="cache"):
+                for i, e in enumerate(batch.entries):
+                    e.row = rows[i]
+                    own = self.hosts[self.owner(e.fp)]
+                    _cache_put(own.l2, own.l2_size, e.fp, rows[i])
+                    self._pending.pop(e.fp, None)
+        batch.done = True
+
+    def _approx_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
+        """Merged prescreen-only rows for the shed tier: each shard's
+        host-side counts prescreen, global bank order, no device."""
+        out = np.zeros((len(seqs), self.n_patterns), bool)
+        with trace.span("cluster.approx", n=len(seqs)):
+            for h in self._live_hosts():
+                shard = h.call(h.server.approx_rows, seqs)
+                out[:, h.rows] = shard[:, : len(h.rows)]
+        return out
+
+    def collect(
+        self, ticket: Optional[DrainTicket] = None,
+    ) -> "Dict[int, List[QueryResult]] | List[Dict[int, List[QueryResult]]]":
+        """Redeem one ticket (or, with ``None``, every outstanding
+        ticket in submit order).  Force-flushes and fences in admission
+        order until the ticket's joins are resolved, computes the shed
+        tier's approximate rows, fills arrival-host L1s, and returns
+        the per-host results - bit-equal to ``route`` on the same
+        requests wherever ``exact`` is True."""
+        if ticket is None:
+            return [self.collect(t) for t in list(self._tickets)]
+        if ticket.results is not None:
+            return ticket.results
+        with trace.root_or_span("cluster.collect"):
+            while ticket.pending:
+                if self._batches:
+                    self._fence_batch(self._batches.pop(0))
+                    continue
+                assert self._queue, \
+                    "pending join neither queued nor in flight"
+                self._flush("force")
+            self._note_depth()
+            with trace.span("cluster.finalize"):
+                rows: Dict[str, np.ndarray] = {}
+                exact: Dict[str, bool] = {}
+                for fp, v in ticket.rows.items():
+                    if fp in ticket.shed:
+                        continue
+                    rows[fp] = v.row if isinstance(v, _PendingJoin) \
+                        else v
+                    exact[fp] = True
+                if ticket.shed:
+                    shed_fps = list(ticket.shed)
+                    approx = self._approx_rows(
+                        [ticket.shed[fp] for fp in shed_fps])
+                    for i, fp in enumerate(shed_fps):
+                        rows[fp] = approx[i]
+                        exact[fp] = False
+                # exact rows land in their arrival hosts' L1s, same as
+                # route; approximate rows are never cached (a later
+                # lookup must not serve them as exact)
+                for fp, hids in ticket.arrival_hosts.items():
+                    if not exact[fp]:
+                        continue
+                    for hid in hids:
+                        host = self.hosts[hid]
+                        _cache_put(host.l1, host.l1_size, fp, rows[fp])
+                ticket.results = {
+                    hid: [
+                        QueryResult(
+                            fingerprint=fp, contained=rows[fp],
+                            topk=self._score(rows[fp], ticket.k),
+                            cached=ticket.cached[fp],
+                            exact=exact[fp],
+                        )
+                        for fp in ticket.fps[hid]
+                    ]
+                    for hid in ticket.fps
+                }
+        self._tickets.remove(ticket)
+        return ticket.results

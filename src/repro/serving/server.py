@@ -52,6 +52,8 @@ from .batch import (
     index_and_prescreen,
     max_key_bucket,
     pair_contains_indexed,
+    token_index,
+    token_keys_np,
     trie_level_advance_gather,
     trie_root_advance,
 )
@@ -87,10 +89,111 @@ class QueryResult:
     contained: np.ndarray          # [n_patterns] bool, bank order
     topk: List[Tuple[int, int]]    # (pattern id, support score)
     cached: bool = False
+    # False only on the cluster's load-shed tier: ``contained`` is then
+    # the prescreen overapproximation (true containment is a subset),
+    # never cached, never the default (see ClusterRouter.submit)
+    exact: bool = True
 
     @property
     def pattern_ids(self) -> np.ndarray:
         return np.nonzero(self.contained)[0]
+
+
+def _fence(name: str, t0: float, out, **args) -> None:
+    """Tracing-only launch/execution split for one async device call:
+    when tracing is on, fence the dispatch and record both halves.
+    When off this returns before reading any clock - the disabled path
+    never blocks, so results, dispatch counts, and async overlap are
+    untouched."""
+    if trace.enabled():
+        t1 = time.perf_counter()
+        jax.block_until_ready(out)
+        t2 = time.perf_counter()
+        trace.add_complete(name, "dispatch", t0, t1 - t0, **args)
+        trace.add_complete(name + ".device", "device", t1, t2 - t1)
+
+
+@dataclasses.dataclass
+class SharedEncoding:
+    """Query-side device encoding shared across bank shards.
+
+    Everything here is a function of the query batch alone:
+    ``slice_bank`` preserves the global ``nv``/``n_label_keys``, so the
+    tokens, the inverted token index, and the per-key counts are
+    identical no matter which shard consumes them.  The cluster router
+    builds one per flush and passes it to every shard's
+    ``launch_rows`` - without it each shard re-encodes and re-indexes
+    the same sequences (the dominant per-shard dispatch cost that made
+    cluster throughput go backwards with host count).  A process-group
+    host boundary would ship exactly this struct alongside the request
+    batch.
+
+    ``counts_np`` is the host mirror of ``count`` (one fence at build
+    time), letting shards run the counts prescreen as a host compare
+    against their ``req`` rows instead of a per-shard device dispatch -
+    bit-identical because both sides compare the same int32 counts."""
+
+    seqs: List[TRSeq]
+    tokens: "jnp.ndarray"          # [B, T, 6] padded query tokens
+    order: "jnp.ndarray"           # inverted token index (batch.py)
+    start: "jnp.ndarray"
+    count: "jnp.ndarray"           # [B, K] per-key token counts
+    counts_np: np.ndarray          # host mirror of ``count``
+    tmax: int                      # pow-2 max same-key bucket size
+    n_label_keys: int
+
+
+def encode_queries(
+    seqs: Sequence[TRSeq], *, n_label_keys: int
+) -> SharedEncoding:
+    """Encode one query batch into the shard-shareable device encoding
+    (see ``SharedEncoding``).  One device_put for the tokens, one index
+    build, one fence for the host counts - amortised over every shard
+    instead of paid per shard."""
+    seqs = list(seqs)
+    assert seqs, "cannot encode an empty query batch"
+    with trace.span("serving.encode", n=len(seqs), shared=True):
+        tdb = encode_db(
+            seqs,
+            pad_to=_pow2(max(
+                1, max(sum(len(it) for it in s) for s in seqs)
+            )),
+            pad_seqs_to=_pow2(len(seqs)),
+        )
+        tokens = jnp.asarray(tdb.tokens)
+        tmax = _pow2(max_key_bucket(tdb.tokens, n_label_keys))
+    t0 = time.perf_counter()
+    order, start, count = token_index(
+        tokens, n_label_keys=n_label_keys
+    )
+    _fence("serving.token_index", t0, (order, start, count))
+    counts_np = np.asarray(count)
+    return SharedEncoding(
+        seqs=seqs, tokens=tokens, order=order, start=start,
+        count=count, counts_np=counts_np, tmax=tmax,
+        n_label_keys=n_label_keys,
+    )
+
+
+@dataclasses.dataclass
+class InFlightRows:
+    """One launched-but-unfenced containment batch
+    (``PatternServer.launch_rows``): the dispatched join outputs stay
+    on device until ``finalize_rows`` reads them, so a caller can keep
+    launching batches (other shards, the next flush) while this one
+    computes.  ``pending`` holds layout-specific deferred device reads;
+    ``contained``/``ovf`` are the host accumulators they resolve into."""
+
+    layout: str
+    seqs: List[TRSeq]
+    tokens: object
+    order: object
+    start: object
+    count: object
+    tmax: int
+    contained: np.ndarray
+    ovf: np.ndarray
+    pending: list
 
 
 class PatternServer:
@@ -122,6 +225,10 @@ class PatternServer:
             raise ValueError(f"unknown bank_layout {bank_layout!r}")
         self.bank_layout = bank_layout
         self._req = jnp.asarray(bank.req)
+        # host mirror of the (possibly masked) prescreen requirements:
+        # shared-encoding launches and the approx tier prescreen on host
+        # against these instead of re-dispatching per shard
+        self._req_np = bank.req
         # patterns grouped by program length: the join runs exactly L_g
         # steps per group instead of the bank-wide maximum, and the
         # group's phi width shrinks to match
@@ -146,6 +253,8 @@ class PatternServer:
             self._node_req = jnp.asarray(
                 t.node_req.reshape(t.n_nodes, bank.req.shape[1])
             )
+            self._node_req_np = t.node_req.reshape(
+                t.n_nodes, bank.req.shape[1])
             # per-level host tables driving the level-synchronous scan.
             # Leaf nodes never seed children, so their cells take the
             # compaction-free path (the trie's analogue of the flat
@@ -193,21 +302,6 @@ class PatternServer:
             "escalated_cells", "host_fallback_cells",
         ])
 
-    # ------------------------------------------------------------ tracing
-    @staticmethod
-    def _fence(name: str, t0: float, out, **args) -> None:
-        """Tracing-only launch/execution split for one async device
-        call: when tracing is on, fence the dispatch and record both
-        halves.  When off this returns before reading any clock - the
-        disabled path never blocks, so results, dispatch counts, and
-        async overlap are untouched."""
-        if trace.enabled():
-            t1 = time.perf_counter()
-            jax.block_until_ready(out)
-            t2 = time.perf_counter()
-            trace.add_complete(name, "dispatch", t0, t1 - t0, **args)
-            trace.add_complete(name + ".device", "device", t1, t2 - t1)
-
     # ------------------------------------------------------------- masking
     def set_row_mask(self, active: Optional[np.ndarray]) -> None:
         """Install (or with ``None`` clear) a tombstone mask: rows where
@@ -225,9 +319,12 @@ class PatternServer:
         if active is None:
             self._row_mask = None
             self._req = jnp.asarray(bank.req)
+            self._req_np = bank.req
             if self.bank_layout == "trie":
-                self._node_req = jnp.asarray(self.trie.node_req.reshape(
-                    self.trie.n_nodes, bank.req.shape[1]))
+                nreq = self.trie.node_req.reshape(
+                    self.trie.n_nodes, bank.req.shape[1])
+                self._node_req = jnp.asarray(nreq)
+                self._node_req_np = nreq
             return
         active = np.asarray(active, bool)
         assert active.shape == (bank.n_patterns,)
@@ -241,10 +338,11 @@ class PatternServer:
             )
             req = np.concatenate([req, pad])
         self._req = jnp.asarray(req)
+        self._req_np = req
         if self.bank_layout == "trie":
-            self._node_req = jnp.asarray(
-                masked_node_req(self.trie, active)
-            )
+            nreq = masked_node_req(self.trie, active)
+            self._node_req = jnp.asarray(nreq)
+            self._node_req_np = nreq
 
     # ------------------------------------------------------------- device
     def exact_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
@@ -252,25 +350,83 @@ class PatternServer:
         directly on device (chunked by ``max_batch``), bypassing the
         fingerprint cache - the streaming layer's entry point (it
         maintains per-sequence window bitmaps, so every arrival must be
-        answered fresh and row-aligned)."""
+        answered fresh and row-aligned).  Counts toward ``queries`` like
+        ``query`` does - routed/streamed traffic is traffic.  All chunks
+        launch before any is fenced, so multi-chunk calls overlap their
+        device batches."""
+        self.stats["queries"] += len(seqs)
         out = np.zeros((len(seqs), self.bank.n_patterns), bool)
         with trace.root_or_span("serving.exact_rows", n=len(seqs)):
+            launched = []
             for start in range(0, len(seqs), self.max_batch):
                 chunk = list(seqs[start : start + self.max_batch])
-                out[start : start + len(chunk)] = self._run_batch(chunk)
+                launched.append((start, self._launch(chunk)))
+            for start, flight in launched:
+                out[start : start + len(flight.seqs)] = \
+                    self.finalize_rows(flight)
         return out
+
+    def launch_rows(
+        self, seqs: Sequence[TRSeq],
+        shared: Optional[SharedEncoding] = None,
+    ) -> InFlightRows:
+        """Dispatch the containment joins for one chunk (``<=
+        max_batch``) and return without blocking: the joins stay in
+        flight on device until ``finalize_rows``.  The cluster router's
+        entry point - it launches one batch per shard back-to-back and
+        only fences at result finalize, so shards overlap instead of
+        serializing.  Pass ``shared`` (``encode_queries``) to skip this
+        shard's encode/index/prescreen dispatches entirely.  Counts the
+        batch toward ``queries``."""
+        self.stats["queries"] += len(seqs)
+        return self._launch(list(seqs), shared)
+
+    def _launch(
+        self, seqs: List[TRSeq],
+        shared: Optional[SharedEncoding] = None,
+    ) -> InFlightRows:
+        assert len(seqs) <= self.max_batch
+        layout = self.bank_layout
+        with trace.span("serving.batch", n=len(seqs), layout=layout):
+            if layout == "trie":
+                return self._launch_trie(seqs, shared)
+            return self._launch_flat(seqs, shared)
+
+    def finalize_rows(self, flight: InFlightRows) -> np.ndarray:
+        """Fence one in-flight batch: read the join outputs back,
+        resolve undecided cells (escalation ladder + host oracle), and
+        return the exact rows.  ``launch_rows`` + ``finalize_rows`` ==
+        the old synchronous batch, bit for bit."""
+        with trace.span("serving.finalize_rows", n=len(flight.seqs),
+                        layout=flight.layout):
+            if flight.layout == "trie":
+                for rows, sub, acc, ovf, n in flight.pending:
+                    acc_np = np.asarray(acc)[:n]
+                    ovf_np = np.asarray(ovf)[:n]
+                    live = sub >= 0
+                    idx = np.clip(sub, 0, None)
+                    flight.contained[:, rows] = np.where(
+                        live, acc_np[idx], False)
+                    flight.ovf[:, rows] = np.where(
+                        live, ovf_np[idx], False)
+            else:
+                for b_idx, p_global, c, o, n in flight.pending:
+                    flight.contained[b_idx, p_global] = np.array(c)[:n]
+                    flight.ovf[b_idx, p_global] = np.array(o)[:n]
+            self._resolve_undecided(
+                flight.tokens, flight.order, flight.start,
+                flight.count, flight.tmax, flight.contained,
+                flight.ovf, flight.seqs,
+            )
+            return flight.contained
 
     def _run_batch(self, seqs: List[TRSeq]) -> np.ndarray:
         """Exact containment rows [len(seqs), n_patterns] for one chunk."""
-        assert len(seqs) <= self.max_batch
-        if self.bank_layout == "trie":
-            with trace.span("serving.batch", n=len(seqs),
-                            layout="trie"):
-                return self._run_batch_trie(seqs)
-        with trace.span("serving.batch", n=len(seqs), layout="flat"):
-            return self._run_batch_flat(seqs)
+        return self.finalize_rows(self._launch(seqs))
 
-    def _run_batch_flat(self, seqs: List[TRSeq]) -> np.ndarray:
+    def _encode_own(self, seqs: List[TRSeq]):
+        """Per-shard encode + index for a launch without a shared
+        encoding (single-host query path)."""
         bank = self.bank
         with trace.span("serving.encode", n=len(seqs)):
             tdb = encode_db(
@@ -282,19 +438,45 @@ class PatternServer:
             )
             tokens = jnp.asarray(tdb.tokens)
             tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
-        # one index build per batch, shared by every group join below
-        t0 = time.perf_counter()
-        order, start, count, possible = index_and_prescreen(
-            tokens, self._req, n_label_keys=bank.n_label_keys
-        )
-        self._fence("serving.prescreen", t0,
-                    (order, start, count, possible))
-        possible = np.asarray(possible)[: len(seqs), : bank.n_patterns]
+        return tokens, tmax
+
+    def _launch_flat(
+        self, seqs: List[TRSeq],
+        shared: Optional[SharedEncoding] = None,
+    ) -> InFlightRows:
+        bank = self.bank
+        if shared is None:
+            tokens, tmax = self._encode_own(seqs)
+            # one index build per batch, shared by every group join
+            t0 = time.perf_counter()
+            order, start, count, possible = index_and_prescreen(
+                tokens, self._req, n_label_keys=bank.n_label_keys
+            )
+            _fence("serving.prescreen", t0,
+                   (order, start, count, possible))
+            possible = np.asarray(possible)[
+                : len(seqs), : bank.n_patterns]
+        else:
+            assert shared.n_label_keys == bank.n_label_keys
+            tokens, order, start, count, tmax = (
+                shared.tokens, shared.order, shared.start,
+                shared.count, shared.tmax,
+            )
+            # host compare against the shared counts: bit-identical to
+            # the device prescreen (same int32 counts, same req rows)
+            # and zero per-shard dispatches
+            with trace.span("serving.prescreen_host",
+                            n=len(seqs)):
+                possible = (
+                    shared.counts_np[: len(seqs), None, :]
+                    >= self._req_np[None, : bank.n_patterns, :]
+                ).all(-1)
         self.stats["device_batches"] += 1
         self.stats["pairs_possible"] += int(possible.sum())
         self.stats["pairs_prescreened"] += int(possible.size)
         contained = np.zeros((len(seqs), bank.n_patterns), bool)
         ovf_out = np.zeros_like(contained)
+        pending = []
         for rows, steps_g in self._groups:
             b_idx, g_idx = np.nonzero(possible[:, rows])
             if not len(b_idx):
@@ -319,15 +501,47 @@ class PatternServer:
                 use_kernel=self.use_kernel, block_g=self.block_g,
                 uniform_length=True,
             )
-            self._fence("serving.join", t0, (c, o),
-                        steps=int(steps_g.shape[1]), cells=n)
-            p_global = rows[g_idx]
-            contained[b_idx, p_global] = np.array(c)[:n]
-            ovf_out[b_idx, p_global] = np.array(o)[:n]
-        self._resolve_undecided(
-            tokens, order, start, count, tmax, contained, ovf_out, seqs
+            _fence("serving.join", t0, (c, o),
+                   steps=int(steps_g.shape[1]), cells=n)
+            pending.append((b_idx, rows[g_idx], c, o, n))
+        return InFlightRows(
+            layout="flat", seqs=seqs, tokens=tokens, order=order,
+            start=start, count=count, tmax=tmax, contained=contained,
+            ovf=ovf_out, pending=pending,
         )
-        return contained
+
+    def approx_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
+        """Prescreen-only approximate rows [len(seqs), n_patterns]: the
+        sound necessary condition ``counts >= req`` evaluated entirely
+        on host - zero device dispatches.  True containment is always a
+        subset (``contained <= approx`` cellwise); masked rows answer
+        False (their req is ``REQ_MASKED``).  The cluster's load-shed
+        tier serves these, flagged ``exact=False``, when the admission
+        queue is over its shed depth."""
+        bank = self.bank
+        out = np.zeros((len(seqs), bank.n_patterns), bool)
+        if not len(seqs) or not bank.n_patterns:
+            return out
+        with trace.span("serving.approx", n=len(seqs)):
+            tdb = encode_db(
+                list(seqs),
+                pad_to=_pow2(max(
+                    1, max(sum(len(it) for it in s) for s in seqs)
+                )),
+                pad_seqs_to=_pow2(len(seqs)),
+            )
+            key = token_keys_np(tdb.tokens, bank.n_label_keys)
+            K = 6 * bank.n_label_keys
+            B = key.shape[0]
+            rowed = key + np.arange(B)[:, None] * (K + 1)
+            counts = np.bincount(
+                rowed.ravel(), minlength=B * (K + 1)
+            ).reshape(B, K + 1)[:, :K].astype(np.int32)
+            out[:] = (
+                counts[: len(seqs), None, :]
+                >= self._req_np[None, : bank.n_patterns, :]
+            ).all(-1)
+        return out
 
     def _resolve_undecided(self, tokens, order, start, count, tmax,
                            contained, ovf, seqs):
@@ -384,7 +598,7 @@ class PatternServer:
                 use_kernel=self.use_kernel, block_g=self.block_g,
                 uniform_length=True,
             )
-            self._fence("serving.escalate.join", t0, (c2, o2),
+            _fence("serving.escalate.join", t0, (c2, o2),
                         cells=m)
             contained[ub, up] = np.asarray(c2)[:m]
             ovf[ub, up] = np.asarray(o2)[:m]
@@ -446,7 +660,7 @@ class PatternServer:
                     tokens, order, start, count, *prev,
                     jnp.asarray(cells), **kw,
                 )
-            self._fence("serving.escalate.trie_level", t0, out,
+            _fence("serving.escalate.trie_level", t0, out,
                         level=d, cells=n_cells)
             phi, psi, valid, acc, ovf_state, ovf_term = out
             prev = (phi, psi, valid, ovf_state)
@@ -469,43 +683,61 @@ class PatternServer:
             ovf[:, rows] = np.where(live, ovf_np[idx], ovf[:, rows])
             self.stats["escalated_cells"] += int(live.sum())
 
-    def _run_batch_trie(self, seqs: List[TRSeq]) -> np.ndarray:
-        """Trie-layout batch: one frontier per (sequence, trie node),
+    def _launch_trie(
+        self, seqs: List[TRSeq],
+        shared: Optional[SharedEncoding] = None,
+    ) -> InFlightRows:
+        """Trie-layout launch: one frontier per (sequence, trie node),
         one device dispatch per trie level; a level's frontiers are
         seeded by gathering its parents' compacted frontiers from the
         previous level's cell array.  The residual-``req`` prescreen
         compacts each level to its surviving cells (a pruned node's
-        subtree never seeds).  Same exactness contract as the flat
-        path: overflow-undecided terminals escalate through a wider
-        flat replay, then the host oracle."""
+        subtree never seeds).  The level loop chains device frontiers
+        without any host read (terminal accept bits are deferred to
+        ``finalize_rows``), so the whole walk dispatches without
+        blocking.  Same exactness contract as the flat path:
+        overflow-undecided terminals escalate through a wider replay,
+        then the host oracle."""
         bank = self.bank
         B0 = len(seqs)
         contained = np.zeros((B0, bank.n_patterns), bool)
-        if not self._tlevels or not bank.n_patterns:
-            return contained
-        with trace.span("serving.encode", n=len(seqs)):
-            tdb = encode_db(
-                seqs,
-                pad_to=_pow2(max(
-                    1, max(sum(len(it) for it in s) for s in seqs)
-                )),
-                pad_seqs_to=_pow2(len(seqs)),
+        ovf_out = np.zeros((B0, bank.n_patterns), bool)
+
+        def flight(tokens=None, order=None, start=None, count=None,
+                   tmax=1, fetch=()):
+            return InFlightRows(
+                layout="trie", seqs=seqs, tokens=tokens, order=order,
+                start=start, count=count, tmax=tmax,
+                contained=contained, ovf=ovf_out, pending=list(fetch),
             )
-            tokens = jnp.asarray(tdb.tokens)
-            tmax = _pow2(max_key_bucket(tdb.tokens, bank.n_label_keys))
-        t0 = time.perf_counter()
-        order, start, count, possible = index_and_node_prescreen(
-            tokens, self._node_req, n_label_keys=bank.n_label_keys
-        )
-        self._fence("serving.prescreen", t0,
-                    (order, start, count, possible))
-        poss = np.asarray(possible)[:B0]
+
+        if not self._tlevels or not bank.n_patterns:
+            return flight()
+        if shared is None:
+            tokens, tmax = self._encode_own(seqs)
+            t0 = time.perf_counter()
+            order, start, count, possible = index_and_node_prescreen(
+                tokens, self._node_req, n_label_keys=bank.n_label_keys
+            )
+            _fence("serving.prescreen", t0,
+                   (order, start, count, possible))
+            poss = np.asarray(possible)[:B0]
+        else:
+            assert shared.n_label_keys == bank.n_label_keys
+            tokens, order, start, count, tmax = (
+                shared.tokens, shared.order, shared.start,
+                shared.count, shared.tmax,
+            )
+            with trace.span("serving.prescreen_host", n=len(seqs)):
+                poss = (
+                    shared.counts_np[:B0, None, :]
+                    >= self._node_req_np[None, :, :]
+                ).all(-1)
         self.stats["device_batches"] += 1
         # node cells, not pattern pairs: a pattern spans several nodes,
         # so these are NOT comparable to the flat layout's pairs_* keys
         self.stats["cells_possible"] += int(poss.sum())
         self.stats["cells_prescreened"] += int(poss.size)
-        ovf_out = np.zeros((B0, bank.n_patterns), bool)
         D = len(self._tlevels)
         prev = None      # device frontiers of the previous level's cells
         pos_prev = None  # [B0, m_{d-1}] internal-cell index, -1 = none
@@ -539,7 +771,7 @@ class PatternServer:
                     tokens, order, start, count, *prev,
                     jnp.asarray(cells), **kw,
                 )
-            self._fence("serving.trie_advance", t0, out,
+            _fence("serving.trie_advance", t0, out,
                         level=d, cells=n)
             return out
 
@@ -591,17 +823,8 @@ class PatternServer:
                                       ovf_term, n_int))
                 else:
                     break  # no internal frontier: nothing seeds deeper
-        for rows, sub, acc, ovf, n in fetch:
-            acc_np = np.asarray(acc)[:n]
-            ovf_np = np.asarray(ovf)[:n]
-            live = sub >= 0
-            idx = np.clip(sub, 0, None)
-            contained[:, rows] = np.where(live, acc_np[idx], False)
-            ovf_out[:, rows] = np.where(live, ovf_np[idx], False)
-        self._resolve_undecided(
-            tokens, order, start, count, tmax, contained, ovf_out, seqs
-        )
-        return contained
+        return flight(tokens=tokens, order=order, start=start,
+                      count=count, tmax=tmax, fetch=fetch)
 
     # ------------------------------------------------------------ scoring
     def _score(self, contained: np.ndarray, k: int) -> List[Tuple[int, int]]:

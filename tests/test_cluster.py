@@ -26,7 +26,7 @@ except ImportError:  # pragma: no cover - CI shim (see hypothesis_compat)
 
 from repro.core.reverse_search import mine_gtrace_rs
 from repro.mining.driver import AcceleratedMiner
-from repro.serving.bank import compile_bank
+from repro.serving.bank import compile_bank, sequence_fingerprint
 from repro.serving.cluster import (
     ReplicaGroup,
     ServingCluster,
@@ -222,6 +222,201 @@ def test_l2_entries_survive_tombstone():
     got = cl.query(queries, host=0)
     np.testing.assert_array_equal(
         np.stack([r.contained for r in got]), srv.exact_rows(queries))
+
+
+# ------------------------------------------------ async admission pipeline
+def _flatten(results, queries, n_hosts):
+    """Per-query results in original order from a _spread drain."""
+    return [results[i % n_hosts][i // n_hosts]
+            for i in range(len(queries))]
+
+
+@pytest.mark.parametrize("layout", ["flat", "trie"])
+def test_async_submit_collect_equals_route_and_single_host(layout):
+    """The tentpole contract: the continuous-batching pipeline
+    (submit -> flush -> collect) is bit-equal to the synchronous
+    ``route`` AND to the single-host PatternServer, and every exact-tier
+    answer is flagged exact."""
+    bank = _bank(41)
+    queries = random_db(42, n_seq=8)
+    srv = PatternServer(bank, bank_layout=layout)
+    want = srv.query(queries)
+    sync = ServingCluster(bank, 2, bank_layout=layout)
+    ref = _flatten(sync.query_multi(_spread(queries, 2)), queries, 2)
+    cl = ServingCluster(bank, 2, bank_layout=layout, flush_batch=3)
+    got = _flatten(cl.collect(cl.submit(_spread(queries, 2))),
+                   queries, 2)
+    for w, a, b in zip(want, ref, got):
+        np.testing.assert_array_equal(a.contained, w.contained)
+        np.testing.assert_array_equal(b.contained, w.contained)
+        assert a.topk == b.topk == w.topk
+        assert a.exact and b.exact
+    assert cl.router.depth() == 0, "collect must drain the pipeline"
+
+
+def test_inflight_dedup_shares_join():
+    """A fingerprint resubmitted while its first copy is queued or on
+    device piggybacks on the same join: one device batch, one shared
+    row, counted as an in-flight hit instead of a second miss."""
+    bank = _bank(31)
+    queries = random_db(32, n_seq=4)
+    ufps = len({sequence_fingerprint(s) for s in queries})
+    cl = ServingCluster(bank, 2, bank_layout="flat", flush_batch=ufps)
+    t1 = cl.submit(_spread(queries, 2))       # batch trigger: in flight
+    assert cl.router.stats["flush_batch"] == 1
+    batches = cl.router.stats["shard_batches"]
+    t2 = cl.submit(_spread(queries, 2))       # same fps, still unfenced
+    assert cl.router.stats["inflight_hits"] == ufps
+    assert cl.router.stats["misses"] == ufps, \
+        "piggybacked repeats must not count as misses"
+    assert cl.router.stats["shard_batches"] == batches, \
+        "piggybacked repeats must not launch a second join"
+    r1 = _flatten(cl.collect(t1), queries, 2)
+    r2 = _flatten(cl.collect(t2), queries, 2)
+    for a, b in zip(r1, r2):
+        assert a.contained is b.contained, "tickets share the row"
+        assert a.topk == b.topk
+
+
+@pytest.mark.parametrize("layout", ["flat", "trie"])
+def test_shed_tier_is_flagged_approximate_superset(layout):
+    """Load shedding: past ``shed_depth`` new misses are answered from
+    the host-side counts prescreen - a sound overapproximation of the
+    exact bits, flagged ``exact=False``, never cached; the default
+    (no ``shed_depth``) never sheds."""
+    bank = _bank(33)
+    queries = random_db(34, n_seq=5)
+    srv = PatternServer(bank, bank_layout=layout)
+    exact = srv.exact_rows(queries)
+    ufps = len({sequence_fingerprint(s) for s in queries})
+    cl = ServingCluster(bank, 2, bank_layout=layout, shed_depth=0)
+    got = _flatten(cl.collect(cl.submit(_spread(queries, 2))),
+                   queries, 2)
+    assert cl.router.stats["shed_prescreen"] == ufps
+    assert cl.router.stats["misses"] == ufps, \
+        "shed requests still count as misses"
+    for i, r in enumerate(got):
+        assert not r.exact
+        assert not (exact[i] & ~r.contained).any(), \
+            "prescreen must never drop a true containment"
+    assert all(not h.l1 and not h.l2 for h in cl.hosts), \
+        "approximate rows must never enter the caches"
+    # default config: exactness is the contract, nothing sheds
+    cl2 = ServingCluster(bank, 2, bank_layout=layout, flush_batch=2)
+    got2 = _flatten(cl2.collect(cl2.submit(_spread(queries, 2))),
+                    queries, 2)
+    assert cl2.router.stats["shed_prescreen"] == 0
+    for i, r in enumerate(got2):
+        assert r.exact
+        np.testing.assert_array_equal(r.contained, exact[i])
+
+
+def test_deadline_flush_under_fake_clock():
+    """Deadline-aware flushing is deterministic under an injected
+    clock: nothing flushes before ``max_wait``, the head-of-queue age
+    triggers exactly one deadline flush at the boundary, and the
+    queue-depth gauge tracks ``depth()`` throughout."""
+    bank = _bank(35)
+    queries = random_db(36, n_seq=6)
+    now = [0.0]
+    cl = ServingCluster(bank, 2, bank_layout="flat", max_wait=1.0,
+                        clock=lambda: now[0])
+    gauge = lambda: cl.metrics.snapshot(
+        "cluster.router")["cluster.router.queue_depth"]
+    t1 = cl.submit(_spread(queries[:3], 2))
+    ufps = len({sequence_fingerprint(s) for s in queries[:3]})
+    assert cl.router.depth() == ufps == gauge()
+    now[0] = 0.99
+    cl.poll()
+    assert cl.router.stats["flush_deadline"] == 0, "before the deadline"
+    assert cl.router.depth() == ufps, "queue intact"
+    now[0] = 1.0
+    cl.poll()
+    assert cl.router.stats["flush_deadline"] == 1, "head aged past max_wait"
+    assert cl.router.depth() == ufps == gauge(), \
+        "launched but unfenced joins still count toward depth"
+    t2 = cl.submit(_spread(queries[3:], 2))   # fresh queue, young head
+    results = cl.collect()                    # all tickets, submit order
+    assert cl.router.stats["flush_force"] >= 1
+    assert cl.router.depth() == 0 == gauge()
+    srv = PatternServer(bank, bank_layout="flat")
+    want = srv.exact_rows(queries)
+    got = (_flatten(results[0], queries[:3], 2)
+           + _flatten(results[1], queries[3:], 2))
+    for i, r in enumerate(got):
+        np.testing.assert_array_equal(r.contained, want[i])
+        assert r.exact
+
+
+def test_async_cache_parity_with_sync_route():
+    """Satellite: cache behavior is path-independent.  Driving the same
+    interleaved drains through ``route`` and through submit+collect
+    yields identical hit/miss counters, identical L1/L2 key sets in
+    identical LRU order, and identical post-mask-patch cache contents."""
+    bank = _bank(37)
+    pool = random_db(38, n_seq=10)
+    rng = random.Random(7)
+    drains = [
+        _spread([pool[rng.randrange(len(pool))]
+                 for _ in range(rng.randint(1, 4))], 2)
+        for _ in range(6)
+    ]
+    sync = ServingCluster(bank, 2, bank_layout="flat")
+    async_ = ServingCluster(bank, 2, bank_layout="flat", flush_batch=2)
+    for d in drains:
+        ra = sync.query_multi(d)
+        rb = async_.collect(async_.submit(d))
+        for hid in ra:
+            for a, b in zip(ra[hid], rb[hid]):
+                np.testing.assert_array_equal(a.contained, b.contained)
+                assert a.cached == b.cached and a.topk == b.topk
+    for key in ("queries", "l1_hits", "l2_hits", "misses"):
+        assert sync.router.stats[key] == async_.router.stats[key], key
+    for ha, hb in zip(sync.hosts, async_.hosts):
+        assert list(ha.l1.keys()) == list(hb.l1.keys()), "L1 LRU order"
+        assert list(ha.l2.keys()) == list(hb.l2.keys()), "L2 LRU order"
+    # the copy-on-write tombstone patch sees the same cache state
+    mask = np.arange(bank.n_patterns) % 2 == 0
+    sync.set_row_mask(mask)
+    async_.set_row_mask(mask)
+    assert (sync.router.stats["mask_patches"]
+            == async_.router.stats["mask_patches"] == 1)
+    for ha, hb in zip(sync.hosts, async_.hosts):
+        for ca, cb in ((ha.l1, hb.l1), (ha.l2, hb.l2)):
+            for fp in ca:
+                np.testing.assert_array_equal(ca[fp], cb[fp])
+
+
+def test_exact_rows_counts_queries():
+    """Satellite bugfix: the routed path enters the shard servers via
+    ``exact_rows``/``launch_rows``, which used to skip the ``queries``
+    bump - per-host query counters read 0 in the cluster bench."""
+    bank = _bank(23)
+    queries = random_db(24, n_seq=5)
+    srv = PatternServer(bank)
+    srv.exact_rows(queries)
+    assert srv.stats["queries"] == len(queries)
+    cl = ServingCluster(bank, 2)
+    cl.exact_rows(queries)
+    for h in cl.hosts:
+        if len(h.rows):
+            assert h.server.stats["queries"] == len(queries)
+
+
+def test_row_mask_requires_quiescent_pipeline():
+    """In-flight joins were launched against the pre-mask requirements
+    and ticket-held rows escape the copy-on-write patch, so re-masking
+    with uncollected tickets must refuse."""
+    bank = _bank(39)
+    queries = random_db(40, n_seq=3)
+    cl = ServingCluster(bank, 2, bank_layout="flat")
+    ticket = cl.submit(_spread(queries, 2))
+    mask = np.ones(bank.n_patterns, bool)
+    mask[0] = False
+    with pytest.raises(AssertionError):
+        cl.set_row_mask(mask)
+    cl.collect(ticket)
+    cl.set_row_mask(mask)  # quiescent: fine
 
 
 # ------------------------------------------------------- sharded window
