@@ -1,19 +1,21 @@
 """Serving benchmark: batched device containment vs the per-sequence
-host oracle, flat vs trie bank layout, on a query batch against a mined
-rFTS bank.
+host oracle, across all three bank layouts (flat / per-level trie /
+fused trie megakernel), on a query batch against a mined rFTS bank.
 
-Emits ``BENCH_serving.json`` (QPS for the flat server, the trie server
-and the host oracle; flat-vs-trie joined-steps counts and speedup) next
+Emits ``BENCH_serving.json`` (QPS for the flat, trie and fused servers
+and the host oracle; joined-steps counts and layout speedups) next
 to the repo root plus the harness CSV rows.  The host oracle backtracks
 every (pattern, sequence) pair in Python, so it is timed on a subsample
 and extrapolated (the subsample size is recorded in the json).
 
-``--smoke`` is the CI tier-2 gate: a tiny config, both layouts, and a
-hard failure on any flat/trie row mismatch (results are written to
-``BENCH_serving_smoke.json`` so the full-run json is never clobbered by
-a smoke pass).  All json writes go through a tempfile + rename, so a
-failing or interrupted run never truncates the last good artifact
-(scripts/check_bench.py compares against it).
+``--smoke`` is the CI tier-2 gate: a tiny config, ALL THREE layouts
+over the same queries, and a hard failure on any pairwise containment
+row mismatch (results are written to ``BENCH_serving_smoke.json`` so
+the full-run json is never clobbered by a smoke pass).  All json writes
+go through a tempfile + rename, so a failing or interrupted run never
+truncates the last good artifact (scripts/check_bench.py compares
+against it).  The fused kernel's dispatch-count and walk-level speedup
+gates live in ``bench_kernel.py`` / ``BENCH_kernel.json``.
 """
 from __future__ import annotations
 
@@ -84,17 +86,24 @@ def main(csv=print, smoke: bool = False, trace_path=None):
                              metrics_ns="serving.flat")
     trie_srv = PatternServer(bank, max_batch=1024, bank_layout="trie",
                              trie=trie, metrics_ns="serving.trie")
+    fused_srv = PatternServer(bank, max_batch=1024,
+                              bank_layout="trie_fused", trie=trie,
+                              metrics_ns="serving.fused")
     # warm all jit shape buckets outside the timing, and gate on the
-    # layouts agreeing on every (query, pattern) cell - both are exact,
-    # so any mismatch is a bug (this is the CI tier-2 smoke check)
+    # layouts agreeing on every (query, pattern) cell - all three are
+    # exact, so any mismatch is a bug (this is the CI tier-2 smoke
+    # check)
     flat_rows = np.stack([r.contained for r in flat_srv.query(queries)])
     trie_rows = np.stack([r.contained for r in trie_srv.query(queries)])
-    if not np.array_equal(flat_rows, trie_rows):
-        bad = int((flat_rows != trie_rows).sum())
-        raise AssertionError(
-            f"flat/trie mismatch on {bad} cells of "
-            f"{flat_rows.size} - exactness contract broken"
-        )
+    fused_rows = np.stack(
+        [r.contained for r in fused_srv.query(queries)])
+    for name, rows in (("trie", trie_rows), ("trie_fused", fused_rows)):
+        if not np.array_equal(flat_rows, rows):
+            bad = int((flat_rows != rows).sum())
+            raise AssertionError(
+                f"flat/{name} mismatch on {bad} cells of "
+                f"{flat_rows.size} - exactness contract broken"
+            )
 
     # stratified oracle sample (first-N could be atypically easy)
     stride = max(1, len(queries) // oracle_sample)
@@ -111,10 +120,13 @@ def main(csv=print, smoke: bool = False, trace_path=None):
     for _ in range(n_rounds):
         res, td_flat = _timed_pass(flat_srv, queries)
         _, td_trie = _timed_pass(trie_srv, queries)
+        _, td_fused = _timed_pass(fused_srv, queries)
         _, td_flat2 = _timed_pass(flat_srv, queries)
         _, td_trie2 = _timed_pass(trie_srv, queries)
+        _, td_fused2 = _timed_pass(fused_srv, queries)
         td_flat = min(td_flat, td_flat2)
         td_trie = min(td_trie, td_trie2)
+        td_fused = min(td_fused, td_fused2)
         t0 = time.perf_counter()
         host = np.array(
             [[contains(p, s) for p in bank.patterns] for s in sample]
@@ -123,9 +135,11 @@ def main(csv=print, smoke: bool = False, trace_path=None):
         rounds.append({
             "server_qps": len(queries) / td_flat,
             "trie_qps": len(queries) / td_trie,
+            "fused_qps": len(queries) / td_fused,
             "oracle_qps": len(sample) / th,
             "speedup": (len(queries) / td_flat) / (len(sample) / th),
             "speedup_trie_vs_flat": td_flat / td_trie,
+            "speedup_fused_vs_trie": td_trie / td_fused,
         })
     best = max(rounds, key=lambda r: r["speedup"])
     dev_qps = best["server_qps"]
@@ -133,7 +147,9 @@ def main(csv=print, smoke: bool = False, trace_path=None):
     t_dev = len(queries) / dev_qps
     t_host = len(sample) / host_qps
     best_trie = max(rounds, key=lambda r: r["speedup_trie_vs_flat"])
+    best_fused = max(rounds, key=lambda r: r["speedup_fused_vs_trie"])
     tvf = sorted(r["speedup_trie_vs_flat"] for r in rounds)
+    fvt = sorted(r["speedup_fused_vs_trie"] for r in rounds)
     speedups = sorted(r["speedup"] for r in rounds)
     median_speedup = speedups[len(speedups) // 2]
 
@@ -171,6 +187,7 @@ def main(csv=print, smoke: bool = False, trace_path=None):
         "server_seconds": t_dev,
         "server_qps": dev_qps,
         "trie_qps": best_trie["trie_qps"],
+        "fused_qps": best_fused["fused_qps"],
         "batched_seconds": t_raw,
         "batched_qps": raw_qps,
         "oracle_seqs_timed": len(sample),
@@ -180,19 +197,24 @@ def main(csv=print, smoke: bool = False, trace_path=None):
         "speedup_server_median": median_speedup,
         "speedup_trie_vs_flat": best_trie["speedup_trie_vs_flat"],
         "speedup_trie_vs_flat_median": tvf[len(tvf) // 2],
+        "speedup_fused_vs_trie": best_fused["speedup_fused_vs_trie"],
+        "speedup_fused_vs_trie_median": fvt[len(fvt) // 2],
         "speedup_batched": raw_qps / host_qps,
         # per-cold-pass join work: the trie advances one frontier per
         # surviving (sequence, trie node), the flat layout one per
-        # surviving (sequence, pattern) program step
+        # surviving (sequence, pattern) program step, the fused layout
+        # one per padded subtree slot of each surviving root cell
         "joined_steps_flat": flat_srv.stats["joined_steps"],
         "joined_steps_trie": trie_srv.stats["joined_steps"],
+        "joined_steps_fused": fused_srv.stats["joined_steps"],
         "rounds": rounds,
         "escalated_cells": trie_srv.stats["escalated_cells"],
         "host_fallback_cells": trie_srv.stats["host_fallback_cells"],
-        # final-timed-pass registry snapshots of both layout servers
-        # (disjoint serving.flat.* / serving.trie.* namespaces)
+        # final-timed-pass registry snapshots of the layout servers
+        # (disjoint serving.{flat,trie,fused}.* namespaces)
         "metrics": {**flat_srv.metrics.snapshot(),
-                    **trie_srv.metrics.snapshot()},
+                    **trie_srv.metrics.snapshot(),
+                    **fused_srv.metrics.snapshot()},
     }
     if trace_path:
         trace.save(trace_path)
@@ -214,6 +236,8 @@ def main(csv=print, smoke: bool = False, trace_path=None):
     csv(f"serving/speedup,{0:.0f},x{dev_qps/host_qps:.1f}")
     csv(f"serving/trie_vs_flat,{0:.0f},"
         f"x{best_trie['speedup_trie_vs_flat']:.2f}")
+    csv(f"serving/fused_vs_trie,{0:.0f},"
+        f"x{best_fused['speedup_fused_vs_trie']:.2f}")
     csv(f"serving/joined_steps,"
         f"{payload['joined_steps_trie']},"
         f"flat={payload['joined_steps_flat']}")

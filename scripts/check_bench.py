@@ -13,6 +13,12 @@ needed):
      pointless the moment the flat join beats it on the bank it was
      built for), and the serving speedup over the host oracle must stay
      > 1.
+   - ``BENCH_kernel.json``: the fused trie-walk megakernel must issue
+     exactly ONE device dispatch per query batch (depth-independent,
+     vs the per-level baseline's one-per-level, which must stay > 1 or
+     the comparison is vacuous), diverge on zero cells from the
+     per-level and flat layouts, and keep a median walk speedup >= 1.5x
+     over the per-level scan.
    - ``BENCH_streaming.json``: streamed maintenance must beat the
      re-mine-per-window baseline by >= 5x (``speedup_streaming``), and
      the final frequent-map equality is asserted inside the bench
@@ -56,13 +62,38 @@ SCHEMAS = {
         "n_queries": int,
         "server_qps": _NUM,
         "trie_qps": _NUM,
+        "fused_qps": _NUM,
         "oracle_qps": _NUM,
         "speedup_server": _NUM,
         "speedup_trie_vs_flat": _NUM,
         "speedup_trie_vs_flat_median": _NUM,
+        "speedup_fused_vs_trie": _NUM,
+        "speedup_fused_vs_trie_median": _NUM,
         "joined_steps_flat": int,
         "joined_steps_trie": int,
+        "joined_steps_fused": int,
         "rounds": list,
+        "metrics": dict,
+    },
+    "BENCH_kernel.json": {
+        "bank_patterns": int,
+        "trie_depth": int,
+        "n_subtrees": int,
+        "n_queries": int,
+        "divergences": int,
+        "dispatches_per_query": _NUM,
+        "perlevel_dispatches_per_query": _NUM,
+        "speedup_fused_vs_perlevel": _NUM,
+        "speedup_fused_vs_perlevel_median": _NUM,
+        "rounds": list,
+        "roofline": dict,
+        "metrics": dict,
+    },
+    "BENCH_kernel_smoke.json": {
+        "bank_patterns": int,
+        "divergences": int,
+        "dispatches_per_query": _NUM,
+        "perlevel_dispatches_per_query": _NUM,
         "metrics": dict,
     },
     "BENCH_serving_smoke.json": {
@@ -189,6 +220,40 @@ def check_invariants(name: str, payload: dict) -> None:
                 f"{name}: serving speedup over the host oracle "
                 f"{payload['speedup_server']:.2f} <= 1"
             )
+    if name in ("BENCH_kernel.json", "BENCH_kernel_smoke.json"):
+        # the megakernel's contract is bit-identity: the bench raises
+        # before writing on any fused/trie/flat row mismatch, so a
+        # nonzero committed count means the artifact was hand-edited
+        if payload["divergences"] != 0:
+            raise GateError(
+                f"{name}: {payload['divergences']} cells diverged "
+                "between the fused, per-level and flat layouts"
+            )
+        # THE fused-walk guarantee: one device dispatch per query
+        # batch, independent of trie depth (the per-level count stays
+        # recorded alongside as the depth-dependent baseline)
+        if payload["dispatches_per_query"] != 1:
+            raise GateError(
+                f"{name}: fused layout issued "
+                f"{payload['dispatches_per_query']} device dispatches "
+                "per query batch - the megakernel stopped fusing"
+            )
+        if payload["perlevel_dispatches_per_query"] <= \
+                payload["dispatches_per_query"]:
+            raise GateError(
+                f"{name}: per-level walk issued "
+                f"{payload['perlevel_dispatches_per_query']} dispatches "
+                "per batch - the baseline stopped paying per level, "
+                "the comparison is vacuous"
+            )
+        if name == "BENCH_kernel.json":
+            med = payload["speedup_fused_vs_perlevel_median"]
+            if med < 1.5:
+                raise GateError(
+                    f"{name}: median fused-vs-per-level walk speedup "
+                    f"{med:.2f} < 1.5 - the fused kernel regressed "
+                    "below its landing bar"
+                )
     if name == "BENCH_streaming.json":
         sp = payload["speedup_streaming"]
         if sp < 5.0:

@@ -10,10 +10,14 @@
 #           tests and the heavy hypothesis differentials); the default
 #           full lane runs everything.  Extra args pass through.
 #   tier-2  CI_TIER2=0 skips   serving smoke: bench_serving.py --smoke
-#           runs BOTH bank layouts over the same queries and hard-fails
-#           on any flat/trie containment mismatch (the layouts are
-#           required to be exact, so any disagreement is a correctness
-#           bug).
+#           runs ALL THREE bank layouts (flat, per-level trie, fused
+#           trie megakernel) over the same queries and hard-fails on
+#           any pairwise containment mismatch (the layouts are required
+#           to be exact, so any disagreement is a correctness bug);
+#           then bench_kernel.py --smoke re-checks the three-layout
+#           agreement at walk level and writes the dispatch counts
+#           check_bench.py gates on (fused == 1 per query batch,
+#           per-level > 1).
 #   tier-3  CI_TIER3=0 skips   streaming smoke: bench_streaming.py
 #           --smoke drives an arrival stream through StreamingBank
 #           (both layouts) and hard-fails if the streamed supports
@@ -82,8 +86,10 @@ if [[ "${CI_TIER1:-1}" != "0" ]]; then
 fi
 
 if [[ "${CI_TIER2:-1}" != "0" ]]; then
-    echo "[ci] tier-2: serving smoke (flat vs trie layout agreement)"
+    echo "[ci] tier-2: serving smoke (flat vs trie vs fused layout agreement)"
     python benchmarks/bench_serving.py --smoke
+    echo "[ci] tier-2: fused-kernel smoke (dispatch counts + walk-level agreement)"
+    python benchmarks/bench_kernel.py --smoke
 fi
 
 if [[ "${CI_TIER3:-1}" != "0" ]]; then

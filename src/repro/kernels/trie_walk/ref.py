@@ -1,0 +1,244 @@
+"""jnp reference for the fused trie walk (the megakernel's oracle).
+
+The serving trie join (repro.serving.batch) advances one frontier per
+(sequence, trie node) in a level-synchronous scan: one device dispatch
+per trie *level*, frontiers gathered from the previous level's cell
+array on every hop.  The fused walk collapses that ladder: one *cell*
+is a (sequence, depth-1 subtree) pair, and the whole subtree - every
+node, every level - is walked inside a single program over fixed
+in-kernel frontier buffers:
+
+* ``steps[:, n]`` / ``parent[:, n]`` lay the subtree out in topological
+  slot order (parents before children - trie node ids are assigned in
+  program order, see repro.serving.trie), so an unrolled pass over the
+  slots visits each node exactly once with its parent's compacted
+  frontier already written,
+* slot ``n`` seeds from ``parent[:, n]``'s buffer row (or the root
+  state when ``parent < 0``), applies the per-node residual-``req``
+  prescreen *in kernel* (a failing node's seed frontier dies before the
+  step - exactly the per-level path never seeding the cell), advances
+  one ``_walk_step``, and writes its compacted frontier back,
+* terminal accept/overflow bits for every slot come out together - one
+  dispatch per (query batch, subtree shard) regardless of trie depth.
+
+Bit-identity with the per-level path (and hence with the flat join and
+``core.containment``) is the whole contract.  ``_walk_step`` is a
+transliteration of ``serving.batch._step_once`` (``uniform=False``,
+``compact=True``) onto per-cell token arrays - same candidate order,
+same first-emax min-extraction compaction, same overflow flags - and
+the root seed is the per-level 1-wide root frontier widened to ``emax``
+rows with only column 0 valid: invalid rows flag no candidates and the
+candidate order is row-major, so the compacted state (not just the
+accept bit) agrees bitwise, which matters because children seed from
+it.  The differential harness (tests/test_trie_fused.py) pins all of
+this against the unrolled walk, the flat join, and the host oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..containment.ref import contain_step_core
+
+# local mirrors of the serving-layer constants (the kernels layer stays
+# import-free of repro.serving; equality is asserted at the batch.py
+# import site)
+PAD_PHI = 0x3FFFFFF   # mining.encoding.PAD_PHI: +inf itemset sentinel
+PAD_PSI = -2          # mining.encoding.PAD_PSI: unbound-vertex sentinel
+REQ_MASKED = np.iinfo(np.int32).max  # serving.trie.REQ_MASKED
+
+
+def _walk_step(tok_c, order_c, start_c, count_c, step_k, phi, psi,
+               valid, *, emax, tmax):
+    """One embedding-join step for N cells over *per-cell* token arrays
+    (``tok_c[i]`` is cell i's own token table) - the in-kernel form of
+    ``serving.batch._step_once`` (``uniform=False``), where the batch
+    gather ``tokens[cell_b]`` has already happened outside.  Returns
+    ``(phi_new, psi_new, new_valid, frontier_ovf, window_ovf)`` - both
+    overflow legs separately, so the caller can assemble the per-level
+    path's ``ovf_state`` (children inherit) vs ``ovf_term`` (terminal
+    undecidedness drops this step's own frontier overflow) split."""
+    T = tok_c.shape[1]
+    N, Ein, NI = phi.shape
+    NV = psi.shape[2]
+    E, Tm = emax, tmax
+    C = Ein * Tm * 2  # candidates: frontier rows x window x orient
+    nv_ids = jnp.arange(NV, dtype=jnp.int32)
+    ni_ids = jnp.arange(NI, dtype=jnp.int32)
+    m_ids = jnp.arange(Tm, dtype=jnp.int32)
+    cand_ids = jnp.arange(C, dtype=jnp.int32)
+    ty_s, pu1_s, pu2_s, lab_s, new_s, idx_s, sval_s, key_s = (
+        step_k[:, c] for c in range(8)
+    )
+
+    # ---- per-cell token window for this step's (type,label) bucket
+    st_sel = jnp.take_along_axis(start_c, key_s[:, None], axis=1)[:, 0]
+    ct_sel = jnp.take_along_axis(count_c, key_s[:, None], axis=1)[:, 0]
+    wpos = jnp.minimum(st_sel[:, None] + m_ids[None, :], T - 1)
+    wvalid = m_ids[None, :] < ct_sel[:, None]
+    tpos = jnp.take_along_axis(order_c, wpos, axis=1)     # [N, Tm]
+    tok_w = jnp.take_along_axis(tok_c, tpos[..., None], axis=1)
+    tok_w = tok_w.at[..., 5].set(
+        jnp.where(wvalid, tok_w[..., 5], 0)
+    )
+
+    # ---- per-row step table for the predicate
+    idx_b = jnp.broadcast_to(idx_s[:, None, None], (N, Ein, 1))
+    cur_phi = jnp.take_along_axis(phi, idx_b, axis=-1)[..., 0]
+    prev_b = jnp.clip(idx_b - 1, 0, NI - 1)
+    prev_phi = jnp.take_along_axis(phi, prev_b, axis=-1)[..., 0]
+    prev_phi = jnp.where(idx_s[:, None] > 0, prev_phi, -1)
+    row_valid = valid & (sval_s[:, None] > 0)
+
+    def bro(x):  # [N] -> [N, Ein]
+        return jnp.broadcast_to(x[:, None], (N, Ein))
+
+    srow = jnp.stack(
+        [bro(ty_s), bro(pu1_s), bro(pu2_s), bro(lab_s), bro(new_s),
+         prev_phi, cur_phi, row_valid.astype(jnp.int32)],
+        axis=-1,
+    )
+
+    bits = contain_step_core(tok_w, psi, srow)
+
+    # ---- first-emax compaction by iterative min-extraction (the same
+    # candidate order and extraction as _step_once, so the kept slots
+    # and their order agree bitwise)
+    flags = (
+        jnp.stack([bits & 1, (bits >> 1) & 1], -1) > 0
+    ).reshape(N, C)
+    window_ovf = (ct_sel > Tm) & valid.any(-1)
+    cand_row = cand_ids[None, :]
+    sels = []
+    last = jnp.full((N, 1), -1, jnp.int32)
+    for _ in range(E):
+        cur = jnp.min(
+            jnp.where(flags & (cand_row > last), cand_row, C),
+            -1, keepdims=True,
+        )
+        sels.append(cur)
+        last = cur
+    frontier_ovf = jnp.min(
+        jnp.where(flags & (cand_row > last), cand_row, C), -1
+    ) < C
+    sel = jnp.concatenate(sels, -1)  # [N, E] ascending, C = empty
+    new_valid = sel < C
+    sel = jnp.minimum(sel, C - 1)
+    e_old = sel // (Tm * 2)
+    t_w = (sel // 2) % Tm
+    var = sel % 2
+
+    phi_src = jnp.take_along_axis(phi, e_old[..., None], axis=1)
+    psi_src = jnp.take_along_axis(psi, e_old[..., None], axis=1)
+
+    def wfield(f):  # [N, E] gather of tok_w[n, t_w, f]
+        return jnp.take_along_axis(tok_w[..., f], t_w, axis=1)
+
+    u1_g, u2_g, j_g = wfield(1), wfield(2), wfield(4)
+
+    claim = (new_s[:, None] > 0) & new_valid
+    onehot_ni = ni_ids[None, None, :] == idx_s[:, None, None]
+    phi_new = jnp.where(
+        onehot_ni & claim[..., None], j_g[..., None], phi_src
+    )
+
+    a_g = jnp.where(var == 0, u1_g, u2_g)
+    b_g = jnp.where(var == 0, u2_g, u1_g)
+    is_v = (ty_s <= 2)[:, None]
+    pu1_b = jnp.broadcast_to(pu1_s[:, None, None], (N, E, 1))
+    pu2_b = jnp.broadcast_to(pu2_s[:, None, None], (N, E, 1))
+    fresh1 = jnp.take_along_axis(psi_src, pu1_b, axis=-1)[..., 0] < 0
+    fresh2 = jnp.take_along_axis(psi_src, pu2_b, axis=-1)[..., 0] < 0
+    onehot1 = nv_ids[None, None, :] == pu1_b
+    onehot2 = nv_ids[None, None, :] == pu2_b
+    assign1 = jnp.where(is_v, u1_g, a_g)
+    psi_new = jnp.where(
+        onehot1 & (fresh1 & new_valid)[..., None],
+        assign1[..., None], psi_src,
+    )
+    psi_new = jnp.where(
+        onehot2 & ((~is_v) & fresh2 & new_valid)[..., None],
+        b_g[..., None], psi_new,
+    )
+    return phi_new, psi_new, new_valid, frontier_ovf, window_ovf
+
+
+def trie_walk_core(tok_c, order_c, start_c, count_c, steps, parent,
+                   req, *, emax, tmax, ni, nv):
+    """Walk S subtree slots for N cells over in-kernel frontier buffers
+    - the fused megakernel's body, shared verbatim by the Pallas kernel
+    (trie_walk.py) and the jnp reference path.
+
+    Per cell i: ``tok_c[i]``/``order_c[i]``/``start_c[i]``/``count_c[i]``
+    are its sequence's token table + inverted index, ``steps[i]`` /
+    ``parent[i]`` / ``req[i]`` its packed subtree (slot-topological:
+    every real slot's parent slot index is smaller; ``parent = -1`` is
+    the subtree root, which seeds from the shared root state).  Padding
+    slots carry ``step_valid=0`` rows, ``parent=-1`` and
+    ``req=REQ_MASKED`` - dead on arrival.
+
+    Returns ``(acc [N,S] bool, ovf_term [N,S] bool)``: per slot the
+    terminal accept bit and the terminal-undecidedness flag, matching
+    the per-level path's ``(accepted, ovf_term)`` outputs bit for bit
+    (internal slots like its ``compact=True`` cells, leaf slots like
+    its ``compact=False, count_frontier_ovf=False`` cells - the accept
+    bit of a full compaction equals the compaction-free any-candidate
+    test, and ``ovf_term`` never includes the slot's own frontier
+    overflow)."""
+    N, S, _ = steps.shape
+    E = emax
+    steps = steps.astype(jnp.int32)
+    parent = parent.astype(jnp.int32)
+    # the per-level root seed (trie_root_state) widened to E rows with
+    # only column 0 valid - bitwise the same compacted outputs (module
+    # docstring)
+    root_phi = jnp.full((N, E, ni), PAD_PHI, jnp.int32)
+    root_psi = jnp.full((N, E, nv), PAD_PSI, jnp.int32)
+    root_valid = jnp.zeros((N, E), jnp.bool_).at[:, 0].set(True)
+    # in-kernel per-node residual prescreen, one compare for all slots
+    poss_all = (count_c[:, None, :] >= req).all(-1)        # [N, S]
+    phi_buf = jnp.zeros((N, S, E, ni), jnp.int32)
+    psi_buf = jnp.zeros((N, S, E, nv), jnp.int32)
+    valid_buf = jnp.zeros((N, S, E), jnp.bool_)
+    ovf_buf = jnp.zeros((N, S), jnp.bool_)
+    accs, ovfts = [], []
+    for n in range(S):
+        pidx = parent[:, n]
+        isroot = pidx < 0
+        pcl = jnp.clip(pidx, 0, max(S - 1, 0))
+        ix4 = pcl[:, None, None, None]
+        seed_phi = jnp.where(
+            isroot[:, None, None], root_phi,
+            jnp.take_along_axis(phi_buf, ix4, axis=1)[:, 0],
+        )
+        seed_psi = jnp.where(
+            isroot[:, None, None], root_psi,
+            jnp.take_along_axis(psi_buf, ix4, axis=1)[:, 0],
+        )
+        seed_valid = jnp.where(
+            isroot[:, None], root_valid,
+            jnp.take_along_axis(
+                valid_buf, pcl[:, None, None], axis=1)[:, 0],
+        )
+        seed_ovf = jnp.where(
+            isroot, False,
+            jnp.take_along_axis(ovf_buf, pcl[:, None], axis=1)[:, 0],
+        )
+        poss = poss_all[:, n]
+        # a prescreen-failed node's frontier dies before the step: no
+        # candidates, no window overflow - exactly the per-level scan
+        # never seeding the cell (req monotonicity makes the whole
+        # subtree agree)
+        seed_valid = seed_valid & poss[:, None]
+        phi_n, psi_n, new_valid, frontier_ovf, window_ovf = _walk_step(
+            tok_c, order_c, start_c, count_c, steps[:, n],
+            seed_phi, seed_psi, seed_valid, emax=emax, tmax=tmax,
+        )
+        accs.append(new_valid.any(-1) & poss)
+        ovfts.append((seed_ovf | window_ovf) & poss)
+        phi_buf = phi_buf.at[:, n].set(phi_n)
+        psi_buf = psi_buf.at[:, n].set(psi_n)
+        valid_buf = valid_buf.at[:, n].set(new_valid)
+        ovf_buf = ovf_buf.at[:, n].set(
+            (seed_ovf | frontier_ovf | window_ovf) & poss)
+    return jnp.stack(accs, -1), jnp.stack(ovfts, -1)

@@ -1,0 +1,143 @@
+"""Pallas megakernel for the fused trie walk.
+
+One grid step walks ``block_n`` (sequence, depth-1 subtree) cells
+through their *entire* subtree - level iteration, frontier buffers and
+the per-node residual prescreen all live inside the kernel body
+(trie_walk_core, shared verbatim with the jnp reference in ref.py), so
+a query batch costs one dispatch per subtree shard regardless of trie
+depth.  Per grid step the kernel touches
+
+  tok block     [bN, T, 6]    int32 (the cell's own token table)
+  order/start   [bN, T], [bN, K]
+  steps/req     [bN, S, 8], [bN, S, K]
+  out           2 x [bN, S]   int32 (accept / terminal-overflow bits)
+
+with S = padded subtree slots and per-slot [bN, E, *] frontier state in
+VMEM/VREGs; the default ``block_n=8`` keeps the working set small -
+fused cells are ~S times heavier than a single containment step, so the
+cell block is correspondingly narrower than containment's ``block_g``.
+
+``lane_pad`` follows the backend auto-select of the containment kernel
+(repro.kernels.containment): on when compiling for real
+(interpret=False, i.e. on TPU), off in interpret mode.  It pads the
+slot axis S - the lane dim of both outputs - to the 128-lane boundary
+with inert slots (``step_valid=0`` rows, ``parent=-1``,
+``req=REQ_MASKED``: dead on arrival by the same prescreen argument as
+the cell padding), then slices back.  Interpret-mode parity with
+forced ``lane_pad=True`` is covered by tests/test_trie_fused.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import default_interpret
+from .ref import REQ_MASKED, trie_walk_core
+
+LANE = 128
+
+
+def _make_kernel(emax, tmax, ni, nv):
+    def _kernel(tok_ref, order_ref, start_ref, count_ref, steps_ref,
+                parent_ref, req_ref, acc_ref, ovft_ref):
+        acc, ovft = trie_walk_core(
+            tok_ref[...], order_ref[...], start_ref[...],
+            count_ref[...], steps_ref[...], parent_ref[...],
+            req_ref[...], emax=emax, tmax=tmax, ni=ni, nv=nv,
+        )
+        acc_ref[...] = acc.astype(jnp.int32)
+        ovft_ref[...] = ovft.astype(jnp.int32)
+
+    return _kernel
+
+
+def trie_walk_blocked(
+    tok_c,      # [N, T, 6] int32 (per-cell token tables)
+    order_c,    # [N, T] int32 (per-cell inverted index)
+    start_c,    # [N, K] int32
+    count_c,    # [N, K] int32
+    steps,      # [N, S, 8] int32 (packed subtree per cell)
+    parent,     # [N, S] int32 (slot of parent; -1 = root seed / pad)
+    req,        # [N, S, K] int32 (per-node residual prescreen rows)
+    *,
+    emax: int,
+    tmax: int,
+    ni: int,
+    nv: int,
+    block_n: int = 8,
+    interpret: bool | None = None,
+    lane_pad: bool | None = None,
+):
+    """Returns ``(acc [N,S] int32, ovf_term [N,S] int32)`` - the fused
+    walk's terminal accept / undecidedness bits per subtree slot (see
+    ref.trie_walk_core for the exact per-level bit-identity contract).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if lane_pad is None:
+        lane_pad = not interpret  # pad only when compiling for real
+    N, T, _ = tok_c.shape
+    K = start_c.shape[1]
+    S = steps.shape[1]
+    if lane_pad:
+        Sp = -(-S // LANE) * LANE
+        if Sp != S:
+            # inert slots: step_valid=0, parent=-1, req=REQ_MASKED -
+            # prescreen-dead, so acc/ovft come back 0 and slice away
+            steps = jnp.pad(steps, ((0, 0), (0, Sp - S), (0, 0)))
+            parent = jnp.pad(parent, ((0, 0), (0, Sp - S)),
+                             constant_values=-1)
+            req = jnp.pad(req, ((0, 0), (0, Sp - S), (0, 0)),
+                          constant_values=REQ_MASKED)
+            acc, ovft = trie_walk_blocked(
+                tok_c, order_c, start_c, count_c, steps, parent, req,
+                emax=emax, tmax=tmax, ni=ni, nv=nv, block_n=block_n,
+                interpret=interpret, lane_pad=False,
+            )
+            return acc[:, :S], ovft[:, :S]
+    Np = -(-N // block_n) * block_n
+    if Np != N:
+        # zero cells: empty token tables + REQ_MASKED prescreen rows
+        # accept nothing; callers slice their real rows anyway
+        tok_c = jnp.pad(tok_c, ((0, Np - N), (0, 0), (0, 0)))
+        order_c = jnp.pad(order_c, ((0, Np - N), (0, 0)))
+        start_c = jnp.pad(start_c, ((0, Np - N), (0, 0)))
+        count_c = jnp.pad(count_c, ((0, Np - N), (0, 0)))
+        steps = jnp.pad(steps, ((0, Np - N), (0, 0), (0, 0)))
+        parent = jnp.pad(parent, ((0, Np - N), (0, 0)),
+                         constant_values=-1)
+        req = jnp.pad(req, ((0, Np - N), (0, 0), (0, 0)),
+                      constant_values=REQ_MASKED)
+    grid = (Np // block_n,)
+    acc, ovft = pl.pallas_call(
+        _make_kernel(emax, tmax, ni, nv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, T, 6), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_n, T), lambda g: (g, 0)),
+            pl.BlockSpec((block_n, K), lambda g: (g, 0)),
+            pl.BlockSpec((block_n, K), lambda g: (g, 0)),
+            pl.BlockSpec((block_n, S, 8), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_n, S), lambda g: (g, 0)),
+            pl.BlockSpec((block_n, S, K), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, S), lambda g: (g, 0)),
+            pl.BlockSpec((block_n, S), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, S), jnp.int32),
+            jax.ShapeDtypeStruct((Np, S), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        tok_c.astype(jnp.int32),
+        order_c.astype(jnp.int32),
+        start_c.astype(jnp.int32),
+        count_c.astype(jnp.int32),
+        steps.astype(jnp.int32),
+        parent.astype(jnp.int32),
+        req.astype(jnp.int32),
+    )
+    return acc[:N], ovft[:N]

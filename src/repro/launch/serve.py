@@ -49,7 +49,8 @@ def main():
     ap.add_argument("--topk", type=int, default=5)
     ap.add_argument("--top-patterns", type=int, default=None,
                     help="serve only the strongest N patterns")
-    ap.add_argument("--bank-layout", choices=("flat", "trie"),
+    ap.add_argument("--bank-layout",
+                    choices=("flat", "trie", "trie_fused"),
                     default="flat",
                     help="flat per-pattern joins, or the prefix-trie "
                          "layout that joins shared rFTS prefixes once")
@@ -97,7 +98,8 @@ def main():
           f"(max {bank.max_steps} TRs, {bank.nv} vertices) "
           f"mined in {time.time()-t0:.2f}s")
     trie = None
-    if args.bank_layout == "trie":
+    from ..serving.layouts import get_layout
+    if get_layout(args.bank_layout).uses_trie:
         from ..serving.trie import build_trie
         trie = build_trie(bank)
         print(f"[serve] trie: {trie.n_nodes} nodes, depth {trie.depth},"

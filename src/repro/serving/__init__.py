@@ -35,14 +35,35 @@ Module map:
                    ``trie_level_advance``, one frontier per
                    (sequence, trie node) seeded from its parent's
                    compacted frontier - bit-identical answers, shared
-                   prefixes joined once); plus the sound counts
-                   prescreens, inverted token index, frontier compaction
-                   and overflow flags.  Delegates the per-step predicate
-                   to ``repro.kernels.containment`` (Pallas kernel or
-                   jnp oracle).
+                   prefixes joined once); ``fused_trie_walk``, the jit
+                   wrapper over ``repro.kernels.trie_walk`` that runs
+                   the whole walk (all levels, in-kernel frontier
+                   buffers + per-node prescreen) in ONE dispatch
+                   gridded over (sequence, depth-1 subtree shard) -
+                   see ``trie.pack_subtrees`` for the width-capped
+                   spine-replicated shard layout; plus the sound
+                   counts prescreens, inverted token index, frontier
+                   compaction and overflow flags.  Delegates the
+                   per-step predicate to ``repro.kernels.containment``
+                   (Pallas kernel or jnp oracle).
+* ``layouts.py`` - the ``Layout`` registry: each bank layout
+                   (``"flat"``, ``"trie"``, ``"trie_fused"``) registers
+                   its launch/finalize/shard hooks once and every
+                   consumer (server, placement planner, CLI) resolves
+                   by name via ``get_layout`` - adding a layout no
+                   longer touches server/router/cluster plumbing.
+* ``join.py``    - the unified Join API: ``JoinRequest -> JoinResult``
+                   is the one protocol every backend speaks
+                   (``PatternServer``, ``ClusterRouter``,
+                   ``ServingCluster``, ``StreamingBank``); the legacy
+                   entry points survive as thin wrappers.  ``Frontend``
+                   is the backend-agnostic facade, including the
+                   begin/finish split over async pipelines.  Exactness
+                   propagation (``exact=False`` on every approximate
+                   row) is part of the protocol.
 * ``server.py``  - ``PatternServer``: request batching into pow-2
-                   buckets, prescreen + join (``bank_layout="flat"`` or
-                   ``"trie"``), fingerprint-keyed LRU cache,
+                   buckets, prescreen + join under any registered
+                   ``bank_layout``, fingerprint-keyed LRU cache,
                    support-weighted top-k scoring, device escalation +
                    host-oracle fallback for overflow cells (results
                    always exactly match ``core.containment``); plus the
@@ -144,6 +165,17 @@ from .cluster import (  # noqa: F401
     ServingCluster,
     ShardedStreamingBank,
 )
+from .join import (  # noqa: F401
+    Frontend,
+    JoinRequest,
+    JoinResult,
+)
+from .layouts import (  # noqa: F401
+    Layout,
+    get_layout,
+    layout_names,
+    register_layout,
+)
 from .router import (  # noqa: F401
     BankPlacement,
     ClusterRouter,
@@ -163,10 +195,12 @@ from .sharded import (  # noqa: F401
 )
 from .streaming import ObserveResult, StreamingBank  # noqa: F401
 from .trie import (  # noqa: F401
+    SubtreePack,
     TrieBank,
     build_trie,
     compile_trie_bank,
     extend_trie,
     masked_node_req,
+    pack_subtrees,
     parent_prefix_hits,
 )

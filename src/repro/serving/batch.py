@@ -62,7 +62,17 @@ import numpy as np
 
 from ..kernels.containment.containment import contain_step_blocked
 from ..kernels.containment.ref import contain_step_core
+from ..kernels.trie_walk import ref as _fused_ref
+from ..kernels.trie_walk import trie_walk_blocked, trie_walk_core
 from ..mining.encoding import PAD_PHI, PAD_PSI
+from .trie import REQ_MASKED
+
+# the kernels layer mirrors the serving constants locally (it stays
+# import-free of repro.serving); pin the mirrors here so a drift breaks
+# loudly at import instead of silently de-synchronizing the fused walk
+assert _fused_ref.PAD_PHI == int(PAD_PHI)
+assert _fused_ref.PAD_PSI == int(PAD_PSI)
+assert _fused_ref.REQ_MASKED == REQ_MASKED
 
 
 def token_keys_np(tokens: np.ndarray, n_label_keys: int) -> np.ndarray:
@@ -558,6 +568,57 @@ def index_and_node_prescreen(tokens, node_req, *, n_label_keys: int):
     )
     possible = (count[:, None, :] >= node_req[None, :, :]).all(-1)
     return order, start, count, possible
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ni", "nv", "emax", "tmax", "use_kernel", "block_n"),
+)
+def fused_trie_walk(
+    tokens, order, start, count,  # tokens + prebuilt inverted index
+    cells,      # [N, 2] int32: (sequence index, packed subtree index)
+    steps_s,    # [Sp, Nmax, STEP_FIELDS] int32 (SubtreePack.steps)
+    parent_s,   # [Sp, Nmax] int32 (SubtreePack.parent)
+    req_s,      # [Sp, Nmax, K] int32 (SubtreePack.pack_req)
+    *,
+    ni: int,
+    nv: int,
+    emax: int,
+    tmax: int,
+    use_kernel: bool = False,
+    block_n: int = 8,
+):
+    """The fused megakernel's serving entry point: walk N (sequence,
+    depth-1 subtree) cells through their *entire* subtree in one jitted
+    program - the per-cell gathers (the sequence's token table + index
+    rows by ``cells[:, 0]``, the packed subtree tables by
+    ``cells[:, 1]``) are fused in front of the walk, so the whole batch
+    costs a single dispatch regardless of trie depth.  Returns
+    ``(acc [N, Nmax] bool, ovf_term [N, Nmax] bool)`` per subtree slot,
+    bit-identical to the per-level ``trie_root_advance`` /
+    ``trie_level_advance_gather`` ladder (kernels.trie_walk.ref has the
+    exact contract).  ``ni`` must be the *global* trie depth (same as
+    the per-level path) for bitwise frontier-state identity."""
+    cell_b = cells[:, 0]
+    s_idx = cells[:, 1]
+    tokens = tokens.astype(jnp.int32)
+    tok_c = tokens[cell_b]
+    order_c = order[cell_b]
+    start_c = start[cell_b]
+    count_c = count[cell_b]
+    steps_c = steps_s[s_idx]
+    parent_c = parent_s[s_idx]
+    req_c = req_s[s_idx]
+    if use_kernel:
+        acc, ovft = trie_walk_blocked(
+            tok_c, order_c, start_c, count_c, steps_c, parent_c, req_c,
+            emax=emax, tmax=tmax, ni=ni, nv=nv, block_n=block_n,
+        )
+        return acc > 0, ovft > 0
+    return trie_walk_core(
+        tok_c, order_c, start_c, count_c, steps_c, parent_c, req_c,
+        emax=emax, tmax=tmax, ni=ni, nv=nv,
+    )
 
 
 def trie_contains_ref(

@@ -84,6 +84,7 @@ from ..mining.incremental import depth1_root, refresh_frontier, \
     subtree_dirty_rows
 from .bank import BankCapacityError, PatternBank, compile_bank, \
     extend_bank, slice_bank
+from .layouts import get_layout
 from .router import BankPlacement, ClusterRouter, plan_placement
 from .server import PatternServer, QueryResult, score_topk
 from .streaming import StreamingBank
@@ -187,12 +188,20 @@ class ServingCluster:
         )
 
     # ------------------------------------------------------------ serving
+    def join(self, req) -> "JoinResult":
+        """The unified entry point (serving.join): delegates to the
+        router, so exactness semantics (including the ``exact=False``
+        approximate tier) are the router's."""
+        return self.router.join(req)
+
     def query(
         self, seqs: Sequence[TRSeq], host: int = 0,
         k: Optional[int] = None,
     ) -> List[QueryResult]:
         """Queries arriving on one host."""
-        return self.router.route({host: list(seqs)}, k=k)[host]
+        from .join import JoinRequest
+        return self.join(JoinRequest(
+            seqs=tuple(seqs), k=k, host=host)).results
 
     def query_multi(
         self, requests: Mapping[int, Sequence[TRSeq]],
@@ -633,14 +642,22 @@ class ShardedStreamingBank:
         return self._frequent_from(self.support)
 
     # ----------------------------------------------------------- serving
+    def join(self, req) -> "JoinResult":
+        """Unified entry point: all-reduce the live supports into the
+        router's scorer, then delegate (exactness semantics are the
+        router's - shed/approx rows stay flagged ``exact=False``)."""
+        self.support = self._allreduce_support()
+        self.cluster.router.support = self.support
+        return self.cluster.join(req)
+
     def query(
         self, seqs: Sequence[TRSeq], host: int = 0, k: int = 10,
     ) -> List[QueryResult]:
         """Routed containment over the active bank with top-k scored by
         live supports (all-reduced on demand)."""
-        self.support = self._allreduce_support()
-        self.cluster.router.support = self.support
-        return self.cluster.query(seqs, host=host, k=k)
+        from .join import JoinRequest
+        return self.join(JoinRequest(
+            seqs=tuple(seqs), k=k, host=host)).results
 
 
 # ---------------------------------------------------------------- replicas
@@ -676,7 +693,7 @@ class BankReplica:
                  trie: Optional[TrieBank] = None) -> None:
         self.bank = bank
         self.trie = None
-        if self.bank_layout == "trie":
+        if get_layout(self.bank_layout).uses_trie:
             self.trie = trie if trie is not None else build_trie(bank)
         self.server = PatternServer(
             bank, bank_layout=self.bank_layout, trie=self.trie,
@@ -712,14 +729,24 @@ class BankReplica:
             raise ValueError(f"unknown delta kind {kind!r}")
         self.applied += 1
 
-    def query(self, seqs: Sequence[TRSeq], k: int = 10
-              ) -> List[QueryResult]:
-        results = self.server.query(seqs, k=0)
-        return [
+    def join(self, req) -> "JoinResult":
+        """Unified entry point: the inner server join rescored by the
+        replica's live supports (``exact`` flags pass through)."""
+        from .join import JoinRequest, JoinResult
+        k = 10 if req.k is None else req.k
+        inner = self.server.join(JoinRequest(
+            seqs=req.seqs, k=0, exact=req.exact,
+            trace_id=req.trace_id))
+        return JoinResult([
             dataclasses.replace(
                 r, topk=score_topk(r.contained, self.support, k))
-            for r in results
-        ]
+            for r in inner.results
+        ])
+
+    def query(self, seqs: Sequence[TRSeq], k: int = 10
+              ) -> List[QueryResult]:
+        from .join import JoinRequest
+        return self.join(JoinRequest(seqs=tuple(seqs), k=k)).results
 
 
 class ReplicaGroup:

@@ -79,8 +79,9 @@ from ..core.graphseq import TRSeq
 from ..obs import trace
 from ..obs.metrics import MetricsRegistry
 from .bank import PatternBank, sequence_fingerprint
+from .layouts import get_layout
 from .server import QueryResult, encode_queries, score_topk
-from .trie import TrieBank, build_trie
+from .trie import TrieBank
 
 
 @dataclasses.dataclass
@@ -105,23 +106,12 @@ def plan_placement(
     layout: str = "flat",
     trie: Optional[TrieBank] = None,
 ) -> BankPlacement:
-    """Place bank rows onto ``n_hosts`` shards: by depth-1 trie subtree
-    for the trie layout (subtrees stay intact per host), by contiguous
-    pattern range for flat."""
+    """Place bank rows onto ``n_hosts`` shards via the layout's
+    ``place`` hook (layouts.py): by depth-1 trie subtree for the trie
+    layouts (subtrees stay intact per host), by contiguous pattern
+    range for flat.  Raises ``ValueError`` on an unregistered layout."""
     assert n_hosts >= 1
-    if layout == "trie":
-        if trie is None:
-            trie = build_trie(bank)
-        rows = [np.asarray(r, np.int64) for r in trie.shard_rows(n_hosts)]
-    elif layout == "flat":
-        rows = [
-            np.asarray(r, np.int64)
-            for r in np.array_split(
-                np.arange(bank.n_patterns, dtype=np.int64), n_hosts
-            )
-        ]
-    else:
-        raise ValueError(f"unknown layout {layout!r}")
+    rows = get_layout(layout).place(bank, n_hosts, trie)
     covered = np.concatenate(rows) if rows else np.zeros(0, np.int64)
     assert sorted(covered.tolist()) == list(range(bank.n_patterns))
     return BankPlacement(rows=rows, layout=layout,
@@ -394,6 +384,31 @@ class ClusterRouter:
                     ]
                     for hid in requests
                 }
+
+    def join(self, req) -> "JoinResult":
+        """The unified entry point (serving.join): exact requests run
+        one synchronous drain (``route``) for the arrival host;
+        ``exact=False`` requests serve the merged shard prescreen (the
+        shed tier's rows on demand), flagged inexact and never
+        cached."""
+        from .join import JoinResult, join_span
+        seqs = list(req.seqs)
+        with join_span(req, "router"):
+            if req.exact:
+                return JoinResult(
+                    self.route({req.host: seqs}, k=req.k)[req.host])
+            k = self.topk if req.k is None else req.k
+            self.stats["queries"] += len(seqs)
+            self.stats["shed_prescreen"] += len(seqs)
+            approx = self._approx_rows(seqs)
+            return JoinResult([
+                QueryResult(
+                    fingerprint=sequence_fingerprint(s),
+                    contained=approx[i], topk=self._score(approx[i], k),
+                    cached=False, exact=False,
+                )
+                for i, s in enumerate(seqs)
+            ])
 
     # --------------------------------------------- admission pipeline
     def depth(self) -> int:

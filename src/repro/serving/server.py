@@ -18,7 +18,9 @@ server owns the production concerns around the batch.py entry points:
 * counters (queries, cache hits, device batches, prescreened pairs,
   joined steps, fallback cells) for the ops dashboards.
 
-Two bank layouts share all of the above (``bank_layout=``):
+Three bank layouts share all of the above (``bank_layout=``; the
+strategies live in the layouts.py registry and register at the bottom
+of this module):
 
 * ``"flat"`` - one (sequence, pattern) cell per surviving prescreen
   pair, grouped by program length; each cell replays its whole program.
@@ -27,8 +29,16 @@ Two bank layouts share all of the above (``bank_layout=``):
   seeded from the parent node's frontier, so patterns sharing a prefix
   pay for it once.  The prescreen runs per node against the residual
   ``node_req`` rows and prunes whole subtrees at their highest failing
-  ancestor.  Answers are identical either way (both are exact); the
-  trie wins on banks with real prefix sharing (see trie.py).
+  ancestor.
+* ``"trie_fused"`` - the same trie walked by the fused megakernel
+  (kernels.trie_walk): one cell per (sequence, depth-1 subtree), the
+  level iteration, frontier buffers and per-node prescreen all inside
+  one kernel, so a query batch costs ONE device dispatch regardless of
+  trie depth.  Escalation reuses the per-level trie replay.
+
+Answers are identical across layouts (all are exact); the trie layouts
+win on banks with real prefix sharing (see trie.py), and the fused
+layout additionally removes the per-level dispatch ladder.
 """
 from __future__ import annotations
 
@@ -48,6 +58,7 @@ from ..obs import trace
 from ..obs.metrics import MetricsRegistry
 from .bank import PatternBank, sequence_fingerprint
 from .batch import (
+    fused_trie_walk,
     index_and_node_prescreen,
     index_and_prescreen,
     max_key_bucket,
@@ -57,7 +68,14 @@ from .batch import (
     trie_level_advance_gather,
     trie_root_advance,
 )
-from .trie import REQ_MASKED, TrieBank, build_trie, masked_node_req
+from .layouts import Layout, get_layout, register_layout
+from .trie import (
+    REQ_MASKED,
+    TrieBank,
+    build_trie,
+    masked_node_req,
+    pack_subtrees,
+)
 
 
 def _pow2(n: int) -> int:
@@ -65,6 +83,18 @@ def _pow2(n: int) -> int:
     while b < n:
         b <<= 1
     return b
+
+
+def _bucket34(n: int) -> int:
+    """Shape bucket for the fused walk's cell axis: pow-2 or
+    3·2^(k-2), whichever is tighter (<= 33% padding waste vs pow-2's
+    100%).  The fused dispatch is one jit call whose cost scales with
+    the padded cell count, so at small serving batches the extra shape
+    buckets buy back real walk time; ~1.5x more compile-cache entries
+    is the price."""
+    p = _pow2(n)
+    q = 3 * p // 4
+    return q if p >= 4 and q >= n else p
 
 
 def score_topk(
@@ -221,8 +251,11 @@ class PatternServer:
         self.topk = topk
         self.use_kernel = use_kernel
         self.block_g = block_g
-        if bank_layout not in ("flat", "trie"):
-            raise ValueError(f"unknown bank_layout {bank_layout!r}")
+        # layout strategies live in a registry (layouts.py): the string
+        # resolves to a Layout record whose hooks drive launch /
+        # finalize / escalate / masking below - raises ValueError on an
+        # unregistered name, like the old literal check did
+        self.layout = get_layout(bank_layout)
         self.bank_layout = bank_layout
         self._req = jnp.asarray(bank.req)
         # host mirror of the (possibly masked) prescreen requirements:
@@ -246,42 +279,10 @@ class PatternServer:
         for gi, (rows, _) in enumerate(self._groups):
             self._row_group[rows] = gi
             self._row_pos[rows] = np.arange(len(rows), dtype=np.int32)
-        self.trie: Optional[TrieBank] = None
-        if bank_layout == "trie":
-            t = self.trie = trie if trie is not None else build_trie(bank)
-            assert t.bank is bank, "trie must be built over this bank"
-            self._node_req = jnp.asarray(
-                t.node_req.reshape(t.n_nodes, bank.req.shape[1])
-            )
-            self._node_req_np = t.node_req.reshape(
-                t.n_nodes, bank.req.shape[1])
-            # per-level host tables driving the level-synchronous scan.
-            # Leaf nodes never seed children, so their cells take the
-            # compaction-free path (the trie's analogue of the flat
-            # join's uniform-length final step); only internal-node
-            # cells pay for frontier compaction.
-            has_child = np.zeros(max(t.n_nodes, 1), bool)
-            has_child[t.node_parent[t.node_parent >= 0]] = True
-            self._tlevels = []
-            term_depth = t.node_depth[t.terminal_node[: bank.n_patterns]]
-            for d, nodes in enumerate(t.levels):
-                rows = np.nonzero(term_depth == d + 1)[0]
-                term_pos = t.node_pos[t.terminal_node[rows]]
-                leaf = ~has_child[nodes]
-                term_leaf = leaf[term_pos]
-                self._tlevels.append({
-                    "nodes": nodes,
-                    "leaf": leaf,
-                    "steps": t.node_step[nodes],
-                    "parent_pos": (
-                        t.node_pos[t.node_parent[nodes]] if d
-                        else np.zeros(len(nodes), np.int32)
-                    ),
-                    "term_rows_int": rows[~term_leaf],
-                    "term_pos_int": term_pos[~term_leaf],
-                    "term_rows_leaf": rows[term_leaf],
-                    "term_pos_leaf": term_pos[term_leaf],
-                })
+        self.trie: Optional[TrieBank] = (
+            trie if self.layout.uses_trie else None
+        )
+        self.layout.prepare(self)
         # tombstone mask (serving.streaming): inactive rows get their
         # prescreen requirements replaced by REQ_MASKED, so they are
         # never joined and always answer not-contained
@@ -302,6 +303,84 @@ class PatternServer:
             "escalated_cells", "host_fallback_cells",
         ])
 
+    # ------------------------------------------------------ layout hooks
+    # Registered as the built-in layouts' strategy hooks at the bottom
+    # of this module (layouts.register_layout).
+
+    def _prepare_flat(self) -> None:
+        self.trie = None  # the flat join never touches trie tables
+
+    def _prepare_trie(self) -> None:
+        bank = self.bank
+        t = self.trie = (
+            self.trie if self.trie is not None else build_trie(bank)
+        )
+        assert t.bank is bank, "trie must be built over this bank"
+        self._node_req = jnp.asarray(
+            t.node_req.reshape(t.n_nodes, bank.req.shape[1])
+        )
+        self._node_req_np = t.node_req.reshape(
+            t.n_nodes, bank.req.shape[1])
+        # per-level host tables driving the level-synchronous scan.
+        # Leaf nodes never seed children, so their cells take the
+        # compaction-free path (the trie's analogue of the flat
+        # join's uniform-length final step); only internal-node
+        # cells pay for frontier compaction.
+        has_child = np.zeros(max(t.n_nodes, 1), bool)
+        has_child[t.node_parent[t.node_parent >= 0]] = True
+        self._tlevels = []
+        term_depth = t.node_depth[t.terminal_node[: bank.n_patterns]]
+        for d, nodes in enumerate(t.levels):
+            rows = np.nonzero(term_depth == d + 1)[0]
+            term_pos = t.node_pos[t.terminal_node[rows]]
+            leaf = ~has_child[nodes]
+            term_leaf = leaf[term_pos]
+            self._tlevels.append({
+                "nodes": nodes,
+                "leaf": leaf,
+                "steps": t.node_step[nodes],
+                "parent_pos": (
+                    t.node_pos[t.node_parent[nodes]] if d
+                    else np.zeros(len(nodes), np.int32)
+                ),
+                "term_rows_int": rows[~term_leaf],
+                "term_pos_int": term_pos[~term_leaf],
+                "term_rows_leaf": rows[term_leaf],
+                "term_pos_leaf": term_pos[term_leaf],
+            })
+
+    def _prepare_trie_fused(self) -> None:
+        # the per-level tables stay: escalation replays the failing
+        # sub-trie level-synchronously at emax_retry (_escalate_trie),
+        # shared between the trie and trie_fused layouts - so the
+        # escalation/oracle semantics are bit-identical by construction
+        self._prepare_trie()
+        self._tpack = pack_subtrees(self.trie)
+        # the packed subtree tables live on device once; per batch only
+        # the surviving (sequence, subtree) cell list is uploaded
+        self._pk_steps = jnp.asarray(self._tpack.steps)
+        self._pk_parent = jnp.asarray(self._tpack.parent)
+        self._pk_req = jnp.asarray(self._tpack.pack_req(self._node_req_np))
+
+    def _mask_flat(self) -> None:
+        pass  # the flat prescreen reads _req directly
+
+    def _mask_trie(self) -> None:
+        bank = self.bank
+        if self._row_mask is None:
+            nreq = self.trie.node_req.reshape(
+                self.trie.n_nodes, bank.req.shape[1])
+        else:
+            nreq = masked_node_req(self.trie, self._row_mask)
+        self._node_req = jnp.asarray(nreq)
+        self._node_req_np = nreq
+
+    def _mask_trie_fused(self) -> None:
+        self._mask_trie()
+        # the in-kernel prescreen reads the packed per-slot req rows:
+        # re-gather them from the masked node table
+        self._pk_req = jnp.asarray(self._tpack.pack_req(self._node_req_np))
+
     # ------------------------------------------------------------- masking
     def set_row_mask(self, active: Optional[np.ndarray]) -> None:
         """Install (or with ``None`` clear) a tombstone mask: rows where
@@ -320,11 +399,7 @@ class PatternServer:
             self._row_mask = None
             self._req = jnp.asarray(bank.req)
             self._req_np = bank.req
-            if self.bank_layout == "trie":
-                nreq = self.trie.node_req.reshape(
-                    self.trie.n_nodes, bank.req.shape[1])
-                self._node_req = jnp.asarray(nreq)
-                self._node_req_np = nreq
+            self.layout.on_mask(self)
             return
         active = np.asarray(active, bool)
         assert active.shape == (bank.n_patterns,)
@@ -339,10 +414,7 @@ class PatternServer:
             req = np.concatenate([req, pad])
         self._req = jnp.asarray(req)
         self._req_np = req
-        if self.bank_layout == "trie":
-            nreq = masked_node_req(self.trie, active)
-            self._node_req = jnp.asarray(nreq)
-            self._node_req_np = nreq
+        self.layout.on_mask(self)
 
     # ------------------------------------------------------------- device
     def exact_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
@@ -388,9 +460,7 @@ class PatternServer:
         assert len(seqs) <= self.max_batch
         layout = self.bank_layout
         with trace.span("serving.batch", n=len(seqs), layout=layout):
-            if layout == "trie":
-                return self._launch_trie(seqs, shared)
-            return self._launch_flat(seqs, shared)
+            return self.layout.launch(self, seqs, shared)
 
     def finalize_rows(self, flight: InFlightRows) -> np.ndarray:
         """Fence one in-flight batch: read the join outputs back,
@@ -399,26 +469,44 @@ class PatternServer:
         the old synchronous batch, bit for bit."""
         with trace.span("serving.finalize_rows", n=len(flight.seqs),
                         layout=flight.layout):
-            if flight.layout == "trie":
-                for rows, sub, acc, ovf, n in flight.pending:
-                    acc_np = np.asarray(acc)[:n]
-                    ovf_np = np.asarray(ovf)[:n]
-                    live = sub >= 0
-                    idx = np.clip(sub, 0, None)
-                    flight.contained[:, rows] = np.where(
-                        live, acc_np[idx], False)
-                    flight.ovf[:, rows] = np.where(
-                        live, ovf_np[idx], False)
-            else:
-                for b_idx, p_global, c, o, n in flight.pending:
-                    flight.contained[b_idx, p_global] = np.array(c)[:n]
-                    flight.ovf[b_idx, p_global] = np.array(o)[:n]
+            get_layout(flight.layout).finalize(self, flight)
             self._resolve_undecided(
                 flight.tokens, flight.order, flight.start,
                 flight.count, flight.tmax, flight.contained,
                 flight.ovf, flight.seqs,
             )
             return flight.contained
+
+    def _finalize_flat(self, flight: InFlightRows) -> None:
+        for b_idx, p_global, c, o, n in flight.pending:
+            flight.contained[b_idx, p_global] = np.array(c)[:n]
+            flight.ovf[b_idx, p_global] = np.array(o)[:n]
+
+    def _finalize_trie(self, flight: InFlightRows) -> None:
+        for rows, sub, acc, ovf, n in flight.pending:
+            acc_np = np.asarray(acc)[:n]
+            ovf_np = np.asarray(ovf)[:n]
+            live = sub >= 0
+            idx = np.clip(sub, 0, None)
+            flight.contained[:, rows] = np.where(
+                live, acc_np[idx], False)
+            flight.ovf[:, rows] = np.where(
+                live, ovf_np[idx], False)
+
+    def _finalize_trie_fused(self, flight: InFlightRows) -> None:
+        # one deferred read per batch: acc/ovft are [n_cells, n_slots],
+        # terminal t of bank row rows[t] reads slot[t] of its subtree's
+        # cell (sub[b, t]; -1 = the subtree never walked for b, which
+        # is exactly the per-level "never seeded" False/False)
+        for rows, sub, slot, acc, ovft, n in flight.pending:
+            acc_np = np.asarray(acc)[:n]
+            ovf_np = np.asarray(ovft)[:n]
+            live = sub >= 0
+            idx = np.clip(sub, 0, None)
+            flight.contained[:, rows] = np.where(
+                live, acc_np[idx, slot[None, :]], False)
+            flight.ovf[:, rows] = np.where(
+                live, ovf_np[idx, slot[None, :]], False)
 
     def _run_batch(self, seqs: List[TRSeq]) -> np.ndarray:
         """Exact containment rows [len(seqs), n_patterns] for one chunk."""
@@ -562,12 +650,8 @@ class PatternServer:
             ovf[:, ~self._row_mask] = False
         bank = self.bank
         if (ovf & ~contained).any() and self.emax_retry > self.emax:
-            if self.bank_layout == "trie":
-                self._escalate_trie(tokens, order, start, count, tmax,
-                                    contained, ovf)
-            else:
-                self._escalate_flat(tokens, order, start, count, tmax,
-                                    contained, ovf)
+            self.layout.escalate(self, tokens, order, start, count,
+                                 tmax, contained, ovf)
         with trace.span("serving.oracle"):
             for b, p in zip(*np.nonzero(ovf & ~contained)):
                 contained[b, p] = contains(bank.patterns[p], seqs[b])
@@ -826,6 +910,109 @@ class PatternServer:
         return flight(tokens=tokens, order=order, start=start,
                       count=count, tmax=tmax, fetch=fetch)
 
+    def _launch_trie_fused(
+        self, seqs: List[TRSeq],
+        shared: Optional[SharedEncoding] = None,
+    ) -> InFlightRows:
+        """Fused-layout launch: the whole trie walk in ONE device
+        dispatch per query batch, independent of trie depth
+        (kernels.trie_walk).  A cell is a (sequence, depth-1 subtree)
+        pair; the kernel iterates the subtree's levels over in-kernel
+        frontier buffers and applies the per-node residual-``req``
+        prescreen in kernel, so only the subtree *roots* are prescreened
+        host-side to pick the surviving cells.  Singleton depth-1
+        subtrees are answered by the root prescreen alone (their
+        terminals are single-TR patterns, for which the prescreen is
+        the exact containment test - same shortcut as the per-level
+        path's depth-1 leaves).  Outputs, overflow semantics and the
+        escalation ladder are bit-identical to the per-level trie
+        layout (the differential harness in tests/test_trie_fused.py
+        pins all three layouts to the host oracle)."""
+        bank = self.bank
+        B0 = len(seqs)
+        pack = self._tpack
+        contained = np.zeros((B0, bank.n_patterns), bool)
+        ovf_out = np.zeros((B0, bank.n_patterns), bool)
+
+        def flight(tokens=None, order=None, start=None, count=None,
+                   tmax=1, fetch=()):
+            return InFlightRows(
+                layout="trie_fused", seqs=seqs, tokens=tokens,
+                order=order, start=start, count=count, tmax=tmax,
+                contained=contained, ovf=ovf_out, pending=list(fetch),
+            )
+
+        if not self._tlevels or not bank.n_patterns:
+            return flight()
+        if shared is None:
+            tokens, tmax = self._encode_own(seqs)
+            t0 = time.perf_counter()
+            order, start, count, possible = index_and_node_prescreen(
+                tokens, self._node_req, n_label_keys=bank.n_label_keys
+            )
+            _fence("serving.prescreen", t0,
+                   (order, start, count, possible))
+            poss = np.asarray(possible)[:B0]
+        else:
+            assert shared.n_label_keys == bank.n_label_keys
+            tokens, order, start, count, tmax = (
+                shared.tokens, shared.order, shared.start,
+                shared.count, shared.tmax,
+            )
+            with trace.span("serving.prescreen_host", n=len(seqs)):
+                poss = (
+                    shared.counts_np[:B0, None, :]
+                    >= self._node_req_np[None, :, :]
+                ).all(-1)
+        self.stats["device_batches"] += 1
+        # fused cells are walk *entry points* (subtree shards +
+        # singleton leaves), not per-node cells: the per-node prescreen
+        # runs in kernel, so only entries are prescreened host-side.  A
+        # shard cell is launched only if SOME exclusive terminal of the
+        # shard passes its own node prescreen - every kernel output is
+        # ANDed with the terminal's ``poss`` anyway, so cells with all
+        # terminals prescreen-dead contribute all-False accept/ovf bits
+        # and skipping them is bit-exact (and much sharper than gating
+        # at the shard root, whose ``node_req`` is the subtree min)
+        leaf_poss = poss[:, pack.leaf_roots]
+        shard_poss = np.zeros((B0, pack.n_subtrees), bool)
+        if len(pack.term_nodes):
+            np.logical_or.at(shard_poss.T, pack.term_sub,
+                             poss[:, pack.term_nodes].T)
+        self.stats["cells_possible"] += \
+            int(shard_poss.sum()) + int(leaf_poss.sum())
+        self.stats["cells_prescreened"] += \
+            int(shard_poss.size) + int(leaf_poss.size)
+        if len(pack.leaf_rows):
+            contained[:, pack.leaf_rows] = leaf_poss
+        b_idx, s_idx = np.nonzero(shard_poss)
+        n = len(b_idx)
+        if not n:
+            return flight(tokens=tokens, order=order, start=start,
+                          count=count, tmax=tmax)
+        # every surviving cell walks its full padded shard in kernel
+        self.stats["joined_steps"] += n * pack.n_slots
+        npad = _bucket34(n)
+        cells = np.zeros((npad, 2), np.int32)
+        cells[:n, 0] = b_idx
+        cells[:n, 1] = s_idx
+        t0 = time.perf_counter()
+        acc, ovft = fused_trie_walk(
+            tokens, order, start, count, jnp.asarray(cells),
+            self._pk_steps, self._pk_parent, self._pk_req,
+            ni=len(self._tlevels), nv=bank.nv, emax=self.emax,
+            tmax=tmax, use_kernel=self.use_kernel,
+        )
+        _fence("serving.fused_walk", t0, (acc, ovft), cells=n)
+        cell_of = np.full((B0, pack.n_subtrees), -1, np.int64)
+        cell_of[b_idx, s_idx] = np.arange(n)
+        sub = cell_of[:, pack.term_sub]
+        return flight(
+            tokens=tokens, order=order, start=start, count=count,
+            tmax=tmax,
+            fetch=[(pack.term_rows, sub, pack.term_slot, acc, ovft, n)],
+        )
+
     # ------------------------------------------------------------ scoring
     def _score(self, contained: np.ndarray, k: int) -> List[Tuple[int, int]]:
         # bank rows are ordered by (-support, canonical code), so the
@@ -835,10 +1022,37 @@ class PatternServer:
         return [(int(i), int(sup[i])) for i in ids]
 
     # ------------------------------------------------------------- public
+    def join(self, req) -> "JoinResult":
+        """The unified entry point (serving.join): exact requests run
+        the cached batch pipeline, ``exact=False`` requests serve the
+        prescreen-only approximate tier - sound overapproximation,
+        flagged ``exact=False`` per result, never cached."""
+        from .join import JoinResult, join_span
+        k = self.topk if req.k is None else req.k
+        seqs = list(req.seqs)
+        with join_span(req, "server"):
+            if req.exact:
+                return JoinResult(self._query_exact(seqs, k))
+            self.stats["queries"] += len(seqs)
+            approx = self.approx_rows(seqs)
+            return JoinResult([
+                QueryResult(
+                    fingerprint=sequence_fingerprint(s),
+                    contained=approx[i], topk=self._score(approx[i], k),
+                    cached=False, exact=False,
+                )
+                for i, s in enumerate(seqs)
+            ])
+
     def query(
         self, seqs: Sequence[TRSeq], k: Optional[int] = None
     ) -> List[QueryResult]:
-        k = self.topk if k is None else k
+        from .join import JoinRequest
+        return self.join(JoinRequest(seqs=tuple(seqs), k=k)).results
+
+    def _query_exact(
+        self, seqs: Sequence[TRSeq], k: int
+    ) -> List[QueryResult]:
         self.stats["queries"] += len(seqs)
         with trace.root_or_span("serving.query", n=len(seqs)):
             rows: Dict[str, np.ndarray] = {}
@@ -881,3 +1095,60 @@ class PatternServer:
 
     def query_one(self, seq: TRSeq, k: Optional[int] = None) -> QueryResult:
         return self.query([seq], k)[0]
+
+
+# --------------------------------------------------- layout registration
+# The built-in layouts register here, at the bottom so the hooks can
+# reference PatternServer's (unbound) methods; new layouts register the
+# same way instead of growing if/else chains through server / router /
+# cluster / streaming (see layouts.py).
+
+def _place_flat(bank, n_hosts, trie=None):
+    """Contiguous pattern-range placement."""
+    return [
+        np.asarray(r, np.int64)
+        for r in np.array_split(
+            np.arange(bank.n_patterns, dtype=np.int64), n_hosts
+        )
+    ]
+
+
+def _place_trie(bank, n_hosts, trie=None):
+    """Depth-1-subtree placement: subtrees stay intact per host, so
+    every shard keeps its prefix sharing (and the fused layout its
+    one-dispatch-per-shard walk)."""
+    if trie is None:
+        trie = build_trie(bank)
+    return [np.asarray(r, np.int64) for r in trie.shard_rows(n_hosts)]
+
+
+register_layout(Layout(
+    name="flat", uses_trie=False,
+    prepare=PatternServer._prepare_flat,
+    launch=PatternServer._launch_flat,
+    finalize=PatternServer._finalize_flat,
+    escalate=PatternServer._escalate_flat,
+    on_mask=PatternServer._mask_flat,
+    place=_place_flat,
+))
+register_layout(Layout(
+    name="trie", uses_trie=True,
+    prepare=PatternServer._prepare_trie,
+    launch=PatternServer._launch_trie,
+    finalize=PatternServer._finalize_trie,
+    escalate=PatternServer._escalate_trie,
+    on_mask=PatternServer._mask_trie,
+    place=_place_trie,
+))
+register_layout(Layout(
+    name="trie_fused", uses_trie=True,
+    prepare=PatternServer._prepare_trie_fused,
+    launch=PatternServer._launch_trie_fused,
+    finalize=PatternServer._finalize_trie_fused,
+    # escalation replays the failing sub-trie level-synchronously: the
+    # fused layout builds the same per-level tables, so the retry path
+    # (and hence the whole exactness ladder) is shared verbatim
+    escalate=PatternServer._escalate_trie,
+    on_mask=PatternServer._mask_trie_fused,
+    place=_place_trie,
+))

@@ -84,6 +84,7 @@ from ..obs import trace
 from ..obs.metrics import MetricsRegistry
 from .bank import BankCapacityError, PatternBank, compile_bank, \
     extend_bank
+from .layouts import get_layout
 from .server import PatternServer, QueryResult, score_topk
 from .trie import TrieBank, build_trie, extend_trie
 
@@ -159,7 +160,7 @@ class StreamingBank:
 
     # ------------------------------------------------------------ wiring
     def _make_server(self) -> PatternServer:
-        if self.bank_layout == "trie" and self.trie is None:
+        if get_layout(self.bank_layout).uses_trie and self.trie is None:
             self.trie = build_trie(self.bank)
         return PatternServer(
             self.bank, bank_layout=self.bank_layout, trie=self.trie,
@@ -518,6 +519,22 @@ class StreamingBank:
         return self.frequent()
 
     # ----------------------------------------------------------- serving
+    def join(self, req) -> "JoinResult":
+        """The unified entry point (serving.join): the inner server
+        join (which already honours the tombstone mask on both the
+        exact and approximate tiers) rescored by *live* window
+        supports; ``exact`` flags pass through untouched."""
+        from .join import JoinRequest, JoinResult
+        k = 10 if req.k is None else req.k
+        inner = self.server.join(JoinRequest(
+            seqs=req.seqs, k=0, exact=req.exact,
+            trace_id=req.trace_id))
+        return JoinResult([
+            dataclasses.replace(
+                r, topk=score_topk(r.contained, self.support, k))
+            for r in inner.results
+        ])
+
     def query(
         self, seqs: Sequence[TRSeq], k: int = 10
     ) -> List[QueryResult]:
@@ -525,9 +542,5 @@ class StreamingBank:
         answer False) with top-k scored by *live* window supports -
         compiled-time bank order goes stale as supports drift, so the
         server's order-based scoring shortcut does not apply here."""
-        results = self.server.query(seqs, k=0)
-        return [
-            dataclasses.replace(
-                r, topk=score_topk(r.contained, self.support, k))
-            for r in results
-        ]
+        from .join import JoinRequest
+        return self.join(JoinRequest(seqs=tuple(seqs), k=k)).results

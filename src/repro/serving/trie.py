@@ -352,6 +352,222 @@ def masked_node_req(trie: TrieBank, active: np.ndarray) -> np.ndarray:
     return node_req[:M] if M else node_req[:0]
 
 
+@dataclasses.dataclass
+class SubtreePack:
+    """Subtree *shards* packed into fixed slot tables - the fused
+    megakernel's layout (repro.kernels.trie_walk).  One *cell* of the
+    fused walk is a (sequence, shard) pair; slot ``n`` of shard ``s``
+    holds one trie node with its step row, its parent's slot index
+    (-1 = shard's first node, seeded from the shared root state) and -
+    gathered at serve time against the possibly-masked ``node_req`` -
+    its residual prescreen row.  Slots are in ascending global node-id
+    order, which is topological (parents first: node ids are assigned
+    in program order), so the kernel's single unrolled pass over slots
+    visits every node after its parent.
+
+    A shard is a connected piece of one depth-1 subtree.  Small
+    subtrees are one shard; subtrees wider than the slot budget
+    (``width_cap``) are partitioned bottom-up into parts of bounded
+    *exclusive* node count, and each part carries a replicated **spine**
+    - the ancestor chain from the depth-1 root down to the part root -
+    so its walk re-derives the part root's frontier in-cell with no
+    cross-cell traffic.  Spine slots are walked but own no terminals
+    (the part where a node is exclusive answers them); the per-node
+    frontier/overflow legs along the chain are the same as in the
+    unsharded walk, so the replication changes work layout, not bits.
+    Without the cap, one hub subtree would set every cell's slot width
+    (padding is uniform), multiplying the whole batch's walk work by
+    the hub's width - the measured 10x pessimization the cap removes.
+
+    ``roots[s]`` is the shard's *part root* (its deepest spine-free
+    ancestor), not the depth-1 root: ``node_req`` is a min over the
+    subtree below a node, so prescreening cells at the part root is
+    both sound (any cell it skips has prescreen-dead terminals, which
+    the in-kernel per-node prescreen would zero anyway - bit-identical
+    by monotonicity) and strictly sharper than gating at depth 1.
+
+    Singleton depth-1 subtrees (a childless depth-1 node) are *not*
+    packed: their terminals are single-TR patterns, for which the node
+    prescreen IS the exact containment test (``leaf_rows`` /
+    ``leaf_roots``; the per-level scan makes the same shortcut), so the
+    fused path answers them from the root prescreen with no walk and
+    ``ovf=False``.
+
+    Terminals are flat triples (``term_sub``/``term_slot``/
+    ``term_rows``): bank row ``term_rows[t]`` reads its accept /
+    terminal-overflow bits from slot ``term_slot[t]`` of shard
+    ``term_sub[t]``."""
+
+    node_ids: np.ndarray    # [S, Nmax] int32 global node id (-1 = pad)
+    steps: np.ndarray       # [S, Nmax, STEP_FIELDS] int32 (0 = pad)
+    parent: np.ndarray      # [S, Nmax] int32 parent slot (-1 root/pad)
+    roots: np.ndarray       # [S] int32 root node id per packed subtree
+    term_sub: np.ndarray    # [nt] int64 packed-shard index
+    term_slot: np.ndarray   # [nt] int64 slot within the shard
+    term_rows: np.ndarray   # [nt] int64 bank row
+    term_nodes: np.ndarray  # [nt] int32 global node id of the slot
+    leaf_rows: np.ndarray   # [nl] int64 singleton depth-1 leaf rows
+    leaf_roots: np.ndarray  # [nl] int32 their (single) node ids
+
+    @property
+    def n_subtrees(self) -> int:
+        return self.node_ids.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        return self.node_ids.shape[1]
+
+    def pack_req(self, node_req: np.ndarray) -> np.ndarray:
+        """Gather the (possibly tombstone-masked, see
+        ``masked_node_req``) per-node prescreen rows into slot layout:
+        [S, Nmax, K] with ``REQ_MASKED`` at padding slots, so pads are
+        prescreen-dead inside the kernel."""
+        K = node_req.shape[1] if node_req.ndim == 2 else 0
+        if not self.n_subtrees:
+            return np.zeros((0, self.n_slots, K), np.int32)
+        live = self.node_ids >= 0
+        gathered = node_req[np.clip(self.node_ids, 0, None)]
+        return np.where(live[..., None], gathered,
+                        REQ_MASKED).astype(np.int32)
+
+
+def _shard_group(trie: TrieBank, nodes: List[int],
+                 width_cap: int) -> List[Tuple[List[int], List[int]]]:
+    """Partition one depth-1 subtree (``nodes``, ascending ids, first
+    is the depth-1 root) into ``(spine, exclusive)`` shards whose total
+    slot width (spine + exclusive) stays within ``width_cap`` wherever
+    the trie's depth allows it.
+
+    Bottom-up greedy cut: walking nodes deepest-first, each node
+    accumulates the still-uncut subtree below it; when root-path depth
+    plus that accumulation would overflow the cap, the widest pending
+    child subtrees are cut off as shards of their own.  A shard's spine
+    is the ancestor chain from the depth-1 root to its part root's
+    parent (within this subtree), replicated so the walk is
+    self-contained per cell."""
+    root = nodes[0]
+    in_group = set(nodes)
+    children: Dict[int, List[int]] = {n: [] for n in nodes}
+    for n in nodes[1:]:
+        children[int(trie.node_parent[n])].append(n)
+    # spine length a shard rooted at n pays = #ancestors within group
+    spine_len = {root: 0}
+    for n in nodes[1:]:
+        spine_len[n] = spine_len[int(trie.node_parent[n])] + 1
+    pending: Dict[int, List[int]] = {}
+    shards: List[Tuple[List[int], List[int]]] = []
+
+    def spine_of(n: int) -> List[int]:
+        path: List[int] = []
+        p = int(trie.node_parent[n])
+        while p >= 0 and p in in_group:
+            path.append(p)
+            p = int(trie.node_parent[p])
+        return path[::-1]  # root first (ascending ids)
+
+    for n in reversed(nodes):  # children before parents
+        acc = [n]
+        for c in children[n]:
+            acc.extend(pending.pop(c, ()))
+        # cut the widest pending children until this node's shard-in-
+        # progress fits its worst-case width (its own spine + nodes);
+        # a single node deeper than the cap degrades gracefully (the
+        # caller pads nmax up)
+        while spine_len[n] + len(acc) > width_cap and len(acc) > 1:
+            # cut whichever uncut child subtree is widest inside acc
+            by_child = [(c, [m for m in acc if m == c or _under(
+                trie, m, c, in_group)]) for c in children[n]]
+            by_child = [(c, ms) for c, ms in by_child if ms]
+            if not by_child:
+                break
+            cut, cut_nodes = max(by_child, key=lambda kv: len(kv[1]))
+            shards.append((spine_of(cut), sorted(cut_nodes)))
+            acc = [m for m in acc if m not in set(cut_nodes)]
+        pending[n] = acc
+    shards.append((spine_of(root), sorted(pending[root])))
+    # deterministic order: by part root id (shards of one subtree stay
+    # adjacent, spine-first slot order inside each)
+    shards.sort(key=lambda se: se[1][0])
+    return shards
+
+
+def _under(trie: TrieBank, n: int, top: int, in_group: set) -> bool:
+    while n >= 0 and n in in_group:
+        if n == top:
+            return True
+        n = int(trie.node_parent[n])
+    return False
+
+
+def pack_subtrees(trie: TrieBank, width_cap: int = 8) -> SubtreePack:
+    """Lay the trie out as fixed-width subtree-shard slot tables for
+    the fused walk (see ``SubtreePack``).  ``width_cap`` bounds each
+    shard's slot count (spine + exclusive nodes); ``nmax`` is the pow-2
+    of the widest shard actually produced, so one hub subtree can no
+    longer inflate every cell's padded width."""
+    M = trie.n_nodes
+    # depth-1 ancestor per node: parents have smaller ids, one pass
+    anc = np.arange(max(M, 1), dtype=np.int64)
+    for n in range(M):
+        p = int(trie.node_parent[n])
+        if p >= 0:
+            anc[n] = anc[p]
+    groups: Dict[int, List[int]] = {}
+    for n in range(M):
+        groups.setdefault(int(anc[n]), []).append(n)  # ids ascending
+    term_of: Dict[int, List[int]] = {}
+    for row in range(trie.bank.n_patterns):
+        t = int(trie.terminal_node[row])
+        if t >= 0:
+            term_of.setdefault(t, []).append(row)
+    leaf_roots = [r for r in sorted(groups) if len(groups[r]) == 1]
+    leaf_rows = [row for r in leaf_roots for row in term_of.get(r, ())]
+    shards: List[Tuple[List[int], List[int]]] = []
+    for r in sorted(groups):
+        if len(groups[r]) > 1:
+            shards.extend(_shard_group(trie, groups[r], width_cap))
+    nmax = 1
+    while nmax < max((len(sp) + len(ex) for sp, ex in shards),
+                     default=1):
+        nmax <<= 1
+    S = len(shards)
+    node_ids = np.full((S, nmax), -1, np.int32)
+    steps = np.zeros((S, nmax, STEP_FIELDS), np.int32)
+    parent = np.full((S, nmax), -1, np.int32)
+    roots: List[int] = []
+    term_sub: List[int] = []
+    term_slot: List[int] = []
+    term_rows: List[int] = []
+    term_nodes: List[int] = []
+    for s, (spine, exclusive) in enumerate(shards):
+        nodes = spine + exclusive  # ascending ids == topological
+        roots.append(exclusive[0])
+        slot_of = {n: i for i, n in enumerate(nodes)}
+        node_ids[s, : len(nodes)] = nodes
+        steps[s, : len(nodes)] = trie.node_step[nodes]
+        for i, n in enumerate(nodes):
+            p = int(trie.node_parent[n])
+            parent[s, i] = slot_of.get(p, -1)
+        # only exclusive slots own terminals: spine slots are walked
+        # replicas whose rows another shard answers
+        for i, n in ((slot_of[n], n) for n in exclusive):
+            for row in term_of.get(n, ()):
+                term_sub.append(s)
+                term_slot.append(i)
+                term_rows.append(row)
+                term_nodes.append(n)
+    return SubtreePack(
+        node_ids=node_ids, steps=steps, parent=parent,
+        roots=np.asarray(roots, np.int32),
+        term_sub=np.asarray(term_sub, np.int64),
+        term_slot=np.asarray(term_slot, np.int64),
+        term_rows=np.asarray(term_rows, np.int64),
+        term_nodes=np.asarray(term_nodes, np.int32),
+        leaf_rows=np.asarray(leaf_rows, np.int64),
+        leaf_roots=np.asarray(leaf_roots, np.int32),
+    )
+
+
 def parent_prefix_hits(bank: PatternBank) -> int:
     """How many bank patterns have a reverse-search parent whose step
     program is a *literal* prefix of theirs (the spanning-tree edges the
