@@ -63,11 +63,29 @@ host (the subprocess test pins hosts to 8 virtual devices);
 ``cluster_route_qps`` exposes the residual per-shard protocol cost
 that such a deployment would overlap away.
 
+The **telemetry overhead** section is the always-on budget: the same
+async pass timed with tracing disabled vs 10% sampled mode with the
+full production wiring attached (flight recorder + SLO watchdog),
+best-of each.  Results must stay bit-identical, the breach counter
+must stay 0 on the healthy run, and ``check_bench.py`` gates
+``telemetry_overhead <= 0.05``.  Sampling stays enabled across the
+sampled rounds so the deterministic systematic sampler keeps >= 1
+trace (``obs.sampled_spans`` > 0 is also gated).  The artifact's
+``metrics`` block sums *additive* registry deltas across passes
+(counters, histogram ``.count``/``.sum``); the absolute latency
+percentiles (``cluster.router.e2e_seconds.p99`` etc.) are overlaid
+from the telemetry pass, where they are meaningful - that is what
+``scripts/trace_report.py --metrics BENCH_cluster.json --slo
+scripts/slo_rules.json`` evaluates.
+
 ``--smoke`` is the CI tier-4 gate: a tiny config, both layouts, >= 2
 hosts, hard-failing on any divergence, written atomically to
 ``BENCH_cluster_smoke.json``.  ``--trace PATH`` records the span
 tracer (repro.obs.trace) across the run; render the phase-attribution
-table with ``scripts/trace_report.py PATH``.
+table with ``scripts/trace_report.py PATH``.  ``--trace-sampled PATH``
+saves only the spans the sampled-mode rounds kept; ``--prom PATH``
+writes the final registry as Prometheus text exposition (validated
+strictly before writing); ``--sample-rate`` overrides the 10% default.
 """
 from __future__ import annotations
 
@@ -84,7 +102,9 @@ except ImportError:  # pragma: no cover - run as a script
 
 from repro.data.synthetic import Table3Params, generate_table3_db
 from repro.mining.driver import AcceleratedMiner
-from repro.obs import trace
+from repro.obs import FlightRecorder, load_rules, trace
+from repro.obs.export import prometheus_text, validate_exposition
+from repro.obs.slo import SloWatchdog
 from repro.serving.bank import compile_bank
 from repro.serving.cluster import ServingCluster, ShardedStreamingBank
 from repro.serving.server import PatternServer
@@ -93,9 +113,15 @@ from repro.serving.streaming import StreamingBank
 HERE = os.path.dirname(__file__)
 OUT = os.path.join(HERE, "..", "BENCH_cluster.json")
 OUT_SMOKE = os.path.join(HERE, "..", "BENCH_cluster_smoke.json")
+RULES = os.path.join(HERE, "..", "scripts", "slo_rules.json")
 
 ZIPF_S = 1.1  # rank exponent of the repeat mix
 N_ROUNDS = 3  # best-of rounds per timed pass (see module docstring)
+
+# histogram keys that are NOT additive across passes: summing medians
+# is meaningless, so _merge_metrics drops them and bench_telemetry
+# overlays the absolute values from its own instance instead
+_NONADDITIVE = ("min", "max", "mean", "p50", "p95", "p99")
 
 
 def zipf_mix(pool, n, seed=2, s=ZIPF_S):
@@ -115,6 +141,8 @@ def _chunks(items, n_chunks):
 
 def _merge_metrics(into, delta):
     for key, val in delta.items():
+        if key.rsplit(".", 1)[-1] in _NONADDITIVE:
+            continue
         into[key] = into.get(key, 0) + val
 
 
@@ -164,7 +192,7 @@ def _check_exact(results, want_by_fp, where):
     return divergences
 
 
-def bench_serving_cluster(db, pool, sigma, max_len, host_counts,
+def bench_serving_cluster(bank, pool, host_counts,
                           layouts, n_queries, n_drains, flush_batch,
                           metrics_sum):
     """Routed cluster vs single-host server under per-host Zipfian
@@ -174,8 +202,6 @@ def bench_serving_cluster(db, pool, sigma, max_len, host_counts,
     the async submit-all/collect pipeline (headline aggregate
     ``cluster_qps``) and the synchronous per-drain ``route``
     (``cluster_route_qps``)."""
-    bank = compile_bank(
-        AcceleratedMiner(db).mine_rs(sigma, max_len=max_len))
     single_qps = {}
     cluster_qps = {}
     route_qps = {}
@@ -292,6 +318,115 @@ def bench_shed_tier(bank, pool, exact_ref, n_hosts):
             ("queries", "misses", "shed_prescreen", "shard_batches")}
 
 
+def bench_telemetry(bank, pool, n_queries, n_drains, flush_batch,
+                    n_hosts, metrics_sum, sample_rate, smoke,
+                    prom_path=None, trace_sampled=None):
+    """The always-on telemetry budget: the same async submit/collect
+    pass timed with tracing disabled vs sampled mode with the full
+    production wiring attached (flight recorder + SLO watchdog),
+    best-of each.  Routed results must stay bit-identical, the breach
+    counter must stay 0 on this healthy run, and check_bench.py gates
+    the overhead ratio <= 5%.
+
+    Sampling is enabled ONCE across the sampled rounds: the systematic
+    sampler is a deterministic accumulator, so at 2 * n_drains roots
+    per pass it is guaranteed to keep >= 1 trace over the section
+    (check_bench also gates ``obs.sampled_spans`` > 0 in the metrics
+    block)."""
+    cl = ServingCluster(bank, n_hosts, bank_layout="flat",
+                        flush_batch=flush_batch)
+    streams = [zipf_mix(pool, n_queries, seed=5 + 13 * h)
+               for h in range(n_hosts)]
+    chunked = [_chunks(s, n_drains) for s in streams]
+    reqs = [{h: chunked[h][d] for h in range(n_hosts)}
+            for d in range(n_drains)]
+
+    def run_pass():
+        cl.router.clear_caches()
+        t0 = time.perf_counter()
+        tickets = [cl.submit(r) for r in reqs]
+        got = [cl.collect(t) for t in tickets]
+        run_pass.got = got
+        return time.perf_counter() - t0
+
+    def rows(got):
+        return [(r.contained.tobytes(), tuple(r.topk), r.exact)
+                for per_host in got
+                for rs in per_host.values() for r in rs]
+
+    rounds = 2 if smoke else N_ROUNDS
+    was_full = trace.enabled()
+    trace.disable()
+    run_pass()  # warm every shard's jit buckets
+    t_off = min(run_pass() for _ in range(rounds))
+    ref = rows(run_pass.got)
+
+    # the production wiring goes up only for the sampled rounds, so
+    # t_off is a true telemetry-disabled baseline.  The warm pass's
+    # jit compiles sit in the latency histograms as multi-second
+    # outliers; the watchdog's quantile rules read histograms
+    # absolutely, so reset first - scoping the histograms (and the
+    # percentiles overlaid into the artifact) to steady state.
+    cl.metrics.reset()
+    flight = FlightRecorder(capacity=32, metrics=cl.metrics,
+                            metrics_prefix="cluster.router")
+    wd = SloWatchdog(cl.metrics, load_rules(RULES), flight=flight)
+    cl.attach_watchdog(wd)
+    before = cl.metrics.snapshot()
+    saved_events = trace.tracer.events
+    trace.tracer.events = []
+    trace.enable_sampling(sample_rate, metrics=cl.metrics,
+                          flight=flight)
+    t_on = min(run_pass() for _ in range(rounds))
+    got_on = rows(run_pass.got)
+    trace.disable()
+    sampled_events = trace.tracer.events
+    trace.tracer.events = saved_events
+    if was_full:
+        trace.enable()  # restore the --trace run's full tracing
+
+    if got_on != ref:
+        raise AssertionError(
+            "sampled telemetry changed routed results - the observe "
+            "path leaked into the answers")
+    delta = cl.metrics.delta(before)
+    if delta.get("obs.sampled_spans", 0) <= 0:
+        raise AssertionError(
+            "sampled mode kept zero traces over "
+            f"{rounds * 2 * n_drains} roots at rate {sample_rate} - "
+            "the systematic sampler regressed")
+    if cl.metrics.counter("cluster.router.slo_breaches").value:
+        raise AssertionError(
+            "SLO watchdog fired on the healthy telemetry pass: "
+            f"{wd.last_breaches}")
+    _merge_metrics(metrics_sum, delta)
+    # absolute latency percentiles from this instance's histograms -
+    # the one place they are meaningful in the summed metrics block
+    # (feeds scripts/trace_report.py --metrics / --slo)
+    metrics_sum.update(
+        {k: v for k, v in cl.metrics.snapshot().items()
+         if k.rsplit(".", 1)[-1] in _NONADDITIVE})
+    if trace_sampled:
+        trace.tracer.events = sampled_events
+        trace.save(trace_sampled)
+        trace.tracer.events = saved_events
+    if prom_path:
+        text = prometheus_text(cl.metrics)
+        problems = validate_exposition(text)
+        if problems:
+            raise AssertionError(
+                f"invalid Prometheus exposition: {problems[:3]}")
+        with open(prom_path, "w") as f:
+            f.write(text)
+    return {
+        "telemetry_overhead": max(0.0, t_on / t_off - 1.0),
+        "telemetry_sample_rate": sample_rate,
+        "telemetry_sampled_traces":
+            delta.get("obs.sampled_traces", 0),
+        "telemetry_watchdog_checks": wd.checks,
+    }
+
+
 def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
                          batch_size, refresh_every, metrics_sum):
     """Sharded-window protocol vs the single-host StreamingBank on one
@@ -357,7 +492,8 @@ def bench_sharded_stream(db, stream, sigma, max_len, window, n_hosts,
     }
 
 
-def main(csv=print, smoke: bool = False, trace_path=None):
+def main(csv=print, smoke: bool = False, trace_path=None,
+         sample_rate: float = 0.1, prom_path=None, trace_sampled=None):
     if smoke:
         db_size, n_queries, max_len = 40, 48, 3
         pool_size, n_drains, flush_batch = 16, 3, 8
@@ -381,13 +517,19 @@ def main(csv=print, smoke: bool = False, trace_path=None):
     qparams = Table3Params(db_size=pool_size, v_avg=5, n_interstates=3)
     pool = generate_table3_db(qparams, seed=1)
 
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(sigma, max_len=max_len))
     metrics_sum = {}
     serving, divergences = bench_serving_cluster(
-        db, pool, sigma, max_len, host_counts, ("flat", "trie"),
+        bank, pool, host_counts, ("flat", "trie"),
         n_queries, n_drains, flush_batch, metrics_sum)
     streaming = bench_sharded_stream(
         stream_db, stream, max(2, window // 15), max_len, window,
         2, batch_size, refresh_every, metrics_sum)
+    telemetry = bench_telemetry(
+        bank, pool, n_queries, n_drains, flush_batch,
+        max(host_counts), metrics_sum, sample_rate, smoke,
+        prom_path=prom_path, trace_sampled=trace_sampled)
 
     host_q = sum(v for k, v in metrics_sum.items()
                  if k.startswith("serving.server.")
@@ -405,6 +547,7 @@ def main(csv=print, smoke: bool = False, trace_path=None):
         "cache_hit_rate": (l1 + l2) / routed if routed else 0.0,
         **serving,
         **streaming,
+        **telemetry,
         "metrics": metrics_sum,
     }
     if trace_path:
@@ -429,6 +572,10 @@ def main(csv=print, smoke: bool = False, trace_path=None):
         f"ups={streaming['single_stream_updates_per_sec']:.0f}")
     csv(f"cluster/cache,{payload['cache_hit_rate']:.3f},"
         f"l1={l1},l2={l2},routed={routed}")
+    csv(f"cluster/telemetry_overhead,{0:.0f},"
+        f"{100.0 * telemetry['telemetry_overhead']:.2f}%"
+        f"@{sample_rate:.0%},"
+        f"sampled_traces={telemetry['telemetry_sampled_traces']}")
     return payload
 
 
@@ -442,12 +589,27 @@ if __name__ == "__main__":
                     help="record a span trace of the run (Chrome JSON "
                          "for .json paths, JSONL otherwise); inspect "
                          "with scripts/trace_report.py")
+    ap.add_argument("--sample-rate", type=float, default=0.1,
+                    metavar="R",
+                    help="trace sampling rate for the telemetry "
+                         "overhead section (default 0.1)")
+    ap.add_argument("--trace-sampled", default=None, metavar="PATH",
+                    help="save only the spans kept by the sampled-mode "
+                         "telemetry rounds (same formats as --trace)")
+    ap.add_argument("--prom", default=None, metavar="PATH",
+                    help="write the telemetry cluster's registry as "
+                         "Prometheus text exposition (validated "
+                         "strictly before writing)")
     args = ap.parse_args()
-    out = main(smoke=args.smoke, trace_path=args.trace)
+    out = main(smoke=args.smoke, trace_path=args.trace,
+               sample_rate=args.sample_rate, prom_path=args.prom,
+               trace_sampled=args.trace_sampled)
     print(f"# cluster routed serving bit-equal to single-host "
           f"({out['divergences']} divergences) across hosts "
           f"{out['host_counts']}; zipf cache hit rate "
           f"{out['cache_hit_rate']:.2f}; sharded window "
           f"{out['sharded_stream_updates_per_sec']:.0f} ups vs single "
           f"{out['single_stream_updates_per_sec']:.0f} ups over "
-          f"{out['stream_hosts']} hosts")
+          f"{out['stream_hosts']} hosts; sampled telemetry overhead "
+          f"{100 * out['telemetry_overhead']:.1f}% at "
+          f"{out['telemetry_sample_rate']:.0%}")

@@ -38,10 +38,22 @@ needed):
 Every artifact also carries a ``metrics`` block - a flat registry
 snapshot (``repro.obs.metrics``) of the counters the timed code paths
 actually incremented.  The schema check requires every entry to be
-numeric, and two gates read specific counters: the cluster artifacts
-must show nonzero L1+L2 cache hits (the Zipfian repeat mix exists to
-exercise the two-level cache), and the mining artifacts must show the
-wavefront issuing fewer device calls than per-pattern dispatch.
+numeric plus, per artifact, the presence of the always-on latency
+histogram keys (``METRICS_REQUIRED``: the ``.count`` of each bucket
+histogram the instrumented seam must have fed - a count pinned at 0
+means the telemetry stopped observing).  Counter-level gates read
+specific entries: the cluster artifacts must show nonzero L1+L2 cache
+hits (the Zipfian repeat mix exists to exercise the two-level cache),
+``obs.sampled_spans`` > 0 with ``cluster.router.slo_breaches`` == 0
+(sampled tracing kept traces AND the watchdog stayed quiet on the
+healthy run), and the mining artifacts must show the wavefront
+issuing fewer device calls than per-pattern dispatch.
+
+The serving and cluster artifacts additionally carry the **always-on
+telemetry budget**: ``telemetry_overhead`` (sampled-mode wall time
+over the telemetry-disabled baseline, best-of passes) is gated
+<= ``TELEMETRY_OVERHEAD_MAX`` (5%) - the number that justifies
+leaving sampling on in production.
 
 Exit code 0 = all gates green.  Used by scripts/ci.sh tier-2.
 """
@@ -72,6 +84,8 @@ SCHEMAS = {
         "joined_steps_flat": int,
         "joined_steps_trie": int,
         "joined_steps_fused": int,
+        "telemetry_overhead": _NUM,
+        "telemetry_sample_rate": _NUM,
         "rounds": list,
         "metrics": dict,
     },
@@ -100,6 +114,8 @@ SCHEMAS = {
         "bank_patterns": int,
         "server_qps": _NUM,
         "speedup_server": _NUM,
+        "telemetry_overhead": _NUM,
+        "telemetry_sample_rate": _NUM,
         "metrics": dict,
     },
     "BENCH_streaming.json": {
@@ -138,6 +154,8 @@ SCHEMAS = {
         "single_stream_updates_per_sec": _NUM,
         "sharded_stream_updates_per_sec": _NUM,
         "cache_hit_rate": _NUM,
+        "telemetry_overhead": _NUM,
+        "telemetry_sample_rate": _NUM,
         "metrics": dict,
     },
     "BENCH_cluster_smoke.json": {
@@ -149,6 +167,8 @@ SCHEMAS = {
         "shed_stats": dict,
         "sharded_stream_updates_per_sec": _NUM,
         "cache_hit_rate": _NUM,
+        "telemetry_overhead": _NUM,
+        "telemetry_sample_rate": _NUM,
         "metrics": dict,
     },
     "BENCH_mining.json": {
@@ -169,6 +189,53 @@ SCHEMAS = {
 }
 
 SMOKE_REGRESSION_FACTOR = 3.0
+
+# the always-on budget: sampled-mode wall overhead over the
+# telemetry-disabled baseline, gated on every artifact that measures it
+TELEMETRY_OVERHEAD_MAX = 0.05
+
+# metric keys that must be present AND nonzero in each artifact's
+# metrics block: the .count of every always-on latency bucket
+# histogram the instrumented seam feeds (0 or absent = the telemetry
+# layer silently stopped observing that seam)
+_SERVING_HISTS = [
+    "serving.flat.query_seconds.count",
+    "serving.trie.query_seconds.count",
+    "serving.fused.query_seconds.count",
+]
+_KERNEL_HISTS = [
+    "serving.trie.query_seconds.count",
+    "serving.fused.query_seconds.count",
+]
+_STREAMING_HISTS = [
+    "streaming.bank.observe_seconds.count",
+    "streaming.bank.refresh_seconds.count",
+]
+_CLUSTER_HISTS = [
+    "cluster.router.e2e_seconds.count",
+    "cluster.router.queue_wait_seconds.count",
+    "cluster.router.flush_seconds.count",
+    "cluster.router.route_seconds.count",
+    "streaming.sharded.observe_seconds.count",
+    "streaming.sharded.refresh_seconds.count",
+    "obs.sampled_spans",
+]
+_MINING_HISTS = [
+    "mining.wavefront.wave_seconds.count",
+    "mining.pattern.wave_seconds.count",
+]
+METRICS_REQUIRED = {
+    "BENCH_serving.json": _SERVING_HISTS,
+    "BENCH_serving_smoke.json": _SERVING_HISTS,
+    "BENCH_kernel.json": _KERNEL_HISTS,
+    "BENCH_kernel_smoke.json": _KERNEL_HISTS,
+    "BENCH_streaming.json": _STREAMING_HISTS,
+    "BENCH_streaming_smoke.json": _STREAMING_HISTS,
+    "BENCH_cluster.json": _CLUSTER_HISTS,
+    "BENCH_cluster_smoke.json": _CLUSTER_HISTS,
+    "BENCH_mining.json": _MINING_HISTS,
+    "BENCH_mining_smoke.json": _MINING_HISTS,
+}
 
 
 class GateError(Exception):
@@ -204,6 +271,13 @@ def check_schema(name: str, payload: dict) -> None:
                 raise GateError(
                     f"{name}: metrics[{key!r}] has type "
                     f"{type(val).__name__}, expected a number"
+                )
+        for key in METRICS_REQUIRED.get(name, ()):
+            if metrics.get(key, 0) <= 0:
+                raise GateError(
+                    f"{name}: metrics[{key!r}] = "
+                    f"{metrics.get(key, 'absent')} - the always-on "
+                    "latency histogram on that seam stopped observing"
                 )
 
 
@@ -333,6 +407,28 @@ def check_invariants(name: str, payload: dict) -> None:
             raise GateError(
                 f"{name}: shed_stats shows zero shed_prescreen answers "
                 "- the load-shedding tier was never exercised"
+            )
+        # the watchdog must have stayed quiet on the healthy telemetry
+        # pass (the bench raises before writing when it fires, so a
+        # nonzero committed counter means the artifact was hand-edited)
+        if m.get("cluster.router.slo_breaches", 0) != 0:
+            raise GateError(
+                f"{name}: cluster.router.slo_breaches = "
+                f"{m.get('cluster.router.slo_breaches')} on the "
+                "healthy telemetry run"
+            )
+    # the always-on budget: serving + cluster artifacts measure the
+    # sampled-mode overhead vs a telemetry-disabled baseline; a ratio
+    # past 5% means the observe path grew a real per-query cost and
+    # can no longer claim to be production-safe default-on
+    if "telemetry_overhead" in SCHEMAS[name]:
+        ov = payload["telemetry_overhead"]
+        if ov > TELEMETRY_OVERHEAD_MAX:
+            raise GateError(
+                f"{name}: telemetry_overhead {ov:.3f} > "
+                f"{TELEMETRY_OVERHEAD_MAX} at sample rate "
+                f"{payload.get('telemetry_sample_rate')} - sampled "
+                "tracing is no longer cheap enough to leave on"
             )
     if name == "BENCH_cluster.json":
         # the PR-7 scaling gate, full artifact only (the smoke config

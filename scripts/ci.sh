@@ -49,6 +49,21 @@
 #           block.  Tracing is off by default everywhere else - the
 #           no-op path is property-tested to change nothing.
 #
+#           The cluster smoke additionally exercises the ALWAYS-ON
+#           telemetry path: --trace-sampled saves the spans the 10%
+#           sampled rounds kept (schema-checked with
+#           --min-coverage 0.0: sampled/tail roots legitimately have
+#           sparse children), --prom writes the registry as Prometheus
+#           text exposition (validated strictly via
+#           repro.obs.export.validate_exposition), the SLO rules in
+#           scripts/slo_rules.json are evaluated against the fresh
+#           BENCH_cluster_smoke.json metrics block (trace_report
+#           --slo exits nonzero on any breach), and
+#           scripts/watchdog_smoke.py proves the alarm path end to
+#           end - the watchdog must demonstrably fire (breach counter
+#           + flight-recorder dump) on an injected stall while results
+#           stay exact.
+#
 #           Reading a trace by hand:
 #             scripts/trace_report.py /tmp/trace.json          # tables
 #             scripts/trace_report.py t.jsonl --top 20         # more rows
@@ -110,10 +125,30 @@ fi
 if [[ "${CI_TIER6:-1}" != "0" && "${CI_FAST:-0}" != "1" ]]; then
     echo "[ci] tier-6: observability smoke (traced runs + span schema + metrics blocks)"
     TRACE_DIR="$(mktemp -d)"
-    python benchmarks/bench_cluster.py --smoke --trace "$TRACE_DIR/cluster.json"
+    python benchmarks/bench_cluster.py --smoke --trace "$TRACE_DIR/cluster.json" \
+        --trace-sampled "$TRACE_DIR/cluster_sampled.jsonl" --prom "$TRACE_DIR/cluster.prom"
     python benchmarks/bench_mining.py --smoke --trace "$TRACE_DIR/mining.jsonl"
     python scripts/trace_report.py "$TRACE_DIR/cluster.json" --check --min-coverage 0.9
     python scripts/trace_report.py "$TRACE_DIR/mining.jsonl" --check --min-coverage 0.9
+    echo "[ci] tier-6: sampled-trace schema + Prometheus exposition + SLO rules"
+    python scripts/trace_report.py "$TRACE_DIR/cluster_sampled.jsonl" --check --min-coverage 0.0 \
+        --metrics BENCH_cluster_smoke.json --slo scripts/slo_rules.json
+    python - "$TRACE_DIR/cluster.prom" <<'PY'
+import sys
+from repro.obs.export import validate_exposition
+text = open(sys.argv[1]).read()
+problems = validate_exposition(text)
+for p in problems:
+    print(f"[ci] tier-6: prom exposition problem: {p}")
+n = sum(1 for ln in text.splitlines()
+        if ln and not ln.startswith("#"))
+print(f"[ci] tier-6: Prometheus exposition "
+      + (f"INVALID ({len(problems)} problem(s))" if problems
+         else f"OK ({n} samples)"))
+sys.exit(1 if problems or n == 0 else 0)
+PY
+    echo "[ci] tier-6: watchdog fires on an injected stall"
+    python scripts/watchdog_smoke.py
     python - <<'PY'
 import json, os, sys
 # every smoke artifact present after this run must carry the metrics

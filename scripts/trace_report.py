@@ -28,19 +28,33 @@ Examples::
     python scripts/trace_report.py /tmp/t.json
     python scripts/trace_report.py /tmp/t.json --top 15 --json
     python scripts/trace_report.py /tmp/t.json --check --min-coverage 0.9
+    python scripts/trace_report.py /tmp/t.json \
+        --metrics BENCH_cluster_smoke.json --slo scripts/slo_rules.json
 
 ``--check`` is the CI tier-6 gate: it validates the trace schema
 (every span well-formed, categories known, at least one root span) and
 fails when attribution coverage - the non-uninstrumented share of wall
 time - drops below ``--min-coverage`` (default 0.9).  Exit code 0 =
 healthy trace.
+
+``--metrics PATH`` reads a metrics snapshot (a BENCH artifact with a
+``metrics`` block, or a flat ``{name: value}`` JSON) and renders the
+latency percentile block from the bucket-histogram keys
+(``*_seconds.p50/.p95/.p99``).  ``--slo RULES.json`` additionally
+evaluates the declarative SLO rules (``repro.obs.slo``) against that
+snapshot and exits nonzero on any breach - the tier-6 gate reads SLOs,
+not just coverage.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
 BUCKETS = ("device", "dispatch", "cache", "host")
 CATEGORIES = BUCKETS + ("wall",)
@@ -234,6 +248,57 @@ def render(report: Dict[str, Any], top: int = 12) -> str:
     return "\n".join(lines)
 
 
+def load_metrics(path: str) -> Dict[str, float]:
+    """Flat metrics snapshot from a BENCH artifact (its ``metrics``
+    block) or a flat ``{name: value}`` JSON dict."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        raise TraceError(f"{path}: metrics file is not a JSON object")
+    if "metrics" in doc and isinstance(doc["metrics"], dict):
+        doc = doc["metrics"]
+    return {k: v for k, v in doc.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def render_percentiles(snap: Dict[str, float]) -> str:
+    """The latency percentile block: one row per bucket histogram
+    that exported quantiles (``<base>.p50/.p95/.p99`` snapshot keys)."""
+    bases = sorted({k[: -len(".p50")] for k in snap if k.endswith(".p50")})
+    if not bases:
+        return "latency percentiles: (no bucket histograms in snapshot)"
+    lines = ["latency percentiles (bucket-histogram upper bounds)"]
+    lines.append(f"  {'histogram':<40} {'count':>8} {'p50':>10} "
+                 f"{'p95':>10} {'p99':>10} {'max':>10}")
+    for base in bases:
+        def col(suffix):
+            v = snap.get(f"{base}.{suffix}")
+            if v is None:
+                return "-".rjust(10)
+            return f"{v * 1e3:>9.3f}m" if suffix != "count" \
+                else f"{int(v):>8}"
+        lines.append(f"  {base:<40} {col('count')} {col('p50')} "
+                     f"{col('p95')} {col('p99')} {col('max')}")
+    return "\n".join(lines)
+
+
+def check_slo(rules_path: str, snap: Dict[str, float]) -> int:
+    """Evaluate declarative SLO rules against the snapshot; prints a
+    verdict per rule set and returns the breach count."""
+    from repro.obs.slo import evaluate, load_rules
+    rules = load_rules(rules_path)
+    breaches = evaluate(rules, snap)
+    for b in breaches:
+        print(f"[trace_report] {b}")
+    if breaches:
+        print(f"[trace_report] SLO FAIL: {len(breaches)} of "
+              f"{len(rules)} rule(s) breached")
+    else:
+        print(f"[trace_report] SLO OK: {len(rules)} rule(s) within "
+              "bounds")
+    return len(breaches)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
@@ -251,7 +316,15 @@ def main(argv=None) -> int:
     ap.add_argument("--json", action="store_true",
                     help="emit the machine-readable summary instead "
                          "of the table")
+    ap.add_argument("--metrics", metavar="PATH",
+                    help="metrics snapshot (BENCH artifact or flat "
+                         "JSON): renders the latency percentile block")
+    ap.add_argument("--slo", metavar="RULES.json",
+                    help="evaluate SLO rules against --metrics; exit "
+                         "nonzero on any breach")
     args = ap.parse_args(argv)
+    if args.slo and not args.metrics:
+        ap.error("--slo requires --metrics")
 
     try:
         events = load_events(args.trace)
@@ -284,6 +357,17 @@ def main(argv=None) -> int:
         print(f"[trace_report] check OK: {report['n_spans']} spans, "
               f"coverage {report['coverage']:.3f} >= "
               f"{args.min_coverage:.3f}")
+    if args.metrics:
+        try:
+            snap = load_metrics(args.metrics)
+        except (OSError, json.JSONDecodeError, TraceError) as e:
+            print(f"[trace_report] FAIL: {e}")
+            return 1
+        if not args.json:
+            print()
+            print(render_percentiles(snap))
+        if args.slo and check_slo(args.slo, snap):
+            return 1
     return 0
 
 

@@ -122,6 +122,10 @@ class AcceleratedMiner:
             f"{metrics_ns}.n_device_calls")
         self._h_wave = self.metrics.histogram(
             f"{metrics_ns}.wave_patterns")
+        # always-on latency percentiles: wall (launch + blocked) per
+        # packed device chunk, log-scale buckets
+        self._h_wave_s = self.metrics.bucket_histogram(
+            f"{metrics_ns}.wave_seconds")
 
     # registry-backed views of the historical timing attributes
     @property
@@ -223,6 +227,7 @@ class AcceleratedMiner:
             t2 = time.perf_counter()
             self._c_device_s.inc(t2 - t0)
             self._c_calls.inc()
+            self._h_wave_s.observe(t2 - t0)
             # intervals are measured above regardless of tracing, so
             # recording them cannot perturb the timing they describe
             trace.add_complete("mining.dispatch", "dispatch",

@@ -1,4 +1,4 @@
-"""Observability: the unified tracing + metrics layer.
+"""Observability: the always-on tracing + metrics + SLO layer.
 
 Every layer of the system - mining wavefront slices, serving join
 levels and the escalation ladder, streaming refresh/reconcile phases,
@@ -7,13 +7,14 @@ cluster routing rounds - reports through this package:
 * ``metrics``  - ``MetricsRegistry``: typed counters / gauges /
                  histograms under dotted namespaces, with cheap
                  ``snapshot()`` / ``delta()`` / explicit-only
-                 ``reset()``.  The old ad-hoc ``stats`` dicts are now
-                 ``StatsView`` facades over a registry, so counters
-                 survive component rebuilds (a streaming
-                 ``refresh(full=True)`` recompile no longer zeroes its
-                 server's counters) and BENCH artifacts export a
-                 ``metrics`` block that ``scripts/check_bench.py``
-                 gates on.
+                 ``reset()``.  ``BucketHistogram`` adds fixed
+                 log-scale-bucket latency percentiles (p50/p95/p99
+                 quantile bounds, constant memory) - the always-on
+                 store behind every ``*_seconds`` metric.  The old
+                 ad-hoc ``stats`` dicts are ``StatsView`` facades over
+                 a registry, so counters survive component rebuilds
+                 and BENCH artifacts export a ``metrics`` block that
+                 ``scripts/check_bench.py`` gates on.
 * ``trace``    - the span tracer: ``trace.span("serving.trie_level",
                  cat="dispatch", level=k)`` regions bucketed into
                  host / dispatch / device / cache, per-query and
@@ -21,20 +22,52 @@ cluster routing rounds - reports through this package:
                  ``ClusterRouter.route -> ClusterHost.call ->
                  PatternServer -> kernel dispatch`` by contextvar,
                  Chrome-trace JSON + JSONL export.  Disabled by
-                 default with a property-tested no-op fast path:
-                 tracing on/off never changes results or device
-                 dispatch counts.
+                 default with a property-tested no-op fast path; full
+                 ``enable()`` fences device spans, and the production
+                 mode ``enable_sampling(rate, latency_threshold=...)``
+                 keeps a deterministic fraction of root trees plus
+                 every tail-latency / ``mark()``-ed anomalous root,
+                 never fencing - results stay bit-identical and
+                 overhead inside the <= 5% budget.
+* ``flight``   - ``FlightRecorder``: a ring buffer of the last N kept
+                 query span-trees + prefix-scoped metric deltas,
+                 dumped to JSONL on demand, on anomaly, or by the
+                 watchdog on an SLO breach.
+* ``export``   - ``prometheus_text()`` exposition of any registry +
+                 the strict ``validate_exposition()`` grammar check
+                 CI gates on, and ``MetricsExporter`` for periodic
+                 JSONL snapshot shipping (injectable clock).
+* ``slo``      - declarative ``SloRule``s (quantile / rate / gauge /
+                 counter bounds) shared by the in-process
+                 ``SloWatchdog`` (registry deltas, breach counter,
+                 flight-recorder dumps) and the
+                 ``trace_report --slo`` CI gate.
 
 ``scripts/trace_report.py`` renders a phase-attribution table (self
-time per bucket, per subsystem, top spans) from a saved trace and
-doubles as the CI tier-6 trace-schema gate.
+time per bucket, per subsystem, top spans), a percentile block from
+the bucket histograms, and doubles as the CI tier-6 trace-schema +
+SLO gate.
 """
 from . import trace  # noqa: F401
+from .export import (  # noqa: F401
+    MetricsExporter,
+    prometheus_text,
+    validate_exposition,
+)
+from .flight import FlightRecorder  # noqa: F401
 from .metrics import (  # noqa: F401
+    BucketHistogram,
     Counter,
     Gauge,
     Histogram,
     MetricsRegistry,
     StatsView,
     global_registry,
+)
+from .slo import (  # noqa: F401
+    Breach,
+    SloRule,
+    SloWatchdog,
+    evaluate,
+    load_rules,
 )

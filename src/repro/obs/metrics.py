@@ -10,8 +10,11 @@ their counters while others accumulated).  The registry fixes both:
 
 * **Typed metrics** - ``Counter`` (monotone int/float adds),
   ``Gauge`` (last-set value), ``Histogram`` (count/sum/min/max
-  aggregate, constant memory) - all keyed by dotted namespaced names
-  (``"serving.server.joined_steps"``, ``"mining.n_device_calls"``).
+  aggregate, constant memory), ``BucketHistogram`` (fixed log-scale
+  buckets with exact quantile-*bound* queries - the always-on latency
+  percentile store, still constant memory) - all keyed by dotted
+  namespaced names (``"serving.server.joined_steps"``,
+  ``"cluster.router.e2e_seconds"``).
 * **Snapshot / delta / reset** - ``snapshot()`` is a cheap flat
   ``{name: number}`` dict (histograms expand to ``name.count`` etc.),
   ``delta(before)`` subtracts two snapshots, ``reset(prefix)`` zeroes.
@@ -36,8 +39,10 @@ production (a few dict/int ops per already-expensive device batch).
 """
 from __future__ import annotations
 
+import bisect
+import warnings
 from collections.abc import MutableMapping
-from typing import Dict, Iterable, Iterator, Optional, Union
+from typing import Dict, Iterable, Iterator, List, Optional, Union
 
 Number = Union[int, float]
 
@@ -56,9 +61,24 @@ class Counter:
         self.value += n
 
     def set(self, v: Number) -> None:
-        """Direct assignment - kept for the ``StatsView`` facade
-        (benchmarks reset per-pass counters by assigning 0)."""
-        self.value = v
+        """Assignment is NOT a counter operation: counters are monotone
+        (rates, deltas and the Prometheus exposition all assume it).
+        Setting any non-zero value raises; setting 0 still works (it is
+        a reset) but warns - route resets through
+        ``MetricsRegistry.reset(prefix)``, the one sanctioned zeroing
+        path."""
+        if v != 0:
+            raise ValueError(
+                f"counter {self.name!r}: direct assignment of {v!r} "
+                "breaks monotonicity - use inc(), or a Gauge for a "
+                "value that moves both ways"
+            )
+        warnings.warn(
+            f"counter {self.name!r}: reset-by-assignment is deprecated"
+            " - use MetricsRegistry.reset(prefix) instead",
+            stacklevel=3,
+        )
+        self.value = 0
 
     def reset(self) -> None:
         self.value = 0
@@ -114,6 +134,66 @@ class Histogram:
         return out
 
 
+def _log_bounds(lo: float, hi: float, per_decade: int) -> List[float]:
+    import math
+
+    n = int(round(math.log10(hi / lo) * per_decade))
+    return [lo * 10.0 ** (i / per_decade) for i in range(n + 1)]
+
+
+class BucketHistogram(Histogram):
+    """Fixed log-scale-bucket histogram: the always-on latency
+    percentile store.  Memory is constant (one int per bucket) and
+    ``observe`` is one ``bisect`` + three compares, so it can sit on
+    the per-query hot path.
+
+    ``quantile(q)`` returns an exact *bound*: the upper edge of the
+    bucket containing the q-th observation (the true value is within
+    one bucket width, ~33% at 8 buckets/decade; for the overflow
+    bucket the tracked exact ``max`` is returned).  ``summary()`` adds
+    ``p50``/``p95``/``p99`` to the base count/sum/min/max/mean, so
+    registry ``snapshot()`` expands it into the BENCH metrics blocks
+    with no registry changes."""
+
+    # 1 µs .. 100 s at 8 buckets per decade: 64 finite buckets + one
+    # overflow - covers every latency this repo measures (a device
+    # dispatch is ~100 µs, a full cluster drain tens of ms).
+    BOUNDS: List[float] = _log_bounds(1e-6, 1e2, 8)
+
+    __slots__ = ("counts",)
+
+    def observe(self, v: Number) -> None:
+        super().observe(v)
+        self.counts[bisect.bisect_left(self.BOUNDS, v)] += 1
+
+    def reset(self) -> None:
+        super().reset()
+        self.counts = [0] * (len(self.BOUNDS) + 1)
+
+    def quantile(self, q: float) -> float:
+        """Upper bound of the bucket holding the q-th observation
+        (0 <= q <= 1); 0.0 when empty, exact max for overflow."""
+        if not self.count:
+            return 0.0
+        rank = q * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank and c:
+                if i < len(self.BOUNDS):
+                    return self.BOUNDS[i]
+                return self.max
+        return self.max
+
+    def summary(self) -> Dict[str, Number]:
+        out = super().summary()
+        if self.count:
+            out["p50"] = self.quantile(0.50)
+            out["p95"] = self.quantile(0.95)
+            out["p99"] = self.quantile(0.99)
+        return out
+
+
 class MetricsRegistry:
     """A flat namespace of typed metrics.  Name collisions within one
     registry return the *same* metric object (that is what makes
@@ -143,6 +223,9 @@ class MetricsRegistry:
 
     def histogram(self, name: str) -> Histogram:
         return self._get(name, Histogram)
+
+    def bucket_histogram(self, name: str) -> BucketHistogram:
+        return self._get(name, BucketHistogram)
 
     def view(self, namespace: str,
              keys: Iterable[str] = ()) -> "StatsView":
@@ -212,7 +295,15 @@ class StatsView(MutableMapping):
     def __setitem__(self, key: str, value: Number) -> None:
         if key not in self._keys:
             self._keys.append(key)
-        self._registry.counter(self._full(key)).set(value)
+        c = self._registry.counter(self._full(key))
+        # ``stats[k] += n`` arrives here as setitem(k, old + n): apply
+        # the non-negative delta as an inc.  A decrease is either the
+        # deprecated reset-to-0 idiom (Counter.set warns) or a
+        # monotonicity violation (Counter.set raises).
+        if value >= c.value:
+            c.inc(value - c.value)
+        else:
+            c.set(value)
 
     def __delitem__(self, key: str) -> None:  # pragma: no cover
         raise TypeError("registry-backed stats cannot drop keys")

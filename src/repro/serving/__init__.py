@@ -137,6 +137,41 @@ threads one trace id per routed query / wavefront through
 dispatch``, splitting launch from blocked device time; it is off by
 default and property-tested to change nothing (tests/test_obs.py).
 Render a saved trace with ``scripts/trace_report.py``.
+
+**Always-on production telemetry** (cheap enough to leave on; the
+benches gate the measured sampled-mode overhead <= 5%):
+
+* **Latency percentiles** - ``BucketHistogram`` (fixed log-scale
+  buckets, constant memory, exact quantile bounds) records per-query
+  end-to-end latency and queue time at every admission seam:
+  ``serving.{flat,trie,fused}.query_seconds``,
+  ``serving.*.batch_seconds``, ``cluster.router.{e2e_seconds,
+  queue_wait_seconds, flush_seconds, route_seconds}``,
+  ``streaming.{bank,sharded}.{observe,refresh}_seconds``,
+  ``mining.*.wave_seconds``; plus the ``cluster.router.{queue_age,
+  oldest_ticket_age}`` aging gauges.  Snapshots expose
+  ``<name>.p50/.p95/.p99``.
+* **Sampled tracing** - ``trace.enable_sampling(rate)`` keeps every
+  ``1/rate``-th root span *tree* (deterministic systematic sampler -
+  no RNG, so results stay bit-reproducible) plus every tail root that
+  breaches ``latency_threshold`` or was ``trace.mark()``-ed anomalous
+  (shed, inexact, overflow-escalated).  Unlike full ``enable()``,
+  sampled mode never fences - device spans record launch only, so the
+  async pipeline keeps its overlap.  Keeps count under
+  ``obs.{sampled_spans, sampled_traces, tail_traces}``.
+* **Flight recorder** - ``FlightRecorder`` rings the last N kept
+  traces with per-entry metric deltas; dumped as JSONL on demand, on
+  an anomalous entry, or by the watchdog on an SLO breach.
+* **SLO watchdog** - declarative rules (``scripts/slo_rules.json``:
+  quantile / rate / gauge / counter bounds) evaluated by
+  ``SloWatchdog`` riding ``ClusterRouter._note_depth`` (attach via
+  ``ServingCluster.attach_watchdog``); breaches increment
+  ``cluster.router.slo_breaches`` and trigger a flight dump.  The
+  same rules file drives the ``scripts/trace_report.py --slo`` CI
+  gate against BENCH metrics blocks.
+* **Export** - ``prometheus_text`` / ``validate_exposition`` (strict
+  0.0.4 text exposition) and ``MetricsExporter`` (periodic JSONL
+  snapshots on an injectable clock).
 """
 from .bank import (  # noqa: F401
     BankCapacityError,

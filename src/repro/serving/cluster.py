@@ -69,6 +69,7 @@ results and the frequent map must be bit-equal to the single-host
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
@@ -229,6 +230,12 @@ class ServingCluster:
         """Deadline pump between sparse submits."""
         self.router.poll()
 
+    def attach_watchdog(self, watchdog) -> None:
+        """Wire an ``obs.slo.SloWatchdog`` into the admission pipeline
+        (delegates to ``ClusterRouter.attach_watchdog``): every
+        submit/poll/collect gives it a rate-limited rules check."""
+        self.router.attach_watchdog(watchdog)
+
     def collect(self, ticket=None):
         """Fence + finalize one ticket (or all outstanding ones)."""
         return self.router.collect(ticket)
@@ -358,6 +365,11 @@ class ShardedStreamingBank:
             "frontier_scans", "frontier_scans_skipped",
             "frontier_retained",
         ])
+        # always-on latency percentiles (mirror StreamingBank's)
+        self._h_observe = self.metrics.bucket_histogram(
+            "streaming.sharded.observe_seconds")
+        self._h_refresh = self.metrics.bucket_histogram(
+            "streaming.sharded.refresh_seconds")
 
     # ------------------------------------------------------------ wiring
     def _make_cluster(self) -> ServingCluster:
@@ -449,6 +461,13 @@ class ShardedStreamingBank:
         batch = list(batch)
         if not batch:
             return
+        t0 = time.perf_counter()
+        try:
+            self._observe_inner(batch)
+        finally:
+            self._h_observe.observe(time.perf_counter() - t0)
+
+    def _observe_inner(self, batch: List[TRSeq]) -> None:
         with trace.root_or_span("streaming.observe", n=len(batch)):
             rows = self.cluster.exact_rows(batch)
             evicted = 0
@@ -501,6 +520,13 @@ class ShardedStreamingBank:
         the exact global view, extend/recompile the bank, cut
         tombstones, and broadcast the new masks/placement to every
         host.  Returns the exact frequent map (== batch re-mine)."""
+        t0 = time.perf_counter()
+        try:
+            return self._refresh_timed(full)
+        finally:
+            self._h_refresh.observe(time.perf_counter() - t0)
+
+    def _refresh_timed(self, full: bool) -> Dict[Pattern, int]:
         with trace.root_or_span("streaming.refresh", full=full):
             with trace.span("cluster.allreduce"):
                 self.support = self._allreduce_support()

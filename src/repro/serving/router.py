@@ -146,6 +146,7 @@ class _InFlightBatch:
     entries: List[_PendingJoin]
     handles: list                          # [(host, InFlightRows)]
     done: bool = False
+    launched: float = 0.0                  # flush clock reading
 
 
 class DrainTicket:
@@ -154,8 +155,9 @@ class DrainTicket:
     fingerprint resolved (cached row / pending join / shed).  Redeem
     with ``ClusterRouter.collect``."""
 
-    def __init__(self, k: int):
+    def __init__(self, k: int, created: float = 0.0):
         self.k = k
+        self.created = created        # submit clock reading (e2e base)
         self.fps: Dict[int, List[str]] = {}
         self.arrival_hosts: Dict[str, set] = {}
         self.rows: Dict[str, object] = {}   # row | _PendingJoin | None
@@ -222,6 +224,32 @@ class ClusterRouter:
         ])
         self._depth_gauge = self.metrics.gauge(
             f"{metrics_ns}.queue_depth")
+        # always-on latency percentiles over the admission pipeline
+        # (log-bucket histograms; observed against the injectable
+        # ``self.clock`` so the pipeline tests can fake time):
+        #   e2e_seconds        submit -> collected, per ticket
+        #   queue_wait_seconds admit -> flush launch, per miss
+        #   flush_seconds      flush launch -> batch fenced
+        #   route_seconds      one synchronous route() drain
+        self._h_e2e = self.metrics.bucket_histogram(
+            f"{metrics_ns}.e2e_seconds")
+        self._h_queue_wait = self.metrics.bucket_histogram(
+            f"{metrics_ns}.queue_wait_seconds")
+        self._h_flush = self.metrics.bucket_histogram(
+            f"{metrics_ns}.flush_seconds")
+        self._h_route = self.metrics.bucket_histogram(
+            f"{metrics_ns}.route_seconds")
+        # aging gauges the SLO watchdog reads: seconds the current
+        # head-of-queue / oldest uncollected ticket have been waiting
+        self._age_gauge = self.metrics.gauge(
+            f"{metrics_ns}.queue_age")
+        self._ticket_age_gauge = self.metrics.gauge(
+            f"{metrics_ns}.oldest_ticket_age")
+        # pre-registered so healthy snapshots carry an explicit 0
+        self.metrics.counter(f"{metrics_ns}.slo_breaches")
+        # optional SloWatchdog (obs.slo), driven from _note_depth -
+        # every submit/poll/collect gives it a rate-limited check
+        self.watchdog = None
 
     # ------------------------------------------------------------- cache
     def owner(self, fp: str) -> int:
@@ -321,6 +349,17 @@ class ClusterRouter:
         Returns per-host results in request order, bit-equal to a
         single-host ``PatternServer.query`` over the unsharded bank."""
         k = self.topk if k is None else k
+        t_r0 = self.clock()
+        try:
+            return self._route_inner(requests, k)
+        finally:
+            self._h_route.observe(self.clock() - t_r0)
+
+    def _route_inner(
+        self,
+        requests: Mapping[int, Sequence[TRSeq]],
+        k: int,
+    ) -> Dict[int, List[QueryResult]]:
         with trace.root_or_span(
                 "cluster.route",
                 n=sum(len(s) for s in requests.values())):
@@ -417,8 +456,21 @@ class ClusterRouter:
             len(b.entries) for b in self._batches if not b.done
         )
 
+    def attach_watchdog(self, watchdog) -> None:
+        """Wire an ``obs.slo.SloWatchdog``: ``_note_depth`` (already on
+        every submit/poll/collect) will give it rate-limited checks."""
+        self.watchdog = watchdog
+
     def _note_depth(self) -> None:
         self._depth_gauge.set(self.depth())
+        now = self.clock()
+        self._age_gauge.set(
+            now - self._queue[0].enqueued if self._queue else 0.0)
+        self._ticket_age_gauge.set(
+            now - min(t.created for t in self._tickets)
+            if self._tickets else 0.0)
+        if self.watchdog is not None:
+            self.watchdog.maybe_check()
 
     def submit(
         self,
@@ -432,7 +484,7 @@ class ClusterRouter:
         for ``collect``; the queued joins run on device while later
         drains keep submitting."""
         k = self.topk if k is None else k
-        ticket = DrainTicket(k)
+        ticket = DrainTicket(k, created=self.clock())
         with trace.root_or_span(
                 "cluster.submit",
                 n=sum(len(s) for s in requests.values())):
@@ -479,6 +531,7 @@ class ClusterRouter:
                             ticket.rows[fp] = None
                             ticket.cached[fp] = False
                             self.stats["shed_prescreen"] += 1
+                            trace.mark("shed")
                             continue
                         pend = _PendingJoin(fp, s, self.clock())
                         self._queue.append(pend)
@@ -519,6 +572,9 @@ class ClusterRouter:
         batch = self._queue[:cap]
         del self._queue[:cap]
         seqs = [e.seq for e in batch]
+        t_launch = self.clock()
+        for e in batch:
+            self._h_queue_wait.observe(t_launch - e.enqueued)
         with trace.span("cluster.flush", reason=reason, n=len(seqs)):
             handles = []
             if live:
@@ -532,7 +588,8 @@ class ClusterRouter:
                 ]
             self.stats["shard_batches"] += len(handles)
         self._batches.append(
-            _InFlightBatch(entries=batch, handles=handles))
+            _InFlightBatch(entries=batch, handles=handles,
+                           launched=t_launch))
         self.stats["flush_" + reason] += 1
 
     def _fence_batch(self, batch: _InFlightBatch) -> None:
@@ -550,6 +607,7 @@ class ClusterRouter:
                     own = self.hosts[self.owner(e.fp)]
                     _cache_put(own.l2, own.l2_size, e.fp, rows[i])
                     self._pending.pop(e.fp, None)
+        self._h_flush.observe(self.clock() - batch.launched)
         batch.done = True
 
     def _approx_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
@@ -594,6 +652,7 @@ class ClusterRouter:
                         else v
                     exact[fp] = True
                 if ticket.shed:
+                    trace.mark("shed")
                     shed_fps = list(ticket.shed)
                     approx = self._approx_rows(
                         [ticket.shed[fp] for fp in shed_fps])
@@ -621,5 +680,7 @@ class ClusterRouter:
                     ]
                     for hid in ticket.fps
                 }
+        self._h_e2e.observe(self.clock() - ticket.created)
         self._tickets.remove(ticket)
+        self._note_depth()
         return ticket.results

@@ -131,15 +131,21 @@ class QueryResult:
 
 def _fence(name: str, t0: float, out, **args) -> None:
     """Tracing-only launch/execution split for one async device call:
-    when tracing is on, fence the dispatch and record both halves.
-    When off this returns before reading any clock - the disabled path
-    never blocks, so results, dispatch counts, and async overlap are
-    untouched."""
-    if trace.enabled():
-        t1 = time.perf_counter()
+    under *full* tracing, fence the dispatch and record both halves.
+    Under sampled tracing (``trace.fencing()`` is False) record the
+    dispatch half only - a fence here would serialize the async
+    pipeline the sampler exists to observe, so sampled traces carry
+    launch time and the device half is attributed at the existing
+    finalize fences.  When off this returns before reading any clock -
+    the disabled path never blocks, so results, dispatch counts, and
+    async overlap are untouched."""
+    if not trace.enabled():
+        return
+    t1 = time.perf_counter()
+    trace.add_complete(name, "dispatch", t0, t1 - t0, **args)
+    if trace.fencing():
         jax.block_until_ready(out)
         t2 = time.perf_counter()
-        trace.add_complete(name, "dispatch", t0, t1 - t0, **args)
         trace.add_complete(name + ".device", "device", t1, t2 - t1)
 
 
@@ -224,6 +230,9 @@ class InFlightRows:
     contained: np.ndarray
     ovf: np.ndarray
     pending: list
+    # launch timestamp (perf_counter): finalize_rows observes
+    # launch-to-fence latency into the batch_seconds histogram
+    t_launch: float = 0.0
 
 
 class PatternServer:
@@ -302,6 +311,13 @@ class PatternServer:
             "joined_steps",
             "escalated_cells", "host_fallback_cells",
         ])
+        # always-on latency percentiles (constant-memory log buckets):
+        # query_seconds is the public-entry wall per exact query call,
+        # batch_seconds the launch-to-fence latency per device batch
+        self._h_query = self.metrics.bucket_histogram(
+            f"{metrics_ns}.query_seconds")
+        self._h_batch = self.metrics.bucket_histogram(
+            f"{metrics_ns}.batch_seconds")
 
     # ------------------------------------------------------ layout hooks
     # Registered as the built-in layouts' strategy hooks at the bottom
@@ -459,8 +475,11 @@ class PatternServer:
     ) -> InFlightRows:
         assert len(seqs) <= self.max_batch
         layout = self.bank_layout
+        t0 = time.perf_counter()
         with trace.span("serving.batch", n=len(seqs), layout=layout):
-            return self.layout.launch(self, seqs, shared)
+            flight = self.layout.launch(self, seqs, shared)
+        flight.t_launch = t0
+        return flight
 
     def finalize_rows(self, flight: InFlightRows) -> np.ndarray:
         """Fence one in-flight batch: read the join outputs back,
@@ -475,6 +494,9 @@ class PatternServer:
                 flight.count, flight.tmax, flight.contained,
                 flight.ovf, flight.seqs,
             )
+            if flight.t_launch:
+                self._h_batch.observe(
+                    time.perf_counter() - flight.t_launch)
             return flight.contained
 
     def _finalize_flat(self, flight: InFlightRows) -> None:
@@ -649,9 +671,13 @@ class PatternServer:
             contained[:, ~self._row_mask] = False
             ovf[:, ~self._row_mask] = False
         bank = self.bank
-        if (ovf & ~contained).any() and self.emax_retry > self.emax:
-            self.layout.escalate(self, tokens, order, start, count,
-                                 tmax, contained, ovf)
+        if (ovf & ~contained).any():
+            # an always-keep signal for the tail sampler: escalated
+            # queries are the interesting ones
+            trace.mark("overflow_escalated")
+            if self.emax_retry > self.emax:
+                self.layout.escalate(self, tokens, order, start, count,
+                                     tmax, contained, ovf)
         with trace.span("serving.oracle"):
             for b, p in zip(*np.nonzero(ovf & ~contained)):
                 contained[b, p] = contains(bank.patterns[p], seqs[b])
@@ -1034,6 +1060,7 @@ class PatternServer:
             if req.exact:
                 return JoinResult(self._query_exact(seqs, k))
             self.stats["queries"] += len(seqs)
+            trace.mark("inexact")
             approx = self.approx_rows(seqs)
             return JoinResult([
                 QueryResult(
@@ -1054,6 +1081,15 @@ class PatternServer:
         self, seqs: Sequence[TRSeq], k: int
     ) -> List[QueryResult]:
         self.stats["queries"] += len(seqs)
+        t_q0 = time.perf_counter()
+        try:
+            return self._query_exact_inner(seqs, k)
+        finally:
+            self._h_query.observe(time.perf_counter() - t_q0)
+
+    def _query_exact_inner(
+        self, seqs: Sequence[TRSeq], k: int
+    ) -> List[QueryResult]:
         with trace.root_or_span("serving.query", n=len(seqs)):
             rows: Dict[str, np.ndarray] = {}
             cached: Dict[str, bool] = {}

@@ -73,6 +73,7 @@ Two production follow-ons ride on top:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -156,6 +157,12 @@ class StreamingBank:
             "frontier_retained",
             "dirty_subtrees", "clean_subtrees",
         ])
+        # always-on latency percentiles: wall per observe() batch and
+        # per refresh() reconcile (log-bucket histograms)
+        self._h_observe = self.metrics.bucket_histogram(
+            "streaming.bank.observe_seconds")
+        self._h_refresh = self.metrics.bucket_histogram(
+            "streaming.bank.refresh_seconds")
         self.server = self._make_server()
 
     # ------------------------------------------------------------ wiring
@@ -234,6 +241,13 @@ class StreamingBank:
         batch = list(batch)
         if not batch:
             return ObserveResult(0, 0, 0, False)
+        t0 = time.perf_counter()
+        try:
+            return self._observe_inner(batch)
+        finally:
+            self._h_observe.observe(time.perf_counter() - t0)
+
+    def _observe_inner(self, batch: List[TRSeq]) -> ObserveResult:
         with trace.root_or_span("streaming.observe", n=len(batch)):
             rows = self.server.exact_rows(batch)
             evicted = 0
@@ -339,8 +353,12 @@ class StreamingBank:
         recompiles everything (the escape hatch, also compacts
         tombstones away)."""
         self._batches_since_refresh = 0
-        with trace.root_or_span("streaming.refresh", full=full):
-            return self._refresh_inner(full)
+        t0 = time.perf_counter()
+        try:
+            with trace.root_or_span("streaming.refresh", full=full):
+                return self._refresh_inner(full)
+        finally:
+            self._h_refresh.observe(time.perf_counter() - t0)
 
     def _refresh_inner(self, full: bool) -> Dict[Pattern, int]:
         seqs = self.window_seqs

@@ -112,7 +112,10 @@ def test_snapshot_delta_reset():
 def test_stats_view_is_a_mutable_mapping():
     """The facade the migrated call sites rely on: iteration shows
     declared keys, += and = write through to registry counters, and
-    benchmark-style reset-by-assignment works."""
+    the counter monotonicity contract holds - increments pass through,
+    the legacy reset-by-assignment idiom still works but WARNS (route
+    resets through ``MetricsRegistry.reset``), and any other decrease
+    raises."""
     reg = MetricsRegistry()
     view = reg.view("srv", keys=["queries", "hits"])
     assert dict(view) == {"queries": 0, "hits": 0}
@@ -120,13 +123,75 @@ def test_stats_view_is_a_mutable_mapping():
     assert reg.counter("srv.queries").value == 3
     view["new_key"] = 2  # unknown keys register on assignment
     assert "new_key" in view and reg.counter("srv.new_key").value == 2
-    for k in view:  # the bench reset idiom
-        view[k] = 0
+    with pytest.warns(UserWarning, match="reset-by-assignment"):
+        view["queries"] = 0  # the old bench reset idiom: works, warns
+    assert view["queries"] == 0
+    with pytest.raises(ValueError, match="monotonicity"):
+        view["new_key"] = 1  # 2 -> 1 is neither inc nor reset
+    assert view["new_key"] == 2
+    reg.reset("srv")  # the sanctioned path: silent
     assert all(v == 0 for v in dict(view).values())
     with pytest.raises(KeyError):
         view["never_declared"]
     with pytest.raises(TypeError):
         del view["queries"]
+
+
+def test_counter_set_contract():
+    """``Counter.set`` is not assignment: non-zero raises (counters
+    are monotone), zero warns (deprecated reset path)."""
+    reg = MetricsRegistry()
+    c = reg.counter("m.x")
+    c.inc(5)
+    with pytest.raises(ValueError, match="monotonicity"):
+        c.set(3)
+    assert c.value == 5
+    with pytest.warns(UserWarning, match="reset-by-assignment"):
+        c.set(0)
+    assert c.value == 0
+
+
+# ================================================== bucket histogram
+def test_bucket_histogram_quantile_bounds():
+    """quantile(q) returns the upper edge of the bucket holding the
+    q-th observation: an exact bound - never below the true quantile,
+    within one log-bucket width above it."""
+    from repro.obs import BucketHistogram
+    reg = MetricsRegistry()
+    h = reg.bucket_histogram("m.lat")
+    assert h.quantile(0.5) == 0.0  # empty histogram
+    rng = np.random.default_rng(7)
+    vals = sorted(10.0 ** rng.uniform(-5, 1, size=500))
+    for v in vals:
+        h.observe(v)
+    assert h.count == 500 and h.sum == pytest.approx(sum(vals))
+    for q in (0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        true = vals[min(499, max(0, int(np.ceil(q * 500)) - 1))]
+        bound = h.quantile(q)
+        assert bound >= true * (1 - 1e-12)
+        # 8 buckets/decade: the bound is < one bucket width above
+        assert bound <= true * 10.0 ** (1 / 8) * (1 + 1e-9)
+    s = h.summary()
+    assert s["p50"] == h.quantile(0.5)
+    assert s["p99"] == h.quantile(0.99)
+    snap = reg.snapshot()
+    assert snap["m.lat.count"] == 500 and "m.lat.p95" in snap
+    # overflow bucket reports the tracked exact max
+    h.observe(1e6)
+    assert h.quantile(1.0) == 1e6
+    h.reset()
+    assert h.count == 0 and sum(h.counts) == 0
+    assert isinstance(h, type(reg.histogram("m.lat")))  # same object
+    assert type(h) is BucketHistogram
+
+
+def test_bucket_histogram_single_value():
+    from repro.obs import BucketHistogram
+    h = BucketHistogram("x")
+    h.observe(0.003)
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) >= 0.003
+        assert h.quantile(q) <= 0.003 * 10.0 ** (1 / 8)
 
 
 # ============================================================ tracer
@@ -405,3 +470,267 @@ def test_traced_cluster_query_coverage(tmp_path):
     assert att["n_traces"] >= 2  # one trace id per route drain
     names = {e["name"] for e in events}
     assert "cluster.route" in names and "cluster.cache" in names
+
+
+# ================================================== sampled tracing
+def _cluster_run(bank, queries, H=2):
+    """One fresh-cluster double drain; returns (rows, relevant stats)
+    - the observables sampling must never change."""
+    cl = ServingCluster(bank, H)
+    out = cl.query_multi(_spread(queries, H))
+    out2 = cl.query_multi(_spread(queries, H))
+    rows = [r.contained for h in sorted(out) for r in out[h]]
+    rows += [r.contained for h in sorted(out2) for r in out2[h]]
+    st = cl.router.stats
+    batches = sum(h.server.stats["device_batches"] for h in cl.hosts)
+    return (np.stack(rows),
+            st["l1_hits"] + st["l2_hits"], st["queries"],
+            st["shard_batches"], batches)
+
+
+def test_sampling_changes_no_results_or_dispatches():
+    """The always-on contract at every rate: head sampling at
+    0 / 0.3 / 1.0 and tail-only keep must leave query results, cache
+    counters and device-dispatch counts bit-identical to tracing
+    disabled (sampled roots never fence)."""
+    db = random_db(5, n_seq=10)
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(MINSUP, max_len=MAX_LEN))
+    if not bank.n_patterns:
+        pytest.skip("empty bank for this seed")
+    queries = random_db(6, n_seq=6)
+    _cluster_run(bank, queries)  # warm the jit buckets
+    trace.clear()
+    want = _cluster_run(bank, queries)
+    assert trace.tracer.events == []  # disabled recorded nothing
+
+    modes = [
+        ("head 0%", dict(rate=0.0)),
+        ("head 30%", dict(rate=0.3)),
+        ("head 100%", dict(rate=1.0)),
+        ("tail-only", dict(rate=0.0, latency_threshold=0.0)),
+    ]
+    for label, kw in modes:
+        reg = MetricsRegistry()
+        trace.clear()
+        trace.enable_sampling(metrics=reg, **kw)
+        got = _cluster_run(bank, queries)
+        trace.disable()
+        np.testing.assert_array_equal(got[0], want[0],
+                                      err_msg=f"[{label}] rows diverged")
+        assert got[1:] == want[1:], \
+            f"[{label}] counters diverged: {got[1:]} != {want[1:]}"
+        snap = reg.snapshot()
+        if kw["rate"] >= 1.0 or kw.get("latency_threshold") == 0.0:
+            assert snap.get("obs.sampled_spans", 0) > 0, \
+                f"[{label}] kept nothing"
+        if kw["rate"] == 0.0 and "latency_threshold" not in kw:
+            # head sampling kept nothing; only mark()-ed anomalies
+            # (e.g. overflow escalation on a toy bank) may remain
+            assert all(e.get("args", {}).get("anomaly")
+                       for e in trace.tracer.events), \
+                f"[{label}] rate-0 sampling kept a non-anomalous root"
+        # sampled mode must never flip the full-trace fence on
+        assert not trace.fencing()
+
+
+def test_sampled_root_records_children_tail_root_does_not():
+    reg = MetricsRegistry()
+    trace.enable_sampling(1.0, metrics=reg)
+    with trace.root_or_span("outer", n=2):
+        with trace.span("child", cat="host"):
+            pass
+    trace.disable()
+    names = [e["name"] for e in trace.tracer.events]
+    assert names == ["child", "outer"]  # children exit first
+    assert reg.counter("obs.sampled_spans").value == 2
+    assert reg.counter("obs.sampled_traces").value == 1
+
+    trace.clear()
+    reg2 = MetricsRegistry()
+    trace.enable_sampling(0.0, latency_threshold=0.0, metrics=reg2)
+    with trace.root_or_span("outer"):
+        with trace.span("child", cat="host"):
+            pass  # nested spans are no-ops on the unsampled path
+    trace.disable()
+    evs = trace.tracer.events
+    assert [e["name"] for e in evs] == ["outer"]
+    assert evs[0]["args"]["tail"] is True
+    assert reg2.counter("obs.tail_traces").value == 1
+
+
+def test_systematic_sampler_is_deterministic():
+    """rate=0.25 keeps exactly every 4th root - no RNG, so reruns are
+    bit-identical (the property the bench's bit-equality gate needs)."""
+    trace.enable_sampling(0.25)
+    kept = []
+    for i in range(12):
+        with trace.root_or_span(f"r{i}"):
+            pass
+        kept.append(len(trace.tracer.events))
+    trace.disable()
+    assert kept == [0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3]
+
+
+def test_mark_keeps_anomalous_roots():
+    """``trace.mark`` escalates the active root to always-keep: the
+    shed / inexact / overflow paths preserve their traces even when
+    head sampling would have dropped them."""
+    reg = MetricsRegistry()
+    trace.enable_sampling(0.0, metrics=reg)
+    with trace.root_or_span("bad"):
+        trace.mark("shed")
+    with trace.root_or_span("fine"):
+        pass
+    trace.disable()
+    evs = trace.tracer.events
+    assert [e["name"] for e in evs] == ["bad"]
+    assert evs[0]["args"]["anomaly"] == "shed"
+    assert reg.counter("obs.tail_traces").value == 1
+    trace.mark("nobody-listening")  # no active root: a silent no-op
+
+
+# ==================================================== flight recorder
+def test_flight_recorder_ring_and_dump(tmp_path):
+    from repro.obs import FlightRecorder
+    reg = MetricsRegistry()
+    now = [100.0]
+    fr = FlightRecorder(capacity=3, metrics=reg, metrics_prefix="m",
+                        clock=lambda: now[0])
+    for i in range(5):
+        reg.counter("m.q").inc(10)
+        now[0] += 1.0
+        fr.record(f"span{i}", 0.25,
+                  [{"name": f"span{i}", "cat": "wall",
+                    "ts": 0.0, "dur": 250.0, "trace": i}],
+                  kind="sampled", trace=i)
+    path = str(tmp_path / "flight.jsonl")
+    n = fr.dump(path, reason="test")
+    assert n == 3  # ring capacity: the oldest two were evicted
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f]
+    header, entries = lines[0], lines[1:]
+    assert header["flight_recorder"] and header["reason"] == "test"
+    assert header["total_recorded"] == 5 and header["dropped"] == 2
+    assert [e["name"] for e in entries] == ["span2", "span3", "span4"]
+    assert all(e["metric_delta"] == {"m.q": 10} for e in entries)
+    assert [e["t"] for e in entries] == [103.0, 104.0, 105.0]
+    # dump is read-only: a second dump is byte-identical
+    path2 = str(tmp_path / "flight2.jsonl")
+    fr.dump(path2, reason="test")
+    with open(path) as a, open(path2) as b:
+        assert a.read() == b.read()
+
+
+def test_flight_recorder_autodumps_on_anomaly(tmp_path):
+    from repro.obs import FlightRecorder
+    path = str(tmp_path / "auto.jsonl")
+    fr = FlightRecorder(capacity=4, clock=lambda: 1.0,
+                        autodump_path=path)
+    fr.record("ok", 0.1, [], kind="sampled", trace=1)
+    assert not os.path.exists(path)
+    fr.record("bad", 0.1, [], kind="tail", trace=2, anomaly="shed")
+    assert os.path.exists(path)
+    with open(path) as f:
+        header = json.loads(f.readline())
+    assert header["reason"] == "anomaly:shed"
+
+
+# ================================================== exporter / prom
+def test_prometheus_exposition_roundtrip():
+    from repro.obs import prometheus_text, validate_exposition
+    reg = MetricsRegistry()
+    reg.counter("cluster.router.queries").inc(42)
+    reg.gauge("cluster.router.queue_depth").set(3)
+    reg.histogram("mining.wavefront.wave_patterns").observe(5.0)
+    h = reg.bucket_histogram("cluster.router.e2e_seconds")
+    for v in (0.001, 0.01, 0.5):
+        h.observe(v)
+    text = prometheus_text(reg)
+    assert validate_exposition(text) == []
+    assert "cluster_router_queries_total 42" in text
+    assert 'le="+Inf"} 3' in text
+    # the validator is strict: truncating the +Inf bucket line fails
+    broken = "\n".join(ln for ln in text.splitlines()
+                       if '+Inf' not in ln) + "\n"
+    assert validate_exposition(broken)
+    # so does a counter sample with no TYPE declaration
+    assert validate_exposition("nameless_total 1\n")
+
+
+def test_metrics_exporter_ships_on_interval(tmp_path):
+    from repro.obs import MetricsExporter
+    reg = MetricsRegistry()
+    reg.counter("m.q").inc(7)
+    now = [50.0]
+    path = str(tmp_path / "snaps.jsonl")
+    exp = MetricsExporter(reg, path, interval=10.0,
+                          clock=lambda: now[0])
+    assert exp.maybe_ship()        # first call ships immediately
+    now[0] += 5.0
+    assert not exp.maybe_ship()    # interval not elapsed
+    now[0] += 5.0
+    reg.counter("m.q").inc(1)
+    assert exp.maybe_ship()
+    with open(path) as f:
+        snaps = [json.loads(ln) for ln in f]
+    assert [s["t"] for s in snaps] == [50.0, 60.0]
+    assert [s["metrics"]["m.q"] for s in snaps] == [7, 8]
+
+
+# ========================================================= slo rules
+def test_slo_evaluate_kinds():
+    from repro.obs import SloRule, evaluate
+    rules = [
+        SloRule("p99", "quantile", "r.e2e_seconds", 0.5, q=0.99),
+        SloRule("shed", "rate", "r.shed", 0.1, den="r.queries"),
+        SloRule("depth", "gauge", "r.depth", 4.0),
+        SloRule("errors", "counter", "r.errors", 0.0),
+    ]
+    healthy = {"r.e2e_seconds.p99": 0.2, "r.shed": 1, "r.queries": 100,
+               "r.depth": 2, "r.errors": 0}
+    assert evaluate(rules, healthy) == []
+    sick = {"r.e2e_seconds.p99": 0.9, "r.shed": 30, "r.queries": 100,
+            "r.depth": 9, "r.errors": 2}
+    assert {b.rule for b in evaluate(rules, sick)} == \
+        {"p99", "shed", "depth", "errors"}
+    # delta mode: counters/rates look at movement since prev
+    prev = dict(sick)
+    still = dict(sick, **{"r.e2e_seconds.p99": 0.2, "r.depth": 1})
+    assert {b.rule for b in evaluate(rules, still, prev=prev)} == set()
+    # an absent histogram / gauge yields no verdict, not a breach
+    assert evaluate(rules, {"r.queries": 5}) == []
+    with pytest.raises(ValueError):
+        SloRule("x", "bogus", "m", 1.0)
+    with pytest.raises(ValueError):
+        SloRule("x", "rate", "m", 1.0)  # rate without den
+
+
+def test_watchdog_fires_under_fake_clock(tmp_path):
+    """The alarm path, deterministically: a rule breaches -> the
+    breach counter moves and the flight recorder dumps with the rule
+    names in the reason; ``maybe_check`` honors ``min_interval`` on
+    the injected clock."""
+    from repro.obs import FlightRecorder, SloRule, SloWatchdog
+    reg = MetricsRegistry()
+    now = [0.0]
+    flight = FlightRecorder(capacity=4, clock=lambda: now[0])
+    flight.record("q", 0.1, [], kind="sampled", trace=1)
+    dump = str(tmp_path / "slo.jsonl")
+    wd = SloWatchdog(
+        reg, [SloRule("aging", "gauge", "r.queue_age", 1.0)],
+        clock=lambda: now[0], min_interval=5.0, flight=flight,
+        dump_path=dump, breach_counter="r.slo_breaches")
+    assert wd.maybe_check() == []  # first call checks immediately
+    now[0] += 1.0
+    reg.gauge("r.queue_age").set(99.0)
+    assert wd.maybe_check() is None  # rate-limited
+    assert reg.counter("r.slo_breaches").value == 0
+    now[0] += 5.0
+    breaches = wd.maybe_check()
+    assert [b.rule for b in breaches] == ["aging"]
+    assert reg.counter("r.slo_breaches").value == 1
+    with open(dump) as f:
+        header = json.loads(f.readline())
+    assert header["reason"] == "slo:aging"
+    assert wd.checks == 2
