@@ -1,0 +1,385 @@
+"""Fault-tolerance benchmark: availability and added tail latency
+under a standard seeded fault schedule, differentially gated against
+the single-host ``PatternServer``.
+
+Emits ``BENCH_faults.json``.  Everything runs on a **fake clock** (the
+injector's ``sleep`` advances it), so the whole artifact is
+deterministic: the fault schedule is a pure function of the injector
+seed and per-host call index (``serving.faults.FaultInjector`` - no
+RNG at query time), the drain timeline is a fixed sequence of virtual
+``ADVANCE`` steps, and the latency percentiles are *virtual seconds* -
+the injected delays, retry backoff and degraded-drain cost the fault
+ladder actually added, with no wall-clock noise in them.
+
+Four phases, one H=4 flat cluster each (same bank, so the jit shapes
+are shared):
+
+1. **Fault-free identity** - the same open-loop submit/poll/collect
+   drive on a pre-fault cluster vs one with the injector *installed
+   but idle* and the retry policy armed.  Results must be bit-identical
+   pairwise (``fault_free_divergences`` == 0): the fault ladder's fast
+   path really is the pre-fault path.
+2. **Standard fault schedule** - transient errors (5%), injected
+   delays (10%), and one host blacked out for half the drain timeline.
+   Every submitted query must get exactly one answer
+   (``lost_tickets`` == 0, ``availability`` >= 0.99): bit-equal to the
+   single-host server when flagged ``exact``, a sound superset when
+   degraded.  ``unflagged_inexact`` counts silent wrongness (exact-
+   flagged answers whose bits diverge) and ``divergences`` counts
+   unsound degradation (flagged answers that dropped a true
+   containment) - both hard-gated == 0 here AND by
+   ``scripts/check_bench.py`` on the committed artifact.
+3. **Replica failover** - the crashed host's shard has a registered
+   ``BankReplica``: its column block promotes to the replica's exact
+   rows, so every answer stays ``exact=True`` and bit-equal
+   (``failover_divergences`` == 0) while the breaker is open.
+4. **Host recovery** - past the blackout + breaker cooldown, the next
+   drain's half-open probe succeeds: the host rejoins with wiped
+   caches (``cluster.faults.recoveries`` > 0) and serving is exact
+   bit-equal again (``recovery_divergences`` == 0).
+
+The headline pair is ``p99_e2e_faulty`` vs ``p99_e2e_fault_free``
+(the ``cluster.router.e2e_seconds`` histogram of phases 2 and 1 on the
+identical drain timeline): ``added_p99`` is the virtual tail latency
+the fault schedule cost after retries/failover absorbed it.  The
+``metrics`` block sums the additive registry deltas of all four
+phases; ``check_bench.py`` additionally requires
+``cluster.faults.injected`` > 0 and ``cluster.faults.breaker_open``
+> 0 there (a schedule that stopped injecting proves nothing) and the
+``cluster.faults.retry_seconds`` histogram to have observed.
+
+Every gate raises *before* the artifact is written - a committed
+artifact with a nonzero divergence count means it was hand-edited.
+``--smoke`` is the CI tier-7 gate: a tiny config, same H=4 schedule
+shape, written to ``BENCH_faults_smoke.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+try:
+    from .bench_cluster import _chunks, _merge_metrics, _NONADDITIVE, \
+        _spread, zipf_mix
+    from .bench_streaming import atomic_write_json, machine_id
+except ImportError:  # pragma: no cover - run as a script
+    from bench_cluster import _chunks, _merge_metrics, _NONADDITIVE, \
+        _spread, zipf_mix
+    from bench_streaming import atomic_write_json, machine_id
+
+from repro.data.synthetic import Table3Params, generate_table3_db
+from repro.mining.driver import AcceleratedMiner
+from repro.serving.bank import compile_bank
+from repro.serving.cluster import BankReplica, ServingCluster
+from repro.serving.faults import FaultInjector, RetryPolicy
+from repro.serving.server import PatternServer
+
+HERE = os.path.dirname(__file__)
+OUT = os.path.join(HERE, "..", "BENCH_faults.json")
+OUT_SMOKE = os.path.join(HERE, "..", "BENCH_faults_smoke.json")
+
+N_HOSTS = 4          # the acceptance gate's H (one host faulted)
+CRASH_HOST = 1
+ADVANCE = 0.5        # virtual seconds between drains
+ERROR_RATE = 0.05    # transient-error rate of the standard schedule
+DELAY_RATE = 0.10    # injected-delay rate
+DELAY = 0.02         # virtual seconds per injected delay
+COLLECT_TIMEOUT = 2.0
+POLICY = RetryPolicy(call_timeout=5.0, retries=2, backoff_base=0.001,
+                     backoff_cap=0.01, breaker_threshold=3,
+                     breaker_cooldown=1.0)
+
+
+class FaultGateError(AssertionError):
+    """A fault-tolerance gate failed - raised before the artifact is
+    written."""
+
+
+def _mk_cluster(bank, clock, flush_batch, injector=None, policy=None):
+    return ServingCluster(
+        bank, N_HOSTS, bank_layout="flat", clock=clock,
+        injector=injector, fault_policy=policy,
+        max_wait=ADVANCE / 2, flush_batch=flush_batch)
+
+
+def _mk_injector(now, **kw):
+    """An injector whose delays advance the fake clock (so injected
+    latency lands in the virtual e2e histograms)."""
+    return FaultInjector(
+        0, clock=lambda: now[0],
+        sleep=lambda s: now.__setitem__(0, now[0] + s), **kw)
+
+
+def _drains(pool, n_queries, n_drains, seed0):
+    """One open-loop Zipfian arrival stream per host (the
+    bench_cluster offered-load model), chunked into per-drain request
+    maps."""
+    streams = [zipf_mix(pool, n_queries, seed=seed0 + 17 * h)
+               for h in range(N_HOSTS)]
+    chunked = [_chunks(s, n_drains) for s in streams]
+    return [{h: chunked[h][d] for h in range(N_HOSTS)}
+            for d in range(n_drains)]
+
+
+def _drive(cl, reqs_by_drain, now, timeout=None):
+    """The open-loop drive: admit every drain on the virtual timeline
+    (one ``ADVANCE`` step + deadline pump per drain), then collect
+    each ticket - with ``timeout`` the stragglers degrade instead of
+    blocking."""
+    tickets = []
+    for reqs in reqs_by_drain:
+        tickets.append(cl.submit(reqs))
+        now[0] += ADVANCE
+        cl.poll()
+    return [cl.collect(t, timeout=timeout) for t in tickets]
+
+
+def _audit(got_by_drain, reqs_by_drain, want_by_fp):
+    """The one-answer contract, counted: every answer is either exact
+    and bit-equal to the single-host reference, or flagged inexact and
+    a sound superset."""
+    submitted = sum(len(s) for reqs in reqs_by_drain
+                    for s in reqs.values())
+    n = dict(submitted=submitted, answered=0, exact_answers=0,
+             degraded_answers=0, unflagged_inexact=0, divergences=0)
+    for res in got_by_drain:
+        for rs in res.values():
+            for r in rs:
+                n["answered"] += 1
+                w = want_by_fp[r.fingerprint]
+                if r.exact:
+                    n["exact_answers"] += 1
+                    if not (np.array_equal(r.contained, w.contained)
+                            and r.topk == w.topk):
+                        n["unflagged_inexact"] += 1
+                else:
+                    n["degraded_answers"] += 1
+                    if (w.contained & ~r.contained).any():
+                        n["divergences"] += 1
+    n["lost_tickets"] = submitted - n["answered"]
+    return n
+
+
+def _exact_mismatches(got_by_drain, want_by_fp):
+    """Answers that are not (exact AND bit-equal) - the strict count
+    for the phases where degradation itself is a failure."""
+    bad = 0
+    for res in got_by_drain:
+        for rs in res.values():
+            for r in rs:
+                w = want_by_fp[r.fingerprint]
+                if not (r.exact
+                        and np.array_equal(r.contained, w.contained)
+                        and r.topk == w.topk):
+                    bad += 1
+    return bad
+
+
+def bench_fault_free(bank, reqs, metrics_sum, flush_batch):
+    """Phase 1: idle injector + armed policy vs the pre-fault cluster,
+    identical virtual timeline - must be bit-identical pairwise."""
+    now_a, now_b = [0.0], [0.0]
+    ref = _mk_cluster(bank, lambda: now_a[0], flush_batch)
+    inj = _mk_injector(now_b)          # all rates zero, no blackouts
+    cl = _mk_cluster(bank, lambda: now_b[0], flush_batch,
+                     injector=inj, policy=POLICY)
+    got_ref = _drive(ref, reqs, now_a)
+    got = _drive(cl, reqs, now_b)
+    div = 0
+    for ra, rb in zip(got_ref, got):
+        for h in ra:
+            for x, y in zip(ra[h], rb[h]):
+                if not (np.array_equal(x.contained, y.contained)
+                        and x.topk == y.topk and x.exact and y.exact):
+                    div += 1
+    if not inj.calls:
+        raise FaultGateError(
+            "idle injector never reached the host call boundary - the "
+            "fault seam is no longer on the fast path")
+    snap = cl.metrics.snapshot()
+    if snap.get("cluster.faults.injected", 0) \
+            or snap.get("cluster.faults.retries", 0):
+        raise FaultGateError(
+            "the idle injector injected faults on the fault-free run")
+    _merge_metrics(metrics_sum, snap)
+    _merge_metrics(metrics_sum, ref.metrics.snapshot())
+    return div, snap.get("cluster.router.e2e_seconds.p99", 0.0)
+
+
+def bench_fault_schedule(bank, pool, want_by_fp, n_queries, n_drains,
+                         flush_batch, metrics_sum):
+    """Phases 2 + 4: the standard schedule (errors + delays + one host
+    blacked out for half the timeline), then the post-blackout
+    recovery drain on the same cluster."""
+    now = [0.0]
+    horizon = n_drains * ADVANCE
+    blackout = (CRASH_HOST, 0.3 * horizon, 0.8 * horizon)
+    inj = _mk_injector(now, error_rate=ERROR_RATE,
+                       delay_rate=DELAY_RATE, delay=DELAY,
+                       blackouts=[blackout])
+    cl = _mk_cluster(bank, lambda: now[0], flush_batch,
+                     injector=inj, policy=POLICY)
+    reqs = _drains(pool, n_queries, n_drains, seed0=2)
+    got = _drive(cl, reqs, now, timeout=COLLECT_TIMEOUT)
+    counts = _audit(got, reqs, want_by_fp)
+
+    # phase 4: past the blackout and the breaker cooldown, one more
+    # drain - the half-open probe rejoins the host, exact serving
+    now[0] = horizon + POLICY.breaker_cooldown + 1.0
+    rec_reqs = _drains(pool, max(4, n_queries // 4), 2, seed0=31)
+    rec_got = _drive(cl, rec_reqs, now)
+    recovery_divergences = _exact_mismatches(rec_got, want_by_fp)
+
+    snap = cl.metrics.snapshot()
+    _merge_metrics(metrics_sum, snap)
+    counts.update(
+        recovery_divergences=recovery_divergences,
+        availability=(counts["answered"] / counts["submitted"]
+                      if counts["submitted"] else 0.0),
+        p99_e2e_faulty=snap.get("cluster.router.e2e_seconds.p99", 0.0),
+    )
+    for key, why in (
+        ("cluster.faults.injected",
+         "the schedule injected zero faults"),
+        ("cluster.faults.retries",
+         "no transient error was ever retried"),
+        ("cluster.faults.breaker_open",
+         "the blackout never opened the circuit breaker"),
+        ("cluster.faults.recoveries",
+         "the crashed host never rejoined"),
+        ("cluster.faults.retry_seconds.count",
+         "the retry-latency histogram stopped observing"),
+    ):
+        if snap.get(key, 0) <= 0:
+            raise FaultGateError(f"{key} = {snap.get(key, 0)}: {why} "
+                                 "- the standard schedule is vacuous")
+    if counts["degraded_answers"] <= 0:
+        raise FaultGateError(
+            "the blackout produced zero degraded answers - the "
+            "soundness gates never ran")
+    return counts, snap
+
+
+def bench_failover(bank, pool, want_by_fp, n_queries, flush_batch,
+                   metrics_sum):
+    """Phase 3: the crashed shard has a registered full-bank replica -
+    every answer must stay exact and bit-equal while its breaker is
+    open."""
+    now = [0.0]
+    inj = _mk_injector(now, blackouts=[(CRASH_HOST, 0.0, 10 ** 9)])
+    cl = _mk_cluster(bank, lambda: now[0], flush_batch,
+                     injector=inj, policy=POLICY)
+    cl.attach_failover_replica(
+        CRASH_HOST, BankReplica(bank, bank_layout="flat"))
+    sample = zipf_mix(pool, n_queries, seed=7)
+    got = [cl.query_multi(_spread(sample, N_HOSTS))]
+    div = _exact_mismatches(got, want_by_fp)
+    snap = cl.metrics.snapshot()
+    if snap.get("cluster.faults.failovers", 0) <= 0:
+        raise FaultGateError(
+            "zero failovers with a permanently crashed host and a "
+            "registered replica - the promotion ladder never ran")
+    if snap.get("cluster.faults.degraded_answers", 0):
+        raise FaultGateError(
+            "replica failover still produced degraded answers - the "
+            "ladder fell through to the prescreen")
+    _merge_metrics(metrics_sum, snap)
+    return div
+
+
+def main(csv=print, smoke: bool = False):
+    if smoke:
+        db_size, pool_size, max_len = 40, 16, 3
+        n_queries, n_drains, flush_batch = 24, 4, 4
+        out_path = OUT_SMOKE
+    else:
+        db_size, pool_size, max_len = 120, 48, 4
+        n_queries, n_drains, flush_batch = 96, 8, 8
+        out_path = OUT
+    params = Table3Params(db_size=db_size, v_avg=5, n_interstates=3)
+    db = generate_table3_db(params, seed=0)
+    sigma = max(2, db_size // 15)
+    qparams = Table3Params(db_size=pool_size, v_avg=5, n_interstates=3)
+    pool = generate_table3_db(qparams, seed=1)
+    bank = compile_bank(
+        AcceleratedMiner(db).mine_rs(sigma, max_len=max_len))
+
+    # the single-host truth, fingerprint-keyed (one result per
+    # distinct pool sequence)
+    srv = PatternServer(bank, bank_layout="flat")
+    want_by_fp = {w.fingerprint: w for w in srv.query(pool)}
+
+    metrics_sum = {}
+    ff_reqs = _drains(pool, n_queries, n_drains, seed0=2)
+    fault_free_divergences, p99_clean = bench_fault_free(
+        bank, ff_reqs, metrics_sum, flush_batch)
+    counts, snap = bench_fault_schedule(
+        bank, pool, want_by_fp, n_queries, n_drains, flush_batch,
+        metrics_sum)
+    failover_divergences = bench_failover(
+        bank, pool, want_by_fp, n_queries, flush_batch, metrics_sum)
+
+    # absolute virtual-latency percentiles from the faulty cluster
+    # (the one place they are meaningful in the summed metrics block)
+    metrics_sum.update(
+        {k: v for k, v in snap.items()
+         if k.rsplit(".", 1)[-1] in _NONADDITIVE})
+
+    payload = {
+        "machine": machine_id(),
+        "bank_patterns": bank.n_patterns,
+        "n_hosts": N_HOSTS,
+        "n_drains": n_drains,
+        "flush_batch": flush_batch,
+        "error_rate": ERROR_RATE,
+        "delay_rate": DELAY_RATE,
+        **counts,
+        "fault_free_divergences": fault_free_divergences,
+        "failover_divergences": failover_divergences,
+        "p99_e2e_fault_free": p99_clean,
+        "added_p99": max(0.0, counts["p99_e2e_faulty"] - p99_clean),
+        "metrics": metrics_sum,
+    }
+    # every contract gate raises BEFORE the artifact is written
+    for key in ("lost_tickets", "unflagged_inexact", "divergences",
+                "fault_free_divergences", "failover_divergences",
+                "recovery_divergences"):
+        if payload[key] != 0:
+            raise FaultGateError(
+                f"{key} = {payload[key]} - the fault-tolerance "
+                "contract is broken (see module docstring)")
+    if payload["availability"] < 0.99:
+        raise FaultGateError(
+            f"availability {payload['availability']:.4f} < 0.99 with "
+            f"one of {N_HOSTS} hosts faulted")
+    atomic_write_json(out_path, payload)
+    csv(f"faults/availability,{payload['availability']:.4f},"
+        f"answered={payload['answered']}/{payload['submitted']},"
+        f"degraded={payload['degraded_answers']}")
+    csv(f"faults/ladder,{snap.get('cluster.faults.injected', 0):.0f},"
+        f"retries={snap.get('cluster.faults.retries', 0):.0f},"
+        f"breaker_open={snap.get('cluster.faults.breaker_open', 0):.0f},"
+        f"failovers_phase3=1,"
+        f"recoveries={snap.get('cluster.faults.recoveries', 0):.0f}")
+    csv(f"faults/added_p99,{payload['added_p99']:.3f},"
+        f"virtual_s,faulty={payload['p99_e2e_faulty']:.3f},"
+        f"clean={payload['p99_e2e_fault_free']:.3f}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, same H=4 fault schedule shape, "
+                         "hard-fail on any contract violation (the CI "
+                         "tier-7 gate)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    print(f"# fault schedule: availability "
+          f"{out['availability']:.4f} with 1/{out['n_hosts']} hosts "
+          f"blacked out, {out['degraded_answers']} flagged degraded "
+          f"answers, 0 unflagged-inexact / lost / divergent; replica "
+          f"failover and post-blackout recovery bit-equal; added "
+          f"virtual p99 {out['added_p99']:.3f}s")

@@ -23,6 +23,12 @@ needed):
      re-mine-per-window baseline by >= 5x (``speedup_streaming``), and
      the final frequent-map equality is asserted inside the bench
      itself (it raises before writing on any divergence).
+   - ``BENCH_faults.json``: the fault-tolerance contract under the
+     standard seeded schedule - availability >= 0.99 at H=4 with one
+     host faulted, zero unflagged-inexact / lost / divergent answers,
+     bit-equal replica failover and post-blackout recovery, and the
+     schedule must actually inject (nonzero injected faults, breaker
+     opens, recoveries in the metrics block).
    - ``BENCH_cluster.json``: zero divergences, >= 2 hosts, nonzero
      L1+L2 cache hits, the shed tier actually exercised, async
      ``cluster_qps`` monotone non-decreasing in host count for both
@@ -171,6 +177,44 @@ SCHEMAS = {
         "telemetry_sample_rate": _NUM,
         "metrics": dict,
     },
+    "BENCH_faults.json": {
+        "bank_patterns": int,
+        "n_hosts": int,
+        "n_drains": int,
+        "flush_batch": int,
+        "error_rate": _NUM,
+        "delay_rate": _NUM,
+        "submitted": int,
+        "answered": int,
+        "availability": _NUM,
+        "exact_answers": int,
+        "degraded_answers": int,
+        "unflagged_inexact": int,
+        "divergences": int,
+        "lost_tickets": int,
+        "fault_free_divergences": int,
+        "failover_divergences": int,
+        "recovery_divergences": int,
+        "p99_e2e_faulty": _NUM,
+        "p99_e2e_fault_free": _NUM,
+        "added_p99": _NUM,
+        "metrics": dict,
+    },
+    "BENCH_faults_smoke.json": {
+        "bank_patterns": int,
+        "n_hosts": int,
+        "submitted": int,
+        "answered": int,
+        "availability": _NUM,
+        "degraded_answers": int,
+        "unflagged_inexact": int,
+        "divergences": int,
+        "lost_tickets": int,
+        "fault_free_divergences": int,
+        "failover_divergences": int,
+        "recovery_divergences": int,
+        "metrics": dict,
+    },
     "BENCH_mining.json": {
         "configs": list,
         "divergences": int,
@@ -224,6 +268,10 @@ _MINING_HISTS = [
     "mining.wavefront.wave_seconds.count",
     "mining.pattern.wave_seconds.count",
 ]
+_FAULTS_HISTS = [
+    "cluster.faults.retry_seconds.count",
+    "cluster.router.e2e_seconds.count",
+]
 METRICS_REQUIRED = {
     "BENCH_serving.json": _SERVING_HISTS,
     "BENCH_serving_smoke.json": _SERVING_HISTS,
@@ -235,6 +283,8 @@ METRICS_REQUIRED = {
     "BENCH_cluster_smoke.json": _CLUSTER_HISTS,
     "BENCH_mining.json": _MINING_HISTS,
     "BENCH_mining_smoke.json": _MINING_HISTS,
+    "BENCH_faults.json": _FAULTS_HISTS,
+    "BENCH_faults_smoke.json": _FAULTS_HISTS,
 }
 
 
@@ -371,6 +421,46 @@ def check_invariants(name: str, payload: dict) -> None:
                 f"wavefront {wf} must be nonzero and below "
                 f"per-pattern {pp}"
             )
+    if name in ("BENCH_faults.json", "BENCH_faults_smoke.json"):
+        # the fault-tolerance contract (bench_faults.py raises before
+        # writing on any violation, so a nonzero committed count means
+        # the artifact was hand-edited): every submitted query answered
+        # exactly once, bit-equal when flagged exact, sound superset
+        # when degraded - and the schedule itself must not be vacuous
+        for key in ("unflagged_inexact", "divergences", "lost_tickets",
+                    "fault_free_divergences", "failover_divergences",
+                    "recovery_divergences"):
+            if payload[key] != 0:
+                raise GateError(
+                    f"{name}: {key} = {payload[key]} - the "
+                    "fault-tolerance contract is broken"
+                )
+        if payload["n_hosts"] < 4:
+            raise GateError(
+                f"{name}: n_hosts = {payload['n_hosts']} < 4 - the "
+                "availability gate is specified at H=4 with one host "
+                "faulted"
+            )
+        if payload["availability"] < 0.99:
+            raise GateError(
+                f"{name}: availability {payload['availability']:.4f} "
+                "< 0.99 with one host faulted"
+            )
+        if payload["degraded_answers"] <= 0:
+            raise GateError(
+                f"{name}: zero degraded answers - the blackout never "
+                "exercised the degradation ladder"
+            )
+        m = payload["metrics"]
+        for key in ("cluster.faults.injected",
+                    "cluster.faults.breaker_open",
+                    "cluster.faults.recoveries"):
+            if m.get(key, 0) <= 0:
+                raise GateError(
+                    f"{name}: metrics[{key!r}] = "
+                    f"{m.get(key, 'absent')} - the standard fault "
+                    "schedule stopped exercising the fault ladder"
+                )
     if name in ("BENCH_cluster.json", "BENCH_cluster_smoke.json"):
         # the cluster's contract is exactness, not in-process speed:
         # the bench raises before writing on any divergence, so a

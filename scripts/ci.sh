@@ -38,6 +38,16 @@
 #           miners over the same DB and hard-fails on ANY frequent-map
 #           divergence - the wavefront exactness gate.  Off in the
 #           fast lane.
+#   tier-7  CI_TIER7=0 skips   fault-tolerance smoke (off in the fast
+#           lane): bench_faults.py --smoke drives the H=4 cluster
+#           through the standard seeded fault schedule (transient
+#           errors, injected delays, one host blacked out) on a fake
+#           clock and hard-fails unless every submitted query gets
+#           exactly one answer - bit-equal to the single-host server
+#           or a flagged sound superset - with availability >= 0.99,
+#           zero unflagged-inexact answers, bit-equal replica failover
+#           and bit-equal post-blackout recovery.  Writes
+#           BENCH_faults_smoke.json for the check_bench.py gates.
 #   tier-6  CI_TIER6=0 skips   observability smoke (also off in the
 #           fast lane, CI_FAST=1): re-runs the cluster and mining
 #           smokes with --trace, then validates the recorded spans
@@ -120,6 +130,11 @@ fi
 if [[ "${CI_TIER5:-1}" != "0" ]]; then
     echo "[ci] tier-5: mining smoke (wavefront == per-pattern == host)"
     python benchmarks/bench_mining.py --smoke
+fi
+
+if [[ "${CI_TIER7:-1}" != "0" && "${CI_FAST:-0}" != "1" ]]; then
+    echo "[ci] tier-7: fault-tolerance smoke (availability + soundness under the standard fault schedule)"
+    python benchmarks/bench_faults.py --smoke
 fi
 
 if [[ "${CI_TIER6:-1}" != "0" && "${CI_FAST:-0}" != "1" ]]; then

@@ -10,6 +10,13 @@ queue-aging bound - and asserts the watchdog demonstrably fires:
 * the flight recorder dump lands on disk (with the breach reason)
 * after collecting the stalled tickets, results are still exact
 
+Then the host-blackout scenario: a fresh cluster with a
+``FaultInjector`` blacking out one host and the retry/breaker policy
+armed.  The breaker opens, the ``breaker-open`` SLO rule breaches on
+the counter's movement, the flight dump carries the ``host_fault``
+trace marks the retry ladder emitted - and the service keeps
+answering, degraded (flagged ``exact=False``) but complete.
+
 Exit 0 = the always-on alarm path works end to end.
 """
 from __future__ import annotations
@@ -30,6 +37,7 @@ from repro.obs import FlightRecorder, load_rules, trace  # noqa: E402
 from repro.obs.slo import SloWatchdog  # noqa: E402
 from repro.serving.bank import compile_bank  # noqa: E402
 from repro.serving.cluster import ServingCluster  # noqa: E402
+from repro.serving.faults import FaultInjector, RetryPolicy  # noqa: E402
 
 RULES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                      "slo_rules.json")
@@ -116,6 +124,62 @@ def main() -> int:
     trace.clear()
     print(f"[watchdog_smoke] OK: {n_res} exact results, watchdog + "
           "flight-recorder alarm path verified")
+
+    # host-blackout scenario: one host dark behind the injector, the
+    # breaker opens, the breaker-open rule breaches, the flight dump
+    # carries the host_fault marks - and every query still answers
+    now3 = [0.0]
+    clock3 = lambda: now3[0]  # noqa: E731
+    inj = FaultInjector(0, blackouts=[(1, 0.0, 10 ** 9)], clock=clock3)
+    cl3 = ServingCluster(
+        bank, 2, bank_layout="flat", clock=clock3, injector=inj,
+        fault_policy=RetryPolicy(retries=1, breaker_threshold=2,
+                                 breaker_cooldown=100.0),
+        max_wait=10.0)
+    dump3 = os.path.join(os.path.dirname(dump_path), "flight_fault.jsonl")
+    flight3 = FlightRecorder(capacity=32, metrics=cl3.metrics,
+                             metrics_prefix="cluster.router",
+                             clock=clock3)
+    trace.enable_sampling(1.0, metrics=cl3.metrics, flight=flight3)
+    wd3 = SloWatchdog(cl3.metrics, load_rules(RULES), clock=clock3,
+                      min_interval=0.5, flight=flight3,
+                      dump_path=dump3)
+    cl3.attach_watchdog(wd3)
+    breaches3 = cl3.metrics.counter("cluster.router.slo_breaches")
+    res3 = cl3.query_multi({0: queries[:4], 1: queries[4:]})
+    for _ in range(3):
+        now3[0] += 1.0
+        cl3.poll()
+    trace.disable()
+    trace.clear()
+    got3 = [r for rs in res3.values() for r in rs]
+    if len(got3) != len(queries) or any(r.exact for r in got3):
+        print("[watchdog_smoke] FAIL: blackout drain answered "
+              f"{len(got3)}/{len(queries)} with exact flags "
+              f"{[r.exact for r in got3]} - expected all degraded")
+        return 1
+    if not breaches3.value:
+        print("[watchdog_smoke] FAIL: breaker opened but the "
+              f"breaker-open rule never breached (checks={wd3.checks})")
+        return 1
+    if not os.path.exists(dump3):
+        print(f"[watchdog_smoke] FAIL: no flight dump at {dump3}")
+        return 1
+    with open(dump3) as f:
+        dump_text = f.read()
+    header3 = json.loads(dump_text.splitlines()[0])
+    if "breaker-open" not in str(header3.get("reason", "")):
+        print(f"[watchdog_smoke] FAIL: dump reason "
+              f"{header3.get('reason')!r} missing breaker-open")
+        return 1
+    if "host_fault" not in dump_text:
+        print("[watchdog_smoke] FAIL: flight dump carries no "
+              "host_fault trace marks")
+        return 1
+    print(f"[watchdog_smoke] OK: host blackout -> breaker open, "
+          f"breaches={breaches3.value}, dump "
+          f"reason={header3['reason']!r} with host_fault marks, "
+          f"{len(got3)} degraded answers")
     return 0
 
 

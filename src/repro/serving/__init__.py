@@ -119,6 +119,47 @@ Module map:
                    (in-process simulated hosts, optionally device-
                    pinned), so every protocol is property-tested
                    bit-equal to its single-host counterpart.
+* ``faults.py``  - the failure model: ``FaultInjector`` (a seeded,
+                   deterministic schedule of delays, transient errors
+                   and host blackout windows at the ``ClusterHost.call``
+                   boundary - no RNG at query time, so any chaos run
+                   replays bit-identically), ``RetryPolicy`` (per-call
+                   timeouts, capped exponential backoff, the
+                   consecutive-failure circuit breaker), the typed
+                   fault hierarchy (``HostFault`` and friends,
+                   ``HostUnavailableError``, ``PipelineBusyError``),
+                   and ``RecoveryLog`` (the writer-side sequenced
+                   delta ring that replays a restarted replica back to
+                   bit-equal state).
+
+Fault tolerance (``serving.faults``, the failure model): every
+cross-host access already flows through ``ClusterHost.call``, so the
+fault seam is one boundary.  With a ``RetryPolicy`` armed the router
+wraps every host call in per-call timeouts + capped-backoff retries;
+``breaker_threshold`` consecutive failures open a per-host circuit
+breaker (open -> short-circuit without touching the host -> half-open
+single probe after ``breaker_cooldown`` -> close with wiped caches on
+success).  While a host is down its column block degrades down a
+two-rung ladder: a registered failover replica
+(``ServingCluster.attach_failover_replica``) serves bit-equal
+``exact=True`` rows; otherwise the router answers from the host-side
+prescreen mirror - a sound superset flagged ``exact=False`` (the shed
+tier's protocol), never cached.  ``collect(timeout=...)`` bounds the
+async drain the same way: past the deadline stragglers degrade instead
+of blocking.  Strict entry points (``joined_rows``/``exact_rows``)
+refuse with ``HostUnavailableError`` rather than degrade.  Streaming
+deltas carry monotone sequence ids; a crashed replica restarts by
+replaying the writer's ``RecoveryLog`` from its last applied seq
+(verified bit-equal catch-up, full resync when the ring evicted the
+gap).  The whole ladder is off by default and the idle-injector run is
+property-tested bit-identical to the pre-fault cluster
+(tests/test_faults.py); ``benchmarks/bench_faults.py`` gates
+availability >= 0.99 with one of four hosts blacked out and zero
+unflagged-inexact answers.  Counters:
+``cluster.faults.{injected, retries, breaker_open, failovers,
+degraded_answers, recoveries}`` + the ``cluster.faults.retry_seconds``
+histogram; faulted calls ``trace.mark("host_fault")`` so sampled
+traces keep them.
 
 Observability (``repro.obs``, cross-cutting): every layer's counters
 live in a ``MetricsRegistry`` (``server.stats``, ``router.stats``, the
@@ -199,6 +240,17 @@ from .cluster import (  # noqa: F401
     ReplicaGroup,
     ServingCluster,
     ShardedStreamingBank,
+)
+from .faults import (  # noqa: F401
+    FaultInjector,
+    HostDownError,
+    HostFault,
+    HostTimeoutError,
+    HostUnavailableError,
+    PipelineBusyError,
+    RecoveryLog,
+    RetryPolicy,
+    TransientHostError,
 )
 from .join import (  # noqa: F401
     Frontend,

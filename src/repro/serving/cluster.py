@@ -85,6 +85,7 @@ from ..mining.incremental import depth1_root, refresh_frontier, \
     subtree_dirty_rows
 from .bank import BankCapacityError, PatternBank, compile_bank, \
     extend_bank, slice_bank
+from .faults import HostDownError, RecoveryLog
 from .layouts import get_layout
 from .router import BankPlacement, ClusterRouter, plan_placement
 from .server import PatternServer, QueryResult, score_topk
@@ -96,7 +97,10 @@ from .trie import TrieBank, build_trie, extend_trie
 class ClusterHost:
     """One simulated host: its bank shard server, owned global rows,
     and the two cache levels.  ``call`` is the host boundary - every
-    cross-host access in this module goes through it."""
+    cross-host access in this module goes through it.  An installed
+    ``FaultInjector`` (serving.faults) is consulted *before* the
+    wrapped function runs, so an injected fault never half-executes a
+    call - exactly the semantics of a dropped RPC."""
 
     hid: int
     rows: np.ndarray               # owned global bank rows
@@ -106,8 +110,11 @@ class ClusterHost:
     l1_size: int
     l2_size: int
     device: Optional[object] = None  # jax device pin (None = default)
+    injector: Optional[object] = None  # FaultInjector (None = never)
 
     def call(self, fn, *args, **kw):
+        if self.injector is not None:
+            self.injector.on_call(self.hid)
         with trace.span("cluster.host_call", host=self.hid):
             if self.device is None:
                 return fn(*args, **kw)
@@ -166,6 +173,9 @@ class ServingCluster:
         flush_batch: Optional[int] = None,
         shed_depth: Optional[int] = None,
         clock=None,
+        injector=None,
+        fault_policy=None,
+        sleep=None,
         **server_kw,
     ):
         self.bank = bank
@@ -180,12 +190,22 @@ class ServingCluster:
         )
         self.hosts = _make_hosts(bank, self.placement,
                                  bank_layout=bank_layout, **self._mk)
+        # fault semantics (serving.faults): the injector sits at every
+        # host's call boundary; the policy arms the router's retry /
+        # breaker / failover ladder.  Both default off - the pre-fault
+        # fast path is bit-identical
+        self.injector = injector
+        if injector is not None:
+            injector.bind(self.metrics)
+            for h in self.hosts:
+                h.injector = injector
         self.router = ClusterRouter(
             self.hosts, n_patterns=bank.n_patterns,
             support=bank.support[: bank.n_patterns].astype(np.int64),
             topk=topk, metrics=self.metrics,
             max_wait=max_wait, flush_batch=flush_batch,
             shed_depth=shed_depth, clock=clock,
+            fault_policy=fault_policy, sleep=sleep,
         )
 
     # ------------------------------------------------------------ serving
@@ -236,9 +256,23 @@ class ServingCluster:
         submit/poll/collect gives it a rate-limited rules check."""
         self.router.attach_watchdog(watchdog)
 
-    def collect(self, ticket=None):
-        """Fence + finalize one ticket (or all outstanding ones)."""
-        return self.router.collect(ticket)
+    def collect(self, ticket=None, timeout=None):
+        """Fence + finalize one ticket (or all outstanding ones).
+        ``timeout`` bounds the drain on the injectable clock: past the
+        deadline, unresolved joins degrade through the shed tier
+        (``exact=False``) instead of blocking forever - see
+        ``ClusterRouter.collect``."""
+        return self.router.collect(ticket, timeout=timeout)
+
+    # ------------------------------------------------------- fault ladder
+    def attach_failover_replica(self, hid: int, replica) -> None:
+        """Register a ``BankReplica`` (over the FULL bank) as host
+        ``hid``'s failover: while that host's breaker is open its
+        column block is answered from the replica's cache-bypassing
+        exact rows - bit-equal, still ``exact=True``.  Hosts without a
+        registered replica degrade to the prescreen instead."""
+        self.router.set_failover_replica(
+            hid, lambda seqs: replica.server.exact_rows(seqs))
 
     # ------------------------------------------------------------ masking
     def set_row_mask(self, active: Optional[np.ndarray]) -> None:
@@ -702,6 +736,7 @@ class BankReplica:
         trie: Optional[TrieBank] = None,
         support: Optional[np.ndarray] = None,
         active: Optional[np.ndarray] = None,
+        last_seq: int = 0,
         **server_kw,
     ):
         self.bank_layout = bank_layout
@@ -711,9 +746,18 @@ class BankReplica:
             bank.support[: bank.n_patterns].astype(np.int64)
             if support is None else np.asarray(support, np.int64).copy()
         )
-        if active is not None and not np.asarray(active).all():
-            self.server.set_row_mask(np.asarray(active, bool).copy())
+        self.active = (
+            np.ones(bank.n_patterns, bool) if active is None
+            else np.asarray(active, bool).copy()
+        )
+        if not self.active.all():
+            self.server.set_row_mask(self.active)
         self.applied = 0  # deltas applied so far
+        # last applied delta sequence id: the replay cursor.  A
+        # replica built from writer state at delta_seq=s starts there;
+        # apply() skips any seq <= last_seq, so replaying an overlap
+        # (restart catch-up) is idempotent
+        self.last_seq = int(last_seq)
 
     def _install(self, bank: PatternBank,
                  trie: Optional[TrieBank] = None) -> None:
@@ -727,33 +771,41 @@ class BankReplica:
         )
 
     def apply(self, delta: Tuple) -> None:
-        """Apply one writer delta (see serving.streaming's delta
-        kinds)."""
-        kind = delta[0]
+        """Apply one writer delta ``(kind, seq, *payload)`` - see
+        serving.streaming's delta kinds.  Deltas at or before the
+        replay cursor (``seq <= last_seq``) are skipped, so replaying
+        an overlapping recovery-log suffix is idempotent."""
+        kind, seq = delta[0], int(delta[1])
+        if seq <= self.last_seq:
+            return
         if kind == "support":
-            self.support = np.asarray(delta[1], np.int64)
+            self.support = np.asarray(delta[2], np.int64)
         elif kind == "mask":
-            _, active, support = delta
+            active, support = delta[2:]
+            self.active = np.asarray(active, bool)
             self.server.set_row_mask(
                 None if active.all() else active)
             self.support = np.asarray(support, np.int64)
         elif kind == "extend":
-            _, new, active, support = delta
+            new, active, support = delta[2:]
             if new:
                 bank2 = extend_bank(self.bank, new)
                 trie2 = (extend_trie(self.trie, bank2)
                          if self.trie is not None else None)
                 self._install(bank2, trie2)
+            self.active = np.asarray(active, bool)
             self.server.set_row_mask(
                 None if active.all() else active)
             self.support = np.asarray(support, np.int64)
         elif kind == "recompile":
-            _, mined, support = delta
+            mined, support = delta[2:]
             self._install(compile_bank(mined))
+            self.active = np.ones(self.bank.n_patterns, bool)
             self.support = np.asarray(support, np.int64)
         else:  # pragma: no cover - future delta kinds
             raise ValueError(f"unknown delta kind {kind!r}")
         self.applied += 1
+        self.last_seq = seq
 
     def join(self, req) -> "JoinResult":
         """Unified entry point: the inner server join rescored by the
@@ -780,27 +832,54 @@ class ReplicaGroup:
     ``StreamingBank``; every delta it emits is queued per replica and
     applied on ``sync()`` - the explicit "ship" step, so a replica
     keeps serving its previous masked bank while the writer refreshes
-    (reads never block on the writer)."""
+    (reads never block on the writer).
+
+    **Crash / recovery** (serving.faults): every broadcast delta is
+    also appended to a bounded ``RecoveryLog`` ring keyed by the
+    writer's monotone delta sequence ids.  ``crash(rid)`` drops a
+    replica's pending queue (a dead host loses its mailbox); a
+    ``restart(rid)`` replays the log from the replica's last applied
+    seq - or, when the ring already evicted that range, rebuilds the
+    replica from current writer state (full state transfer) - then
+    *verifies* catch-up bit-for-bit against the writer (patterns,
+    supports, active mask; GTRACE-RS's reverse-search decomposition is
+    what makes this cheap - all serving state is reconstructible from
+    the delta stream) before the replica rejoins.  Verified recoveries
+    count ``cluster.faults.recoveries`` on the writer's registry."""
 
     def __init__(self, writer: StreamingBank, n_replicas: int,
-                 **server_kw):
+                 *, log_capacity: int = 256, **server_kw):
         assert n_replicas >= 1
         self.writer = writer
+        self.server_kw = dict(server_kw)
         self.pending: List[List[Tuple]] = [[] for _ in range(n_replicas)]
+        self.log = RecoveryLog(log_capacity)
+        self.down: Set[int] = set()
+        self.faults = writer.metrics.view(
+            "cluster.faults", keys=["recoveries"])
         writer.delta_sink = self._broadcast
         self.replicas = [
-            BankReplica(
-                writer.bank, bank_layout=writer.bank_layout,
-                trie=writer.trie,
-                support=writer.support,
-                active=writer.active if writer.tombstones else None,
-                **server_kw,
-            )
-            for _ in range(n_replicas)
+            self._fresh_replica() for _ in range(n_replicas)
         ]
 
+    def _fresh_replica(self) -> BankReplica:
+        """A replica built from *current* writer state - its replay
+        cursor starts at the writer's current delta seq (full state
+        transfer: nothing older needs replaying)."""
+        w = self.writer
+        return BankReplica(
+            w.bank, bank_layout=w.bank_layout, trie=w.trie,
+            support=w.support,
+            active=w.active if w.tombstones else None,
+            last_seq=w.delta_seq,
+            **self.server_kw,
+        )
+
     def _broadcast(self, delta: Tuple) -> None:
-        for q in self.pending:
+        self.log.append(int(delta[1]), delta)
+        for rid, q in enumerate(self.pending):
+            if rid in self.down:
+                continue  # a crashed replica's mailbox is gone
             # "support" deltas are full-state: a lagging replica only
             # needs the latest one, so consecutive ones coalesce and
             # the queue stays bounded by the structural-delta rate
@@ -815,14 +894,80 @@ class ReplicaGroup:
         return len(self.pending[rid])
 
     def sync(self, rid: Optional[int] = None) -> None:
-        """Ship (apply) all pending deltas to one replica, or all."""
+        """Ship (apply) all pending deltas to one replica, or all live
+        ones.  Syncing a crashed replica raises ``HostDownError`` -
+        restart it first."""
+        if rid is not None and rid in self.down:
+            raise HostDownError(rid, f"replica {rid} is down")
         rids = range(len(self.replicas)) if rid is None else [rid]
         for i in rids:
+            if i in self.down:
+                continue
             for delta in self.pending[i]:
                 self.replicas[i].apply(delta)
             self.pending[i].clear()
 
+    # ------------------------------------------------- crash / recovery
+    def crash(self, rid: int) -> None:
+        """Take one replica down: queries fail (``HostDownError``) and
+        shipped deltas no longer reach it - its pending queue is lost,
+        exactly like a host losing its mailbox on restart.  The
+        replica's *applied* state survives (a restarted process reloads
+        its checkpoint); ``restart`` replays the gap."""
+        self.down.add(rid)
+        self.pending[rid].clear()
+
+    def restart(self, rid: int) -> int:
+        """Recover one crashed replica: replay the writer's recovery
+        log from the replica's last applied seq (``None`` from the ring
+        means the range was evicted - rebuild from writer state
+        instead), verify catch-up bit-for-bit, then rejoin.  Returns
+        the number of deltas replayed (0 for a full state transfer)."""
+        rep = self.replicas[rid]
+        deltas = self.log.since(rep.last_seq)
+        if deltas is None:
+            # the ring evicted part of the needed range: a partial
+            # replay would corrupt the replica, so transfer full state
+            self.replicas[rid] = self._fresh_replica()
+            replayed = 0
+        else:
+            for delta in deltas:
+                rep.apply(delta)
+            replayed = len(deltas)
+        self._verify(rid)
+        self.down.discard(rid)
+        self.faults["recoveries"] += 1
+        return replayed
+
+    def _verify(self, rid: int) -> None:
+        """The rejoin gate: a recovered replica must match the writer
+        bit-for-bit - same pattern set, same live supports, same
+        tombstone mask.  Raises ``RuntimeError`` on any mismatch (the
+        replica must NOT rejoin routing with divergent state)."""
+        rep, w = self.replicas[rid], self.writer
+        w_active = (w.active if w.tombstones
+                    else np.ones(w.bank.n_patterns, bool))
+        if rep.bank.patterns != w.bank.patterns:
+            raise RuntimeError(
+                f"replica {rid} failed catch-up verification: "
+                "pattern set diverges from writer")
+        if not np.array_equal(
+                rep.support, w.support[: w.bank.n_patterns]):
+            raise RuntimeError(
+                f"replica {rid} failed catch-up verification: "
+                "supports diverge from writer")
+        if not np.array_equal(
+                rep.active[: w.bank.n_patterns],
+                w_active[: w.bank.n_patterns]):
+            raise RuntimeError(
+                f"replica {rid} failed catch-up verification: "
+                "tombstone mask diverges from writer")
+
     def query(self, seqs: Sequence[TRSeq], replica: int = 0,
               k: int = 10) -> List[QueryResult]:
-        """Serve from a replica at whatever state it has applied."""
+        """Serve from a replica at whatever state it has applied.
+        Crashed replicas raise ``HostDownError``."""
+        if replica in self.down:
+            raise HostDownError(
+                replica, f"replica {replica} is down")
         return self.replicas[replica].query(seqs, k=k)

@@ -47,13 +47,19 @@ class JoinRequest:
 
     ``k=None`` means the backend's configured top-k depth.  ``host``
     names the arrival host for cluster backends (single-host backends
-    ignore it)."""
+    ignore it).  ``timeout`` bounds the async drain (``Frontend``'s
+    begin/finish over a router/cluster backend): past the deadline the
+    backend answers the stragglers from its degraded tier, flagged
+    ``exact=False``, instead of blocking - see
+    ``ClusterRouter.collect``.  Backends without a timeout notion
+    ignore it."""
 
     seqs: Tuple[TRSeq, ...]
     k: Optional[int] = None
     exact: bool = True
     trace_id: Optional[str] = None
     host: int = 0
+    timeout: Optional[float] = None
 
     def __post_init__(self):
         object.__setattr__(self, "seqs", tuple(self.seqs))
@@ -156,7 +162,8 @@ class Frontend:
         if kind == "done":
             return payload
         if kind == "ticket":
-            results = self.backend.collect(payload)[req.host]
+            results = self.backend.collect(
+                payload, timeout=req.timeout)[req.host]
             return JoinResult(results)
         backend = self.backend
         k = backend.topk if req.k is None else req.k

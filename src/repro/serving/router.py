@@ -79,9 +79,16 @@ from ..core.graphseq import TRSeq
 from ..obs import trace
 from ..obs.metrics import MetricsRegistry
 from .bank import PatternBank, sequence_fingerprint
+from .faults import (
+    HostFault,
+    HostTimeoutError,
+    HostUnavailableError,
+    PipelineBusyError,
+    RetryPolicy,
+)
 from .layouts import get_layout
-from .server import QueryResult, encode_queries, score_topk
-from .trie import TrieBank
+from .server import QueryResult, encode_queries, prescreen_rows, score_topk
+from .trie import REQ_MASKED, TrieBank
 
 
 @dataclasses.dataclass
@@ -130,23 +137,42 @@ def _cache_put(cache: "Dict[str, np.ndarray]", size: int, fp: str,
 class _PendingJoin:
     """One admitted cache-miss awaiting its shard join.  Shared by
     every ticket that references the fingerprint (in-flight dedup);
-    ``row`` is filled when the batch carrying it is fenced."""
+    ``row`` is filled when the batch carrying it is fenced.  ``exact``
+    goes False when the batch was fenced through the prescreen rung of
+    the degradation ladder (a shard's host was down with no replica)."""
 
     fp: str
     seq: TRSeq
     enqueued: float                       # admission clock reading
     row: Optional[np.ndarray] = None
+    exact: bool = True
 
 
 @dataclasses.dataclass
 class _InFlightBatch:
     """One flushed batch: its admitted entries and the per-shard
-    ``InFlightRows`` handles, launched but not yet fenced."""
+    ``InFlightRows`` handles, launched but not yet fenced.  ``down``
+    collects the hosts whose launch already failed the retry ladder;
+    the fence answers their column blocks via the failover ladder."""
 
     entries: List[_PendingJoin]
     handles: list                          # [(host, InFlightRows)]
     done: bool = False
     launched: float = 0.0                  # flush clock reading
+    down: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _HostHealth:
+    """Per-host circuit-breaker state the router tracks when a
+    ``RetryPolicy`` is installed: ``closed`` (healthy), ``open``
+    (short-circuit every call until the cooldown elapses), ``half_open``
+    (cooldown elapsed, exactly one probe allowed - success closes and
+    counts a recovery, failure re-opens)."""
+
+    consec: int = 0
+    state: str = "closed"
+    opened_at: float = 0.0
 
 
 class DrainTicket:
@@ -192,6 +218,8 @@ class ClusterRouter:
         flush_batch: Optional[int] = None,
         shed_depth: Optional[int] = None,
         clock: Optional[Callable[[], float]] = None,
+        fault_policy: Optional[RetryPolicy] = None,
+        sleep: Optional[Callable[[float], None]] = None,
     ):
         self.hosts = list(hosts)
         self.n_patterns = n_patterns
@@ -250,6 +278,39 @@ class ClusterRouter:
         # optional SloWatchdog (obs.slo), driven from _note_depth -
         # every submit/poll/collect gives it a rate-limited check
         self.watchdog = None
+        # --- fault semantics (serving.faults) ---
+        # fault_policy: per-call timeout + retry/backoff + circuit
+        #   breaker at every host call; None = the pre-fault fast path
+        #   (h.call direct, zero added work, bit-identical behavior)
+        # sleep: injectable backoff sleep (tests advance a fake clock)
+        self.fault_policy = fault_policy
+        self._sleep = sleep if sleep is not None else (
+            time.sleep if clock is None else (lambda s: None))
+        self._health: Dict[int, _HostHealth] = {}
+        self._failover: Dict[int, Callable] = {}
+        # per-host req-row mirrors (re-masked in lockstep with
+        # apply_row_mask): the bottom rung of the degradation ladder
+        # answers a dead shard's columns from the host-side counts
+        # prescreen computed router-side, no host call at all
+        self._req_base = {
+            h.hid: np.array(
+                h.server.bank.req[: h.server.bank.n_patterns],
+                np.int32, copy=True)
+            for h in self.hosts
+        }
+        self._req_mirror = dict(self._req_base)
+        self._nlk = (self.hosts[0].server.bank.n_label_keys
+                     if self.hosts else 1)
+        # pre-registered (explicit 0 in healthy snapshots; the
+        # breaker-open SLO rule reads these): the fault counters are a
+        # fixed global namespace, not per-router, matching the
+        # injector's own ``cluster.faults.injected``
+        self.faults = self.metrics.view("cluster.faults", keys=[
+            "injected", "retries", "breaker_open",
+            "failovers", "degraded_answers", "recoveries",
+        ])
+        self._h_retry = self.metrics.bucket_histogram(
+            "cluster.faults.retry_seconds")
 
     # ------------------------------------------------------------- cache
     def owner(self, fp: str) -> int:
@@ -278,15 +339,27 @@ class ClusterRouter:
         The admission pipeline must be quiescent: an in-flight join was
         launched against the pre-mask requirements and its ticket holds
         references the patch cannot reach - collect every ticket before
-        re-masking."""
-        assert not (self._tickets or self._queue or self._batches), \
-            "collect all tickets before changing the row mask"
+        re-masking.  Raises ``PipelineBusyError`` (a typed error, not a
+        bare assert - it must survive ``python -O``) naming the counts
+        still in the pipeline."""
+        if self._tickets or self._queue or self._batches:
+            raise PipelineBusyError(
+                queued=len(self._queue),
+                inflight=sum(len(b.entries) for b in self._batches),
+                tickets=len(self._tickets),
+            )
         old = self._row_mask
         new = (None if active is None
                else np.asarray(active, bool).copy())
         self._row_mask = new
         old_a = (np.ones(self.n_patterns, bool) if old is None else old)
         new_a = (np.ones(self.n_patterns, bool) if new is None else new)
+        # keep the degraded-path req mirrors in lockstep: masked rows
+        # answer False from the prescreen too (their req is REQ_MASKED)
+        for h in self.hosts:
+            m = self._req_base[h.hid].copy()
+            m[~new_a[h.rows]] = REQ_MASKED
+            self._req_mirror[h.hid] = m
         if (new_a & ~old_a).any():  # recoveries: cached False is stale
             self.clear_caches()
             self.stats["mask_clears"] += 1
@@ -302,9 +375,150 @@ class ClusterRouter:
                     cache[fp] = patched
         self.stats["mask_patches"] += 1
 
+    # ----------------------------------------------------- fault ladder
+    def _host_call(self, h, fn, *args):
+        """Every cross-host access goes through here.  Without a
+        ``fault_policy`` this is exactly ``h.call`` - the pre-fault
+        fast path, bit-identical behavior.  With one, it is the retry
+        ladder: per-call timeout on the injectable clock (a timed-out
+        result is discarded), capped exponential backoff retries, and
+        the per-host circuit breaker (open hosts short-circuit without
+        a call; after the cooldown one half-open probe is allowed, and
+        a successful probe recovers the host - caches wiped, since a
+        restarted host's caches are gone).  Exhausted ladders raise
+        ``HostUnavailableError``; the *caller* decides whether to fail
+        over (replica / prescreen) or propagate."""
+        pol = self.fault_policy
+        if pol is None:
+            return h.call(fn, *args)
+        hh = self._health.setdefault(h.hid, _HostHealth())
+        if hh.state == "open":
+            if self.clock() - hh.opened_at < pol.breaker_cooldown:
+                raise HostUnavailableError(
+                    h.hid, f"host {h.hid} circuit breaker open")
+            hh.state = "half_open"
+        last: Optional[BaseException] = None
+        attempts = 1 if hh.state == "half_open" else pol.retries + 1
+        for attempt in range(attempts):
+            t0 = self.clock()
+            try:
+                out = h.call(fn, *args)
+                if (pol.call_timeout is not None
+                        and self.clock() - t0 > pol.call_timeout):
+                    raise HostTimeoutError(
+                        h.hid,
+                        f"host {h.hid} call exceeded "
+                        f"{pol.call_timeout}s; result discarded")
+            except HostFault as f:
+                last = f
+                trace.mark("host_fault")
+                self._h_retry.observe(self.clock() - t0)
+                if self._note_host_failure(hh) \
+                        or attempt == attempts - 1:
+                    break
+                self.faults["retries"] += 1
+                self._sleep(min(pol.backoff_base * 2.0 ** attempt,
+                                pol.backoff_cap))
+                continue
+            if hh.state == "half_open":
+                self._recover_host(h)
+            hh.consec = 0
+            hh.state = "closed"
+            return out
+        raise HostUnavailableError(h.hid, str(last)) from last
+
+    def _note_host_failure(self, hh: _HostHealth) -> bool:
+        """Count one failure; open the breaker (returns True) when the
+        consecutive-failure threshold is hit or a half-open probe
+        failed."""
+        hh.consec += 1
+        if (hh.state == "half_open"
+                or hh.consec >= self.fault_policy.breaker_threshold):
+            hh.state = "open"
+            hh.opened_at = self.clock()
+            self.faults["breaker_open"] += 1
+            return True
+        return False
+
+    def _recover_host(self, h) -> None:
+        """A half-open probe succeeded: the host rejoins routing.  Its
+        caches are wiped - a really-restarted host would come back
+        empty, and a stale entry served as fresh would break the
+        exactness contract."""
+        h.l1.clear()
+        h.l2.clear()
+        self.faults["recoveries"] += 1
+
+    def set_failover_replica(self, hid: int, rows_fn: Callable) -> None:
+        """Register the replica rung of the degradation ladder for one
+        host: ``rows_fn(seqs) -> [len(seqs), n_patterns]`` exact
+        containment rows in *global* bank order (e.g. a ReplicaGroup
+        read replica's ``exact_rows`` - it holds the full bank).  While
+        ``hid`` is unavailable its column block is answered from the
+        replica, bit-equal and still ``exact=True``; hosts without one
+        fall through to the prescreen, flagged ``exact=False``."""
+        self._failover[hid] = rows_fn
+
+    def _failover_rows(self, h, seqs: Sequence[TRSeq]):
+        """Answer one down host's column block: replica if registered
+        (exact), else the router-side counts prescreen over the host's
+        req mirror (sound superset, inexact).  Returns
+        ``(block [len(seqs), len(h.rows)], exact)``."""
+        trace.mark("host_fault")
+        fb = self._failover.get(h.hid)
+        if fb is not None:
+            rows = np.asarray(fb(seqs), bool)
+            self.faults["failovers"] += 1
+            return rows[:, h.rows], True
+        self.faults["degraded_answers"] += len(seqs)
+        block = prescreen_rows(
+            list(seqs), self._req_mirror[h.hid], self._nlk)
+        return block[:, : len(h.rows)], False
+
     # -------------------------------------------------------------- join
     def _live_hosts(self) -> List:
         return [h for h in self.hosts if len(h.rows)]
+
+    def _shard_rows_ex(self, seqs: Sequence[TRSeq]):
+        """The fault-aware core of ``joined_rows``: merged containment
+        rows plus an exactness verdict.  Hosts whose launch or fence
+        exhausts the retry ladder drop to the failover ladder for their
+        column block; ``exact`` goes False iff any block came from the
+        prescreen rung."""
+        out = np.zeros((len(seqs), self.n_patterns), bool)
+        exact = True
+        live = self._live_hosts()
+        if not len(seqs) or not live:
+            return out, exact
+        nlk = live[0].server.bank.n_label_keys
+        cap = min(h.server.max_batch for h in live)
+        with trace.span("cluster.join", n=len(seqs)):
+            for c0 in range(0, len(seqs), cap):
+                chunk = list(seqs[c0 : c0 + cap])
+                shared = encode_queries(chunk, n_label_keys=nlk)
+                launched, down = [], []
+                for h in live:
+                    try:
+                        launched.append((h, self._host_call(
+                            h, h.server.launch_rows, chunk, shared)))
+                    except HostUnavailableError:
+                        down.append(h)
+                for h, flight in launched:
+                    try:
+                        shard = self._host_call(
+                            h, h.server.finalize_rows, flight)
+                    except HostUnavailableError:
+                        down.append(h)
+                        continue
+                    out[c0 : c0 + len(chunk), h.rows] = \
+                        shard[:, : len(h.rows)]
+                for h in down:
+                    block, ok = self._failover_rows(h, chunk)
+                    out[c0 : c0 + len(chunk), h.rows] = \
+                        block[:, : len(h.rows)]
+                    exact = exact and ok
+            self.stats["shard_batches"] += len(live)
+        return out, exact
 
     def joined_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
         """Cache-bypassing merged containment rows [len(seqs),
@@ -313,27 +527,20 @@ class ClusterRouter:
         join is launched before any is fenced - per-shard cost is the
         shard's own group joins, not a full re-encode, and the shards'
         device batches overlap.  Zero collectives - the shard outputs
-        are disjoint column blocks."""
-        out = np.zeros((len(seqs), self.n_patterns), bool)
-        live = self._live_hosts()
-        if not len(seqs) or not live:
-            return out
-        nlk = live[0].server.bank.n_label_keys
-        cap = min(h.server.max_batch for h in live)
-        with trace.span("cluster.join", n=len(seqs)):
-            for c0 in range(0, len(seqs), cap):
-                chunk = list(seqs[c0 : c0 + cap])
-                shared = encode_queries(chunk, n_label_keys=nlk)
-                launched = [
-                    (h, h.call(h.server.launch_rows, chunk, shared))
-                    for h in live
-                ]
-                for h, flight in launched:
-                    shard = h.call(h.server.finalize_rows, flight)
-                    out[c0 : c0 + len(chunk), h.rows] = \
-                        shard[:, : len(h.rows)]
-            self.stats["shard_batches"] += len(live)
-        return out
+        are disjoint column blocks.
+
+        This entry point has a *strict* exactness contract (the
+        streaming window protocol reconciles supports through it): if a
+        shard's host is unavailable and no replica covers it, it raises
+        ``HostUnavailableError`` rather than return prescreen bits.
+        Query-serving paths (``route``/``submit``/``collect``) use the
+        degrading ``_shard_rows_ex`` instead."""
+        rows, exact = self._shard_rows_ex(seqs)
+        if not exact:
+            raise HostUnavailableError(
+                -1, "exact join impossible: a shard's host is "
+                    "unavailable and no replica covers it")
+        return rows
 
     # ------------------------------------------------------------- route
     def _score(self, row: np.ndarray, k: int) -> List[tuple]:
@@ -397,18 +604,26 @@ class ClusterRouter:
                         cached[fp] = False
                         miss_fps.append(fp)
                         miss_seqs.append(s)
+            exact = dict.fromkeys(rows, True)
             if miss_seqs:
                 self.stats["misses"] += len(miss_seqs)
-                got = self.joined_rows(miss_seqs)
+                # degrading join: a dead shard's block falls to the
+                # failover ladder instead of failing the whole drain
+                got, ok = self._shard_rows_ex(miss_seqs)
                 with trace.span("cluster.cache_fill", cat="cache"):
                     for i, fp in enumerate(miss_fps):
                         rows[fp] = got[i]
-                        own = self.hosts[self.owner(fp)]
-                        _cache_put(own.l2, own.l2_size, fp, got[i])
+                        exact[fp] = ok
+                        if ok:  # inexact rows are never cached
+                            own = self.hosts[self.owner(fp)]
+                            _cache_put(own.l2, own.l2_size, fp, got[i])
             with trace.span("cluster.finalize"):
-                # every resolved fingerprint lands in its arrival
-                # hosts' L1s
+                # every exactly-resolved fingerprint lands in its
+                # arrival hosts' L1s; degraded rows stay uncached (a
+                # later lookup must not serve them as exact)
                 for fp, hids in arrival_hosts.items():
+                    if not exact[fp]:
+                        continue
                     for hid in hids:
                         host = self.hosts[hid]
                         _cache_put(host.l1, host.l1_size, fp, rows[fp])
@@ -418,6 +633,7 @@ class ClusterRouter:
                             fingerprint=fp, contained=rows[fp],
                             topk=self._score(rows[fp], k),
                             cached=cached[fp],
+                            exact=exact[fp],
                         )
                         for fp in fps[hid]
                     ]
@@ -576,20 +792,24 @@ class ClusterRouter:
         for e in batch:
             self._h_queue_wait.observe(t_launch - e.enqueued)
         with trace.span("cluster.flush", reason=reason, n=len(seqs)):
-            handles = []
+            handles, down = [], []
             if live:
                 shared = encode_queries(
                     seqs,
                     n_label_keys=live[0].server.bank.n_label_keys,
                 )
-                handles = [
-                    (h, h.call(h.server.launch_rows, seqs, shared))
-                    for h in live
-                ]
+                for h in live:
+                    try:
+                        handles.append((h, self._host_call(
+                            h, h.server.launch_rows, seqs, shared)))
+                    except HostUnavailableError:
+                        # launch already exhausted the ladder: the
+                        # fence answers this host's block via failover
+                        down.append(h)
             self.stats["shard_batches"] += len(handles)
         self._batches.append(
             _InFlightBatch(entries=batch, handles=handles,
-                           launched=t_launch))
+                           launched=t_launch, down=down))
         self.stats["flush_" + reason] += 1
 
     def _fence_batch(self, batch: _InFlightBatch) -> None:
@@ -598,48 +818,99 @@ class ClusterRouter:
         batch entries in admission order, L2 before any ticket's L1."""
         with trace.span("cluster.fence", n=len(batch.entries)):
             rows = np.zeros((len(batch.entries), self.n_patterns), bool)
+            down = list(batch.down)
             for h, flight in batch.handles:
-                shard = h.call(h.server.finalize_rows, flight)
+                try:
+                    shard = self._host_call(
+                        h, h.server.finalize_rows, flight)
+                except HostUnavailableError:
+                    down.append(h)
+                    continue
                 rows[:, h.rows] = shard[:, : len(h.rows)]
+            exact = True
+            if down:
+                seqs = [e.seq for e in batch.entries]
+                for h in down:
+                    block, ok = self._failover_rows(h, seqs)
+                    rows[:, h.rows] = block[:, : len(h.rows)]
+                    exact = exact and ok
             with trace.span("cluster.cache_fill", cat="cache"):
                 for i, e in enumerate(batch.entries):
                     e.row = rows[i]
-                    own = self.hosts[self.owner(e.fp)]
-                    _cache_put(own.l2, own.l2_size, e.fp, rows[i])
+                    e.exact = exact
+                    if exact:  # degraded rows are never cached
+                        own = self.hosts[self.owner(e.fp)]
+                        _cache_put(own.l2, own.l2_size, e.fp, rows[i])
                     self._pending.pop(e.fp, None)
         self._h_flush.observe(self.clock() - batch.launched)
         batch.done = True
 
     def _approx_rows(self, seqs: Sequence[TRSeq]) -> np.ndarray:
         """Merged prescreen-only rows for the shed tier: each shard's
-        host-side counts prescreen, global bank order, no device."""
+        host-side counts prescreen, global bank order, no device.  An
+        unavailable host costs nothing here - the prescreen needs no
+        host state, so the router computes the same bits from its req
+        mirror."""
         out = np.zeros((len(seqs), self.n_patterns), bool)
         with trace.span("cluster.approx", n=len(seqs)):
             for h in self._live_hosts():
-                shard = h.call(h.server.approx_rows, seqs)
+                try:
+                    shard = self._host_call(h, h.server.approx_rows,
+                                            seqs)
+                except HostUnavailableError:
+                    shard = prescreen_rows(
+                        list(seqs), self._req_mirror[h.hid], self._nlk)
                 out[:, h.rows] = shard[:, : len(h.rows)]
         return out
 
     def collect(
         self, ticket: Optional[DrainTicket] = None,
+        timeout: Optional[float] = None,
     ) -> "Dict[int, List[QueryResult]] | List[Dict[int, List[QueryResult]]]":
         """Redeem one ticket (or, with ``None``, every outstanding
         ticket in submit order).  Force-flushes and fences in admission
         order until the ticket's joins are resolved, computes the shed
         tier's approximate rows, fills arrival-host L1s, and returns
         the per-host results - bit-equal to ``route`` on the same
-        requests wherever ``exact`` is True."""
+        requests wherever ``exact`` is True.
+
+        ``timeout`` bounds the drain on the injectable clock: once the
+        deadline passes, joins still unresolved are *degraded* through
+        the shed tier (prescreen answer, ``exact=False``) instead of
+        blocking forever on a lost or faulting in-flight batch - every
+        query still gets exactly one answer.  The timed-out joins stay
+        queued/in flight and resolve exactly on a later fence; a repeat
+        submit of the same fingerprint piggybacks on them."""
         if ticket is None:
-            return [self.collect(t) for t in list(self._tickets)]
+            return [self.collect(t, timeout=timeout)
+                    for t in list(self._tickets)]
         if ticket.results is not None:
             return ticket.results
+        deadline = (None if timeout is None
+                    else self.clock() + timeout)
         with trace.root_or_span("cluster.collect"):
             while ticket.pending:
+                if deadline is not None and self.clock() >= deadline:
+                    # deadline passed with joins unresolved: answer the
+                    # stragglers from the shed tier, leave their joins
+                    # in the pipeline to finish exactly later
+                    for fp, v in list(ticket.rows.items()):
+                        if isinstance(v, _PendingJoin) \
+                                and v.row is None:
+                            ticket.shed[fp] = v.seq
+                            ticket.rows[fp] = None
+                            self.stats["shed_prescreen"] += 1
+                            trace.mark("shed")
+                    break
                 if self._batches:
                     self._fence_batch(self._batches.pop(0))
                     continue
-                assert self._queue, \
-                    "pending join neither queued nor in flight"
+                if not self._queue:
+                    # not queued, not in flight, row never filled: the
+                    # batch carrying it was lost.  A typed error, not
+                    # an assert - this must survive ``python -O``.
+                    raise RuntimeError(
+                        "pending join neither queued nor in flight")
                 self._flush("force")
             self._note_depth()
             with trace.span("cluster.finalize"):
@@ -648,9 +919,12 @@ class ClusterRouter:
                 for fp, v in ticket.rows.items():
                     if fp in ticket.shed:
                         continue
-                    rows[fp] = v.row if isinstance(v, _PendingJoin) \
-                        else v
-                    exact[fp] = True
+                    if isinstance(v, _PendingJoin):
+                        rows[fp] = v.row
+                        exact[fp] = v.exact
+                    else:
+                        rows[fp] = v
+                        exact[fp] = True
                 if ticket.shed:
                     trace.mark("shed")
                     shed_fps = list(ticket.shed)

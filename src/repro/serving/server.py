@@ -85,6 +85,42 @@ def _pow2(n: int) -> int:
     return b
 
 
+def prescreen_rows(
+    seqs: Sequence[TRSeq], req_np: np.ndarray, n_label_keys: int
+) -> np.ndarray:
+    """The host-side counts prescreen as a standalone function: sound
+    approximate rows ``[len(seqs), n_patterns]`` from token-key counts
+    vs per-pattern requirement rows (``counts >= req``, all keys).
+    True containment is always a cellwise subset; rows whose req is
+    ``REQ_MASKED`` answer False.  ``PatternServer.approx_rows`` wraps
+    this with the server's own req mirror; ``ClusterRouter`` calls it
+    directly against its per-host req mirrors to answer a dead shard's
+    rows ``exact=False`` without any host call - the bottom rung of the
+    degradation ladder."""
+    n_patterns = req_np.shape[0]
+    out = np.zeros((len(seqs), n_patterns), bool)
+    if not len(seqs) or not n_patterns:
+        return out
+    tdb = encode_db(
+        list(seqs),
+        pad_to=_pow2(max(
+            1, max(sum(len(it) for it in s) for s in seqs)
+        )),
+        pad_seqs_to=_pow2(len(seqs)),
+    )
+    key = token_keys_np(tdb.tokens, n_label_keys)
+    K = 6 * n_label_keys
+    B = key.shape[0]
+    rowed = key + np.arange(B)[:, None] * (K + 1)
+    counts = np.bincount(
+        rowed.ravel(), minlength=B * (K + 1)
+    ).reshape(B, K + 1)[:, :K].astype(np.int32)
+    out[:] = (
+        counts[: len(seqs), None, :] >= req_np[None, :, :]
+    ).all(-1)
+    return out
+
+
 def _bucket34(n: int) -> int:
     """Shape bucket for the fused walk's cell axis: pow-2 or
     3·2^(k-2), whichever is tighter (<= 33% padding waste vs pow-2's
@@ -629,29 +665,10 @@ class PatternServer:
         tier serves these, flagged ``exact=False``, when the admission
         queue is over its shed depth."""
         bank = self.bank
-        out = np.zeros((len(seqs), bank.n_patterns), bool)
-        if not len(seqs) or not bank.n_patterns:
-            return out
         with trace.span("serving.approx", n=len(seqs)):
-            tdb = encode_db(
-                list(seqs),
-                pad_to=_pow2(max(
-                    1, max(sum(len(it) for it in s) for s in seqs)
-                )),
-                pad_seqs_to=_pow2(len(seqs)),
+            return prescreen_rows(
+                seqs, self._req_np[: bank.n_patterns], bank.n_label_keys
             )
-            key = token_keys_np(tdb.tokens, bank.n_label_keys)
-            K = 6 * bank.n_label_keys
-            B = key.shape[0]
-            rowed = key + np.arange(B)[:, None] * (K + 1)
-            counts = np.bincount(
-                rowed.ravel(), minlength=B * (K + 1)
-            ).reshape(B, K + 1)[:, :K].astype(np.int32)
-            out[:] = (
-                counts[: len(seqs), None, :]
-                >= self._req_np[None, : bank.n_patterns, :]
-            ).all(-1)
-        return out
 
     def _resolve_undecided(self, tokens, order, start, count, tmax,
                            contained, ovf, seqs):

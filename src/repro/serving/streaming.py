@@ -62,13 +62,16 @@ Two production follow-ons ride on top:
   triggers.
 * ``delta_sink`` - the single-writer/read-replica hook (see
   serving.cluster): when set, every state change a replica must mirror
-  is emitted as a delta tuple - ``("support", support)`` after each
-  observe, ``("mask", active, support)`` when tombstones change,
-  ``("extend", new_patterns, active, support)`` after an incremental
-  reconcile, ``("recompile", mined, support)`` after a full refresh -
-  so replicas apply ``extend_bank``/``extend_trie`` instead of
-  recompiling, and keep serving the previous masked bank until the
-  delta lands.
+  is emitted as a delta tuple - ``("support", seq, support)`` after
+  each observe, ``("mask", seq, active, support)`` when tombstones
+  change, ``("extend", seq, new_patterns, active, support)`` after an
+  incremental reconcile, ``("recompile", seq, mined, support)`` after
+  a full refresh - so replicas apply ``extend_bank``/``extend_trie``
+  instead of recompiling, and keep serving the previous masked bank
+  until the delta lands.  ``seq`` is a monotone sequence id (see
+  ``delta_seq``): replicas track their last applied seq, skip
+  duplicates idempotently, and a restarted replica replays the
+  writer's ``RecoveryLog`` (serving.faults) from that point.
 """
 from __future__ import annotations
 
@@ -143,8 +146,15 @@ class StreamingBank:
         self._any_change = False
         self._batches_since_refresh = 0
         # read-replica hook: every delta a replica must mirror is
-        # pushed here (see the module docstring for the tuple kinds)
+        # pushed here (see the module docstring for the tuple kinds).
+        # Deltas carry monotone sequence ids - ``(kind, seq, *payload)``
+        # with ``seq == 1, 2, ...`` - so a restarted replica can replay
+        # the writer's RecoveryLog from its last applied seq
+        # (serving.faults) and skip duplicates idempotently.  The
+        # counter advances whether or not a sink is attached: a seq is
+        # a property of the stream, not of who is listening
         self.delta_sink: Optional[Callable[[Tuple], None]] = None
+        self._delta_seq = 0
         # the registry outlives every server/miner rebuild: a
         # refresh(full=True) recompile re-attaches to the same counters
         # instead of zeroing them (reset is registry.reset(), only)
@@ -279,11 +289,9 @@ class StreamingBank:
                 if n_tomb:
                     self.active &= ~newly
                     self._apply_mask()
-                    if self.delta_sink is not None:
-                        self._emit("mask", self.active.copy(),
-                                   self.support.copy())
-            if self.delta_sink is not None:
-                self._emit("support", self.support.copy())
+                    self._emit("mask", self.active.copy(),
+                               self.support.copy())
+            self._emit("support", self.support.copy())
         self.stats["arrivals"] += len(batch)
         self.stats["evictions"] += evicted
         self.stats["observe_batches"] += 1
@@ -300,9 +308,16 @@ class StreamingBank:
             refreshed = True
         return ObserveResult(len(batch), evicted, n_tomb, refreshed)
 
+    @property
+    def delta_seq(self) -> int:
+        """Sequence id of the most recently emitted delta (0 = none):
+        a replica whose ``last_seq`` equals this is fully caught up."""
+        return self._delta_seq
+
     def _emit(self, kind: str, *payload) -> None:
+        self._delta_seq += 1
         if self.delta_sink is not None:
-            self.delta_sink((kind,) + payload)
+            self.delta_sink((kind, self._delta_seq) + payload)
 
     def _compact_due(self) -> bool:
         """Automatic tombstone compaction trigger: the tombstoned-row
@@ -488,9 +503,8 @@ class StreamingBank:
         self._apply_mask()
         self._fresh[:] = False
         self._any_change = False
-        if self.delta_sink is not None:
-            self._emit("extend", dict(new), self.active.copy(),
-                       self.support.copy())
+        self._emit("extend", dict(new), self.active.copy(),
+                   self.support.copy())
         return self.frequent()
 
     def _refresh_full(
@@ -532,8 +546,7 @@ class StreamingBank:
             self.support, self.bank.support[:P].astype(np.int64)
         ), "full-refresh recount disagrees with mined supports"
         self._any_change = False
-        if self.delta_sink is not None:
-            self._emit("recompile", dict(mined), self.support.copy())
+        self._emit("recompile", dict(mined), self.support.copy())
         return self.frequent()
 
     # ----------------------------------------------------------- serving

@@ -406,15 +406,20 @@ def test_exact_rows_counts_queries():
 def test_row_mask_requires_quiescent_pipeline():
     """In-flight joins were launched against the pre-mask requirements
     and ticket-held rows escape the copy-on-write patch, so re-masking
-    with uncollected tickets must refuse."""
+    with uncollected tickets must refuse - with a typed error that
+    names the counts and survives ``python -O`` (serving.faults)."""
+    from repro.serving.faults import PipelineBusyError
+
     bank = _bank(39)
     queries = random_db(40, n_seq=3)
     cl = ServingCluster(bank, 2, bank_layout="flat")
     ticket = cl.submit(_spread(queries, 2))
     mask = np.ones(bank.n_patterns, bool)
     mask[0] = False
-    with pytest.raises(AssertionError):
+    with pytest.raises(PipelineBusyError) as exc:
         cl.set_row_mask(mask)
+    assert exc.value.tickets == 1
+    assert exc.value.queued + exc.value.inflight > 0
     cl.collect(ticket)
     cl.set_row_mask(mask)  # quiescent: fine
 

@@ -1,0 +1,538 @@
+"""Fault-tolerant cluster: chaos property suite (serving.faults).
+
+The failure model's contract, tested differentially against the
+single-host ``PatternServer`` oracle:
+
+* under ANY seeded fault schedule (delays, transient errors, at most
+  one concurrent host crash), every submitted query gets exactly one
+  answer that is either bit-equal to the single-host server or flagged
+  ``exact=False`` as a sound superset - never a silent wrong bit,
+  never a lost query;
+* a fault-free run with the injector installed but idle is
+  bit-identical to no injector at all (the fast path really is the
+  pre-fault path);
+* replica failover answers stay ``exact=True`` and bit-equal;
+* circuit-breaker open/half-open/close transitions are deterministic
+  under a fake clock;
+* a crashed replica recovers by replaying the writer's sequenced delta
+  log and rejoins only after verified bit-equal catch-up.
+"""
+import jax
+import numpy as np
+import pytest
+from conftest import random_db
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI shim (see hypothesis_compat)
+    from hypothesis_compat import given, settings, strategies as st
+
+from repro.mining.driver import AcceleratedMiner
+from repro.serving.bank import compile_bank
+from repro.serving.cluster import BankReplica, ReplicaGroup, ServingCluster
+from repro.serving.faults import (
+    FaultInjector,
+    HostDownError,
+    HostUnavailableError,
+    PipelineBusyError,
+    RecoveryLog,
+    RetryPolicy,
+)
+from repro.serving.server import PatternServer, prescreen_rows
+from repro.serving.streaming import StreamingBank
+
+MINSUP, MAX_LEN, W = 3, 3, 8
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compile_cache():
+    """This module mines ~a dozen distinct banks (each a fresh set of
+    XLA executables) on top of whatever the suite compiled before it;
+    keeping them all live for the rest of a full single-process run
+    pushes the CPU backend's compiler into segfault territory in later
+    modules.  Drop every cached executable once the chaos suite is
+    done - later modules recompile what they need."""
+    yield
+    jax.clear_caches()
+
+
+def _bank(seed, n_seq=10, sigma=2, max_len=MAX_LEN):
+    db = random_db(seed, n_seq=n_seq)
+    return compile_bank(
+        AcceleratedMiner(db).mine_rs(sigma, max_len=max_len))
+
+
+def _spread(queries, n_hosts):
+    reqs = {h: [] for h in range(n_hosts)}
+    for i, s in enumerate(queries):
+        reqs[i % n_hosts].append(s)
+    return reqs
+
+
+def _flat(results, n_hosts, n):
+    """Undo _spread: results back into query submission order."""
+    return [results[i % n_hosts][i // n_hosts] for i in range(n)]
+
+
+def _assert_sound(r, truth_row):
+    """The one-answer contract: exact rows are bit-equal, inexact rows
+    are flagged and a sound superset (no false negatives)."""
+    if r.exact:
+        np.testing.assert_array_equal(r.contained, truth_row)
+    else:
+        assert not (truth_row & ~r.contained).any(), \
+            "inexact answer dropped a true containment"
+
+
+# ------------------------------------------------------------- injector
+def test_injector_schedule_is_deterministic():
+    """No RNG at query time: two injectors with the same seed agree
+    call-for-call, different seeds differ somewhere."""
+    a = FaultInjector(7, error_rate=0.3, delay_rate=0.2)
+    b = FaultInjector(7, error_rate=0.3, delay_rate=0.2)
+    va = [a.decide(h, i) for h in range(4) for i in range(64)]
+    vb = [b.decide(h, i) for h in range(4) for i in range(64)]
+    assert va == vb
+    assert {"error", "delay", "ok"} == set(va)
+    c = FaultInjector(8, error_rate=0.3, delay_rate=0.2)
+    assert va != [c.decide(h, i) for h in range(4) for i in range(64)]
+
+
+def test_injector_blackout_window_on_fake_clock():
+    now = [0.0]
+    inj = FaultInjector(0, blackouts=[(1, 5.0, 10.0)],
+                        clock=lambda: now[0])
+    inj.on_call(1)            # t=0: before the window - fine
+    now[0] = 7.0
+    inj.on_call(0)            # other host unaffected
+    with pytest.raises(HostDownError):
+        inj.on_call(1)
+    now[0] = 10.0             # window is half-open [t0, t1)
+    inj.on_call(1)
+
+
+def test_recovery_log_ring():
+    log = RecoveryLog(capacity=2)
+    log.append(1, ("support", 1))
+    log.append(2, ("support", 2))
+    assert log.since(0) == [("support", 1), ("support", 2)]
+    log.append(3, ("support", 3))          # evicts seq 1
+    assert log.dropped_through == 1
+    assert log.since(0) is None            # gap: full resync required
+    assert log.since(1) == [("support", 2), ("support", 3)]
+    assert log.since(3) == []
+    with pytest.raises(AssertionError):
+        log.append(3, ("support", 3))      # seq must be monotone
+
+
+def test_pipeline_busy_error_is_typed_and_counted():
+    err = PipelineBusyError(queued=2, inflight=3, tickets=1)
+    assert isinstance(err, RuntimeError)
+    assert (err.queued, err.inflight, err.tickets) == (2, 3, 1)
+    assert "2 queued" in str(err) and "3 in-flight" in str(err)
+
+
+def test_prescreen_rows_matches_server_approx_rows():
+    """The router-side degraded answer is the same computation the
+    host's own shed tier runs - bit-identical, mask included."""
+    bank = _bank(3)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    queries = random_db(4, n_seq=6)
+    srv = PatternServer(bank, bank_layout="flat")
+    mask = np.ones(bank.n_patterns, bool)
+    mask[:: 2] = False
+    srv.set_row_mask(mask)
+    want = srv.approx_rows(queries)
+    got = prescreen_rows(queries, srv._req_np[: bank.n_patterns],
+                         bank.n_label_keys)
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------- idle-injector identity
+def test_idle_injector_is_bit_identical():
+    """Acceptance: fault-free runs with the injector installed but idle
+    (and the retry policy armed) are bit-identical to the pre-fault
+    cluster - route AND the async pipeline."""
+    bank = _bank(11)
+    queries = random_db(12, n_seq=8)
+    plain = ServingCluster(bank, 3, bank_layout="flat")
+    inj = FaultInjector(0)     # all rates zero, no blackouts
+    faulty = ServingCluster(bank, 3, bank_layout="flat",
+                            injector=inj,
+                            fault_policy=RetryPolicy())
+    want = plain.query_multi(_spread(queries, 3))
+    got = faulty.query_multi(_spread(queries, 3))
+    for hid in want:
+        for w, g in zip(want[hid], got[hid]):
+            np.testing.assert_array_equal(w.contained, g.contained)
+            assert w.topk == g.topk and g.exact
+    t1 = plain.submit(_spread(queries, 3))
+    t2 = faulty.submit(_spread(queries, 3))
+    r1, r2 = plain.collect(t1), faulty.collect(t2)
+    for hid in r1:
+        for w, g in zip(r1[hid], r2[hid]):
+            np.testing.assert_array_equal(w.contained, g.contained)
+            assert g.exact
+    snap = faulty.metrics.snapshot()
+    assert snap.get("cluster.faults.injected", 0) == 0
+    assert snap.get("cluster.faults.retries", 0) == 0
+    assert inj.calls  # the injector really sat on the call boundary
+
+
+# --------------------------------------------------------- retry ladder
+def test_transient_errors_retry_to_exact():
+    """Transient errors under an adequate retry budget stay invisible:
+    answers bit-equal to single-host, only the retry counters move."""
+    bank = _bank(21)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    queries = random_db(22, n_seq=8)
+    srv = PatternServer(bank, bank_layout="flat")
+    truth = srv.exact_rows(queries)
+    # seed 1's schedule errors within the first few calls on both
+    # hosts (deterministic - see FaultInjector.decide)
+    inj = FaultInjector(1, error_rate=0.25)
+    cl = ServingCluster(
+        bank, 2, bank_layout="flat", injector=inj,
+        fault_policy=RetryPolicy(retries=8, backoff_base=0.0,
+                                 breaker_threshold=10 ** 6),
+    )
+    got = _flat(cl.query_multi(_spread(queries, 2)), 2, len(queries))
+    for i, r in enumerate(got):
+        assert r.exact
+        np.testing.assert_array_equal(r.contained, truth[i])
+    snap = cl.metrics.snapshot()
+    assert snap["cluster.faults.injected"] > 0
+    assert snap["cluster.faults.retries"] > 0
+    assert snap["cluster.faults.degraded_answers"] == 0
+
+
+def test_call_timeout_discards_slow_result_and_retries():
+    """A call that overruns ``call_timeout`` on the injectable clock is
+    a fault: its result is discarded and the attempt retried - the
+    final answers stay exact and bit-equal."""
+    now = [0.0]
+    bank = _bank(25)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    queries = random_db(26, n_seq=6)
+    srv = PatternServer(bank, bank_layout="flat")
+    truth = srv.exact_rows(queries)
+    # delayed calls take 2s against a 1s budget -> HostTimeoutError;
+    # the injector's sleep drives the fake clock forward
+    inj = FaultInjector(
+        3, delay_rate=0.4, delay=2.0,
+        clock=lambda: now[0],
+        sleep=lambda s: now.__setitem__(0, now[0] + s),
+    )
+    cl = ServingCluster(
+        bank, 2, bank_layout="flat", injector=inj,
+        fault_policy=RetryPolicy(call_timeout=1.0, retries=8,
+                                 backoff_base=0.0,
+                                 breaker_threshold=10 ** 6),
+        clock=lambda: now[0],
+    )
+    got = _flat(cl.query_multi(_spread(queries, 2)), 2, len(queries))
+    for i, r in enumerate(got):
+        assert r.exact
+        np.testing.assert_array_equal(r.contained, truth[i])
+    snap = cl.metrics.snapshot()
+    assert snap["cluster.faults.injected"] > 0
+    assert snap["cluster.faults.retries"] > 0
+    assert snap["cluster.faults.retry_seconds.count"] > 0
+
+
+def test_crashed_host_degrades_to_flagged_superset():
+    """With one host blacked out and no replica, its column block is
+    answered from the prescreen: flagged ``exact=False``, sound
+    superset, breaker opens, service continues."""
+    now = [0.0]
+    bank = _bank(31)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    queries = random_db(32, n_seq=8)
+    srv = PatternServer(bank, bank_layout="flat")
+    truth = srv.exact_rows(queries)
+    inj = FaultInjector(0, blackouts=[(1, 0.0, 10 ** 9)],
+                        clock=lambda: now[0])
+    cl = ServingCluster(
+        bank, 3, bank_layout="flat", injector=inj,
+        fault_policy=RetryPolicy(retries=1, breaker_threshold=2),
+        clock=lambda: now[0],
+    )
+    got = _flat(cl.query_multi(_spread(queries, 3)), 3, len(queries))
+    for i, r in enumerate(got):
+        assert not r.exact
+        _assert_sound(r, truth[i])
+    snap = cl.metrics.snapshot()
+    assert snap["cluster.faults.degraded_answers"] > 0
+    assert snap["cluster.faults.breaker_open"] >= 1
+    assert snap["cluster.faults.failovers"] == 0
+    # the strict-exactness entry point must refuse, not degrade
+    with pytest.raises(HostUnavailableError):
+        cl.exact_rows(queries)
+
+
+def test_replica_failover_is_bit_equal():
+    """Acceptance: a registered read replica promotes for the crashed
+    host's shard - answers stay ``exact=True`` and bit-equal to
+    single-host."""
+    now = [0.0]
+    bank = _bank(41)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    queries = random_db(42, n_seq=8)
+    srv = PatternServer(bank, bank_layout="flat")
+    truth = srv.exact_rows(queries)
+    inj = FaultInjector(0, blackouts=[(0, 0.0, 10 ** 9)],
+                        clock=lambda: now[0])
+    cl = ServingCluster(
+        bank, 2, bank_layout="flat", injector=inj,
+        fault_policy=RetryPolicy(retries=0, breaker_threshold=1),
+        clock=lambda: now[0],
+    )
+    cl.attach_failover_replica(0, BankReplica(bank, bank_layout="flat"))
+    got = _flat(cl.query_multi(_spread(queries, 2)), 2, len(queries))
+    for i, r in enumerate(got):
+        assert r.exact
+        np.testing.assert_array_equal(r.contained, truth[i])
+    snap = cl.metrics.snapshot()
+    assert snap["cluster.faults.failovers"] > 0
+    assert snap["cluster.faults.degraded_answers"] == 0
+    # joined_rows keeps its exactness contract through the replica too
+    np.testing.assert_array_equal(cl.exact_rows(queries), truth)
+
+
+def test_breaker_transitions_deterministic_under_fake_clock():
+    """closed -> open (threshold consecutive failures) -> short-circuit
+    (no host calls while open) -> half-open probe after the cooldown ->
+    closed (recovery: caches wiped, counter bumped), all on a fake
+    clock."""
+    now = [0.0]
+    bank = _bank(51)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    qs = [random_db(52 + i, n_seq=4) for i in range(6)]
+    inj = FaultInjector(0, blackouts=[(1, 5.0, 10.0)],
+                        clock=lambda: now[0])
+    cl = ServingCluster(
+        bank, 2, bank_layout="flat", injector=inj,
+        fault_policy=RetryPolicy(retries=0, breaker_threshold=2,
+                                 breaker_cooldown=3.0),
+        clock=lambda: now[0],
+    )
+    snap = lambda: cl.metrics.snapshot()  # noqa: E731
+    # t=0: healthy - exact, caches filled
+    assert all(r.exact for r in cl.query(qs[0], host=1))
+    assert len(cl.hosts[1].l1) > 0
+    # t=6: inside the blackout - failure #1, degraded, breaker closed
+    now[0] = 6.0
+    assert not any(r.exact for r in cl.query(qs[1]))
+    assert snap()["cluster.faults.breaker_open"] == 0
+    # t=6.5: failure #2 hits the threshold - breaker opens
+    now[0] = 6.5
+    assert not any(r.exact for r in cl.query(qs[2]))
+    assert snap()["cluster.faults.breaker_open"] == 1
+    # t=7: open + cooldown not elapsed - short-circuit, NO host call
+    now[0] = 7.0
+    calls_before = inj.calls.get(1, 0)
+    assert not any(r.exact for r in cl.query(qs[3]))
+    assert inj.calls.get(1, 0) == calls_before
+    assert snap()["cluster.faults.breaker_open"] == 1
+    # t=15: cooldown elapsed AND blackout over - the half-open probe
+    # succeeds, host rejoins with wiped caches, recovery counted
+    now[0] = 15.0
+    assert all(r.exact for r in cl.query(qs[4]))
+    assert snap()["cluster.faults.recoveries"] == 1
+    # recovery wiped host 1's caches (qs[4] arrived on host 0, so its
+    # L1 stays empty afterwards; qs[0]'s entries from t=0 are gone)
+    assert len(cl.hosts[1].l1) == 0
+    # closed again: next drain is plain exact serving, no new faults
+    injected = snap()["cluster.faults.injected"]
+    assert all(r.exact for r in cl.query(qs[5]))
+    assert snap()["cluster.faults.injected"] == injected
+
+
+def test_breaker_reopen_on_failed_probe():
+    """A failing half-open probe re-opens the breaker immediately (one
+    probe, not a fresh retry budget)."""
+    now = [0.0]
+    bank = _bank(61)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    q = random_db(62, n_seq=4)
+    inj = FaultInjector(0, blackouts=[(1, 0.0, 100.0)],
+                        clock=lambda: now[0])
+    cl = ServingCluster(
+        bank, 2, bank_layout="flat", injector=inj,
+        fault_policy=RetryPolicy(retries=3, breaker_threshold=1,
+                                 breaker_cooldown=2.0),
+        clock=lambda: now[0],
+    )
+    cl.query(q)                       # opens at the first failure
+    assert cl.metrics.snapshot()["cluster.faults.breaker_open"] == 1
+    now[0] = 5.0                      # cooldown elapsed, still down
+    calls_before = inj.calls.get(1, 0)
+    cl.query(q)
+    # exactly ONE probe call despite retries=3, and the breaker re-opened
+    assert inj.calls.get(1, 0) == calls_before + 1
+    assert cl.metrics.snapshot()["cluster.faults.breaker_open"] == 2
+
+
+# ----------------------------------------------------- collect(timeout=)
+def test_collect_timeout_degrades_then_resolves_exactly():
+    """A deadline'd collect answers unresolved joins from the shed tier
+    (flagged supersets) instead of blocking; the joins stay in the
+    pipeline and a later collect resolves the same fingerprints
+    exactly."""
+    now = [0.0]
+    bank = _bank(71)
+    if not bank.n_patterns:
+        pytest.skip("empty bank")
+    queries = random_db(72, n_seq=6)
+    srv = PatternServer(bank, bank_layout="flat")
+    truth = srv.exact_rows(queries)
+    cl = ServingCluster(bank, 2, bank_layout="flat",
+                        clock=lambda: now[0])
+    t1 = cl.collect(cl.submit(_spread(queries, 2)), timeout=0.0)
+    got = _flat(t1, 2, len(queries))
+    for i, r in enumerate(got):
+        assert not r.exact
+        _assert_sound(r, truth[i])
+    # inexact answers were not cached, and the joins are still pending
+    assert all(len(h.l1) == 0 for h in cl.hosts)
+    assert cl.router.depth() > 0
+    # resubmitting piggybacks on the still-queued joins and a plain
+    # collect drains them exactly
+    t2 = cl.collect(cl.submit(_spread(queries, 2)))
+    got = _flat(t2, 2, len(queries))
+    for i, r in enumerate(got):
+        assert r.exact
+        np.testing.assert_array_equal(r.contained, truth[i])
+    assert cl.router.depth() == 0
+    assert cl.metrics.snapshot()["cluster.router.inflight_hits"] > 0
+
+
+# -------------------------------------------------------- chaos property
+@pytest.mark.slow
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_chaos_schedule_every_query_answered_soundly(seed):
+    """The chaos property: under a seeded schedule of delays, transient
+    errors and one host blackout, every submitted query gets exactly
+    one answer - bit-equal when ``exact``, flagged sound superset when
+    not - and no ticket is ever lost."""
+    import random as _random
+    rng = _random.Random(seed)
+    now = [0.0]
+    bank = _bank(seed % 40)
+    if not bank.n_patterns:
+        return
+    srv = PatternServer(bank, bank_layout="flat")
+    H = rng.choice([2, 3, 4])
+    crash_host = rng.randrange(H)
+    inj = FaultInjector(
+        seed,
+        error_rate=rng.choice([0.0, 0.05, 0.15]),
+        delay_rate=0.1,
+        delay=0.01,
+        blackouts=[(crash_host, 2.0, 6.0)],
+        clock=lambda: now[0],
+    )
+    cl = ServingCluster(
+        bank, H, bank_layout="flat", injector=inj,
+        fault_policy=RetryPolicy(retries=2, backoff_base=0.001,
+                                 breaker_threshold=3,
+                                 breaker_cooldown=1.5),
+        clock=lambda: now[0],
+        max_wait=0.5, flush_batch=4,
+    )
+    answered = 0
+    for round_i in range(8):
+        queries = random_db(seed % 40 + 1 + round_i,
+                            n_seq=rng.choice([2, 3, 4]))
+        truth = srv.exact_rows(queries)
+        reqs = _spread(queries, H)
+        ticket = cl.submit(reqs)
+        now[0] += rng.choice([0.1, 0.6, 1.2])
+        cl.poll()
+        res = cl.collect(ticket, timeout=1.0)
+        got = _flat(res, H, len(queries))
+        assert len(got) == len(queries)  # exactly one answer each
+        for i, r in enumerate(got):
+            _assert_sound(r, truth[i])
+        answered += len(got)
+    assert answered > 0
+    assert not cl.router._tickets      # no ticket lost or leaked
+
+
+# ----------------------------------------------------- replica recovery
+def test_replica_recovery_replays_delta_log_bit_equal():
+    """A crashed replica restarts by replaying the writer's sequenced
+    recovery log from its last applied seq; after verified catch-up its
+    supports/mask/patterns are bit-equal to the writer and the
+    recovery is counted."""
+    db = random_db(81, n_seq=W)
+    writer = StreamingBank.from_db(
+        db, minsup=MINSUP, window=W, max_len=MAX_LEN,
+        bank_layout="flat")
+    # the seed observe already emitted sequenced deltas (the counter
+    # advances with or without a sink attached)
+    seed_seq = writer.delta_seq
+    assert seed_seq > 0
+    grp = ReplicaGroup(writer, 2)
+    assert grp.replicas[0].last_seq == seed_seq
+    writer.observe(random_db(82, n_seq=3))
+    grp.sync()
+    assert grp.replicas[1].last_seq == writer.delta_seq > 0
+    grp.crash(1)
+    with pytest.raises(HostDownError):
+        grp.query([db[0]], replica=1)
+    with pytest.raises(HostDownError):
+        grp.sync(1)
+    # the writer keeps moving while replica 1 is dark; replica 0
+    # stays live throughout
+    writer.observe(random_db(83, n_seq=3))
+    writer.refresh()
+    grp.sync(0)
+    assert grp.lag(1) == 0             # its mailbox is gone, not full
+    seq_before = grp.replicas[1].last_seq
+    replayed = grp.restart(1)
+    assert replayed > 0                # caught up by replay, not resync
+    rep = grp.replicas[1]
+    assert rep.last_seq == writer.delta_seq > seq_before
+    assert rep.bank.patterns == writer.bank.patterns
+    np.testing.assert_array_equal(
+        rep.support, writer.support[: writer.bank.n_patterns])
+    assert grp.writer.metrics.snapshot()[
+        "cluster.faults.recoveries"] == 1
+    # and it serves again, identically on both replicas
+    grp.sync()
+    a = grp.query(db[:3], replica=0)
+    b = grp.query(db[:3], replica=1)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.contained, y.contained)
+        assert x.topk == y.topk
+
+
+def test_replica_recovery_full_resync_when_log_evicted():
+    """When the ring already evicted the replica's gap, restart falls
+    back to a full state transfer (never a corrupt partial replay)."""
+    db = random_db(91, n_seq=W)
+    writer = StreamingBank.from_db(
+        db, minsup=MINSUP, window=W, max_len=MAX_LEN,
+        bank_layout="flat")
+    grp = ReplicaGroup(writer, 1, log_capacity=1)
+    grp.crash(0)
+    writer.observe(random_db(92, n_seq=2))
+    writer.observe(random_db(93, n_seq=2))   # > capacity: ring evicted
+    assert grp.log.since(grp.replicas[0].last_seq) is None
+    replayed = grp.restart(0)
+    assert replayed == 0                      # full state transfer
+    rep = grp.replicas[0]
+    assert rep.last_seq == writer.delta_seq
+    assert rep.bank.patterns == writer.bank.patterns
+    np.testing.assert_array_equal(
+        rep.support, writer.support[: writer.bank.n_patterns])
+    grp.query(db[:2], replica=0)              # serving again
